@@ -1,0 +1,84 @@
+"""Kernel microbenchmarks: Pallas (interpret mode on this CPU container —
+correctness path) vs the jitted jnp reference. On-TPU numbers come from the
+same entry points with interpret=False; the roofline table covers expected
+TPU behaviour."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import oracle
+from repro.kernels import (cem_keys_op, knn_topk_op,
+                           logistic_newton_terms_op, segment_sums_op)
+from repro.kernels import ref
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # cem_keys: fused coarsen+pack vs 2-pass jnp
+    n, d = 1 << 16, 6
+    X = rng.normal(0, 2, (n, d)).astype(np.float32)
+    valid = rng.random(n) > 0.1
+    cuts = [sorted(rng.normal(0, 2, 4).tolist()) for _ in range(d)]
+    widths = [3] * d
+    sec, _ = timeit(lambda: cem_keys_op(jnp.asarray(X), cuts, widths,
+                                        jnp.asarray(valid)
+                                        )[0].block_until_ready())
+    emit("kernel_cem_keys_interp", sec, f"rows_per_s={n / sec:.0f}")
+    cp = np.full((d, 4), np.inf, np.float32)
+    for j, c in enumerate(cuts):
+        cp[j, :len(c)] = c
+    jref = jax.jit(lambda X, v: ref.cem_keys_ref(X, jnp.asarray(cp),
+                                                 [4] * d, widths, v))
+    sec, _ = timeit(lambda: jref(jnp.asarray(X), jnp.asarray(valid)
+                                 )[0].block_until_ready())
+    emit("kernel_cem_keys_jnp_ref", sec, f"rows_per_s={n / sec:.0f}")
+
+    # segment_stats
+    n, s = 1 << 15, 4
+    seg = np.sort(rng.integers(0, n // 8, n)).astype(np.int32)
+    vals = rng.normal(0, 1, (n, s)).astype(np.float32)
+    sec, _ = timeit(lambda: segment_sums_op(jnp.asarray(vals),
+                                            jnp.asarray(seg), n // 8
+                                            ).block_until_ready())
+    emit("kernel_segment_stats_interp", sec, f"rows_per_s={n / sec:.0f}")
+    jss = jax.jit(lambda v, i: jax.ops.segment_sum(v, i,
+                                                   num_segments=n // 8))
+    sec, _ = timeit(lambda: jss(jnp.asarray(vals), jnp.asarray(seg)
+                                ).block_until_ready())
+    emit("kernel_segment_stats_xla", sec, f"rows_per_s={n / sec:.0f}")
+
+    # knn_topk
+    nq = nc = 1 << 12
+    Q = rng.normal(0, 1, (nq, 4)).astype(np.float32)
+    cv = np.ones(nc, bool)
+    sec, _ = timeit(lambda: knn_topk_op(jnp.asarray(Q), jnp.asarray(Q),
+                                        jnp.asarray(cv), 4
+                                        )[0].block_until_ready())
+    emit("kernel_knn_topk_interp", sec, f"pairs_per_s={nq * nc / sec:.2e}")
+    jknn = jax.jit(lambda Q, cv: ref.knn_topk_ref(Q, Q, cv, 4))
+    sec, _ = timeit(lambda: jknn(jnp.asarray(Q), jnp.asarray(cv)
+                                 )[0].block_until_ready())
+    emit("kernel_knn_topk_jnp_ref", sec, f"pairs_per_s={nq * nc / sec:.2e}")
+
+    # logistic newton terms
+    n, d = 1 << 16, 9
+    X = rng.normal(0, 1, (n, d)).astype(np.float32)
+    t = (rng.random(n) < 0.4).astype(np.float32)
+    m = np.ones(n, np.float32)
+    w = rng.normal(0, 0.3, d).astype(np.float32)
+    sec, _ = timeit(lambda: logistic_newton_terms_op(
+        jnp.asarray(X), jnp.asarray(t), jnp.asarray(m), jnp.asarray(w)
+    )[0].block_until_ready())
+    emit("kernel_logistic_interp", sec, f"rows_per_s={n / sec:.0f}")
+    jlog = jax.jit(lambda X, t, m, w: ref.logistic_newton_terms_ref(
+        X, t, m, w))
+    sec, _ = timeit(lambda: jlog(jnp.asarray(X), jnp.asarray(t),
+                                 jnp.asarray(m), jnp.asarray(w)
+                                 )[0].block_until_ready())
+    emit("kernel_logistic_jnp_ref", sec, f"rows_per_s={n / sec:.0f}")
+
+
+if __name__ == "__main__":
+    main()

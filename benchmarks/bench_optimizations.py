@@ -1,0 +1,131 @@
+"""Paper Fig. 9(c)+(d): the §4 optimization suite.
+
+(c) CEM on the integrated table vs pushdown through the FK join (Prop. 2);
+(d) multi-treatment matching: naive per-treatment CEM vs covariate
+    factoring (Alg. 1) vs data-cube rollups vs the offline-prepared
+    database (Alg. 2) answering online.
+"""
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import (CoarsenSpec, cem, cem_join_pushdown, covariate_factoring,
+                        cube, estimate_ate, mcem, prepare)
+from repro.data import flightgen
+from repro.data.columnar import Table, compact
+from repro.data.join import fk_join
+
+RANGES = {"w_precipm": (0, 3), "w_wspdm": (0, 80), "w_hum": (0, 100),
+          "w_tempm": (-20, 40)}
+CO = {"thunder": ["w_precipm", "w_wspdm"], "lowvis": ["w_precipm", "w_hum"],
+      "highwind": ["w_precipm", "w_tempm"], "snow": ["w_tempm", "w_wspdm"],
+      "lowpressure": ["w_precipm", "w_wspdm", "w_tempm"]}
+BASE = {"airport": CoarsenSpec.categorical(16),
+        "carrier": CoarsenSpec.categorical(16),
+        "traffic": CoarsenSpec.equal_width(0, 40, 8),
+        "w_season": CoarsenSpec.equal_width(0, 1, 4)}
+
+
+def specs_for(t):
+    s = dict(BASE)
+    for n in CO[t]:
+        lo, hi = RANGES[n]
+        s[n] = CoarsenSpec.equal_width(lo, hi, 5)
+    return s
+
+
+def all_specs():
+    s = dict(BASE)
+    for t in CO:
+        s.update(specs_for(t))
+    return s
+
+
+def main(n_flights=200_000):
+    data = flightgen.generate(n_flights=n_flights, n_airports=8, seed=2)
+    joined = data.integrated
+
+    # ---- Fig 9(c): pushdown -------------------------------------------------
+    dim_specs = {"season": CoarsenSpec.equal_width(0, 1, 4),
+                 "precipm": CoarsenSpec.equal_width(0, 3, 5),
+                 "wspdm": CoarsenSpec.equal_width(0, 80, 5)}
+    fact_specs = {"airport": CoarsenSpec.categorical(16),
+                  "carrier": CoarsenSpec.categorical(16),
+                  "traffic": CoarsenSpec.equal_width(0, 40, 8)}
+    on = {"airport": 64, "hour": 1 << 17}
+
+    def integrated_path():
+        j = fk_join(data.flights, data.weather, on=on, prefix="w_")
+        specs = dict(fact_specs)
+        specs.update({"w_" + k: v for k, v in dim_specs.items()})
+        return estimate_ate(cem(j, "thunder", "dep_delay", specs
+                                ).groups).ate.block_until_ready()
+
+    def pushdown_path():
+        pd = cem_join_pushdown(data.weather, dim_specs, data.flights,
+                               fact_specs, on=on, treatment="thunder",
+                               outcome="dep_delay", prefix="w_")
+        return estimate_ate(pd.result.groups).ate.block_until_ready()
+
+    sec_i, _ = timeit(integrated_path, iters=3)
+    sec_p, _ = timeit(pushdown_path, iters=3)
+    emit("fig9c_cem_integrated", sec_i, f"rows={joined.nrows}")
+    emit("fig9c_cem_pushdown", sec_p, f"speedup={sec_i / sec_p:.2f}x")
+
+    # ---- Fig 9(d): multi-treatment ------------------------------------------
+    treatments = list(CO)
+
+    def naive_all():
+        for t in treatments:
+            estimate_ate(cem(joined, t, "dep_delay", specs_for(t)
+                             ).groups).ate.block_until_ready()
+
+    sec_naive, _ = timeit(naive_all, iters=2)
+    emit("fig9d_naive_all_treatments", sec_naive,
+         f"n_treatments={len(treatments)}")
+
+    def factored_all():
+        # group weather treatments (they share BASE covariates), factor once
+        view = covariate_factoring(joined, treatments, all_specs(),
+                                   shared=sorted(BASE))
+        small = compact(view.table)
+        sview = covariate_factoring(small, treatments, all_specs(),
+                                    shared=sorted(BASE))
+        for t in treatments:
+            estimate_ate(mcem(sview, t, "dep_delay", specs_for(t)
+                              ).groups).ate.block_until_ready()
+
+    sec_f, _ = timeit(factored_all, iters=2)
+    emit("fig9d_factored_all", sec_f, f"speedup={sec_naive / sec_f:.2f}x")
+
+    def cube_all():
+        cub = cube.build_cuboid(joined, all_specs(), treatments, "dep_delay")
+        cub = cube.compact_cuboid(cub)
+        for t in treatments:
+            rolled = cube.rollup(cub, sorted(specs_for(t)))
+            estimate_ate(cube.cem_groups_from_cuboid(rolled, t)
+                         ).ate.block_until_ready()
+
+    sec_c, _ = timeit(cube_all, iters=2)
+    emit("fig9d_cube_all", sec_c, f"speedup={sec_naive / sec_c:.2f}x")
+
+    # prepared database: offline cost once, online cost per query
+    t0 = time.perf_counter()
+    db = prepare(joined, {t: sorted(specs_for(t)) for t in CO}, all_specs(),
+                 outcome="dep_delay", query_dims=("airport",))
+    prep_s = time.perf_counter() - t0
+
+    def online_all():
+        for t in treatments:
+            db.ate(t).ate.block_until_ready()
+
+    sec_o, _ = timeit(online_all, iters=3)
+    emit("fig9d_prepare_offline", prep_s, "amortized")
+    emit("fig9d_prepared_online_all", sec_o,
+         f"speedup={sec_naive / sec_o:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

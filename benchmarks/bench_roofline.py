@@ -1,0 +1,49 @@
+"""Roofline table from the dry-run artifact (results/dryrun.json).
+
+The dry-run needs 512 host devices and must own jax initialization, so it
+runs as its own process (python -m repro.launch.dryrun --all --mesh both
+--out results/dryrun.json); this benchmark formats its output and emits
+summary CSV rows. Skips gracefully if the artifact is missing.
+"""
+import json
+import os
+
+from benchmarks.common import emit
+
+ARTIFACT = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
+
+
+def main():
+    if not os.path.exists(ARTIFACT):
+        emit("roofline_skipped", 0.0, f"missing {ARTIFACT}; run "
+             "`python -m repro.launch.dryrun --all --mesh both --out "
+             f"{ARTIFACT}` first")
+        return
+    with open(ARTIFACT) as f:
+        rows = json.load(f)
+    ok = [r for r in rows if r.get("ok")]
+    fail = [r for r in rows if not r.get("ok")]
+    emit("roofline_cells_ok", 0.0, f"{len(ok)}/{len(rows)}")
+    for r in fail:
+        emit(f"roofline_FAIL_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+             r.get("error", "?"))
+    for r in ok:
+        rl = r.get("roofline")
+        if not rl:
+            continue
+        dom = rl["bottleneck"]
+        t_dom = rl[f"t_{dom}_s"] if f"t_{dom}_s" in rl else \
+            rl.get("t_" + dom + "_s", 0)
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             max(rl.get("t_compute_s", 0), rl.get("t_memory_s", 0),
+                 rl.get("t_collective_s", 0)),
+             f"bottleneck={dom};"
+             f"tc={rl.get('t_compute_s', 0):.4f};"
+             f"tm={rl.get('t_memory_s', 0):.4f};"
+             f"tx={rl.get('t_collective_s', 0):.4f};"
+             f"useful={rl.get('useful_ratio', 0):.3f};"
+             f"mem_gib={r['memory']['total_nonaliased'] / 2**30:.2f}")
+
+
+if __name__ == "__main__":
+    main()

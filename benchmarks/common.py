@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+import time
+
+import numpy as np
+
+
+def timeit(fn, *args, warmup=1, iters=3, block=None):
+    for _ in range(warmup):
+        out = fn(*args)
+        _block(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def _block(out):
+    import jax
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

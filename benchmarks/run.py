@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
+  bench_e2e            Fig. 8 (a,b,c): end-to-end CEM, AWMD, ATE vs truth
+  bench_quality        Table 3: method-by-method sizes + AWMD (vs oracle)
+  bench_scalability    Fig. 9 (a,b): NNM + CEM/EM/subclass scaling
+  bench_optimizations  Fig. 9 (c,d): pushdown, factoring, cube, prepared DB
+  bench_kernels        (ours) Pallas kernels vs jnp references
+  bench_roofline       (ours) dry-run roofline table, from results/dryrun.json
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_e2e, bench_kernels, bench_optimizations,
+                            bench_quality, bench_roofline,
+                            bench_scalability)
+    print("name,us_per_call,derived")
+    suites = [
+        ("bench_e2e", bench_e2e.main),
+        ("bench_quality", bench_quality.main),
+        ("bench_scalability", bench_scalability.main),
+        ("bench_optimizations", bench_optimizations.main),
+        ("bench_kernels", bench_kernels.main),
+        ("bench_roofline", bench_roofline.main),
+    ]
+    failures = 0
+    for name, fn in suites:
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"{name}_total,{(time.perf_counter() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}_total,0,FAILED:{type(e).__name__}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import (AsyncSaver, latest_step, restore, save)
+
+__all__ = ["AsyncSaver", "latest_step", "restore", "save"]

@@ -1,0 +1,5 @@
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, applicable_shapes
+from repro.configs.registry import REGISTRY, get_config
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeSpec", "applicable_shapes",
+           "REGISTRY", "get_config"]

@@ -1,0 +1,11 @@
+"""[moe] arctic-480b: 35L d=7168 56H GQA kv=8, 128 experts top-2 +
+dense residual (d_ff=4864), vocab 32000 [hf:Snowflake/snowflake-arctic-base].
+bf16 params + int8 Adam states so the optimizer fits one pod (DESIGN.md)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe", n_layers=35, d_model=7168,
+    n_heads=56, n_kv_heads=8, head_dim=128, d_ff=4864, vocab_size=32000,
+    attn_type="gqa", n_experts=128, moe_top_k=2, moe_d_ff=4864,
+    dense_residual=True, param_dtype="bfloat16", optimizer="adamw_int8",
+    grad_accum_dtype="bfloat16")

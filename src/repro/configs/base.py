@@ -1,0 +1,148 @@
+"""Model configuration schema for the assigned architecture pool."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str              # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0        # 0 -> d_model // n_heads
+
+    # attention
+    attn_type: str = "gqa"   # gqa | mla | none
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    rope_type: str = "standard"      # standard | mrope
+    mrope_sections: Tuple[int, ...] = ()   # head_dim/2 split for t/h/w
+
+    # MLA (deepseek)
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    dense_residual: bool = False     # arctic: dense FFN parallel to MoE
+    first_dense_layers: int = 0      # deepseek: leading dense layers
+    first_dense_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_dispatch: str = "gather"     # gather (optimized) | scatter (naive
+                                     # baseline, kept for §Perf ablation)
+
+    # SSM
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_heads: int = 0               # mamba2 heads
+    ssm_variant: str = ""            # mamba1 | mamba2
+
+    # hybrid (zamba2)
+    hybrid_attn_every: int = 0       # shared attn block after every k ssm blocks
+
+    # encoder-decoder (seamless)
+    n_encoder_layers: int = 0
+
+    # numerics / memory policy
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"          # activation/compute dtype
+    param_dtype: str = "float32"
+    tie_embeddings: bool = False
+    remat: bool = True
+    optimizer: str = "adamw"         # adamw | adamw_int8
+    grad_accum_dtype: str = "float32"  # bfloat16 for memory-starved giants
+    seq_parallel: bool = True        # Megatron-style sequence parallelism;
+                                     # measured regression on hybrid-SSM and
+                                     # tiny models -> per-arch opt-out
+
+    # capability flags for the shape grid
+    supports_decode: bool = True
+    subquadratic: bool = False       # eligible for long_500k
+    modality_frontend: str = ""      # "" | audio | vision (stubbed)
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        def shrink(v, lo, div):
+            return max(lo, v // div) if v else 0
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 4 if self.hybrid_attn_every == 0
+                         else 2 * self.hybrid_attn_every + 1),
+            n_encoder_layers=min(self.n_encoder_layers, 2),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(max(1, self.n_kv_heads // max(1, self.n_heads // 4)),
+                           4),
+            head_dim=32,
+            d_ff=256,
+            first_dense_d_ff=256 if self.first_dense_layers else 0,
+            vocab_size=512,
+            kv_lora_rank=32 if self.kv_lora_rank else 0,
+            qk_rope_dim=16 if self.qk_rope_dim else 0,
+            qk_nope_dim=16 if self.qk_nope_dim else 0,
+            v_head_dim=32 if self.v_head_dim else 0,
+            n_experts=min(self.n_experts, 8),
+            n_shared_experts=min(self.n_shared_experts, 1),
+            moe_top_k=min(self.moe_top_k, 2),
+            moe_d_ff=64 if self.moe_d_ff else 0,
+            ssm_state=min(self.ssm_state, 8),
+            ssm_heads=min(self.ssm_heads, 4) if self.ssm_heads else 0,
+            mrope_sections=(4, 6, 6) if self.mrope_sections else (),
+            moe_capacity_factor=16.0,  # dropless at smoke scale: prefill ==
+                                       # decode token-for-token
+            param_dtype="float32",
+            dtype="float32",
+            remat=False,
+        )
+
+
+# ---- shapes grid (assigned) -------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig):
+    """The (arch x shape) grid rules from the assignment: long_500k only for
+    sub-quadratic archs; decode only for archs with a decode step."""
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.subquadratic:
+            continue
+        if s.kind == "decode" and not cfg.supports_decode:
+            continue
+        out.append(s)
+    return out

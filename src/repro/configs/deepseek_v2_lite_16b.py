@@ -1,0 +1,13 @@
+"""[moe] deepseek-v2-lite-16b: 27L d=2048 16H, MLA kv_lora=512,
+2 shared + 64 routed experts top-6, moe_d_ff=1408, layer0 dense
+[arXiv:2405.04434; hf]. NOTE: the assignment line also says "160 routed"
+(the full V2 number); the Lite checkpoint has 64 — see DESIGN.md."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b", family="moe", n_layers=27, d_model=2048,
+    n_heads=16, n_kv_heads=16, head_dim=128, d_ff=10944, vocab_size=102400,
+    attn_type="mla", kv_lora_rank=512, qk_rope_dim=64, qk_nope_dim=128,
+    v_head_dim=128, n_experts=64, n_shared_experts=2, moe_top_k=6,
+    moe_d_ff=1408, first_dense_layers=1, first_dense_d_ff=10944,
+    rope_theta=1e4)

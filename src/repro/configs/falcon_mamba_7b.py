@@ -1,0 +1,9 @@
+"""[ssm] falcon-mamba-7b: 64L d_model=4096 attn-free, vocab 65024,
+ssm_state=16 — Mamba1 arch [arXiv:2410.05355]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm", n_layers=64, d_model=4096,
+    n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0, vocab_size=65024,
+    attn_type="none", ssm_state=16, ssm_variant="mamba1", ssm_expand=2,
+    supports_decode=True, subquadratic=True)

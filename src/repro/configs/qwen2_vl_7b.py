@@ -1,0 +1,11 @@
+"""[vlm] qwen2-vl-7b: qwen2-7b backbone + M-RoPE (t/h/w sections
+16/24/24 over head_dim/2) [arXiv:2409.12191]. Vision frontend STUBBED:
+input_specs() provides patch embeddings + 3-D positions."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm", n_layers=28, d_model=3584,
+    n_heads=28, n_kv_heads=4, head_dim=128, d_ff=18944, vocab_size=152064,
+    attn_type="gqa", qkv_bias=True, rope_type="mrope",
+    mrope_sections=(16, 24, 24), rope_theta=1e6,
+    modality_frontend="vision")

@@ -1,0 +1,9 @@
+"""[dense] qwen3-1.7b: 28L d=2048 16H GQA kv=8 d_ff=6144 vocab=151936,
+qk_norm [hf:Qwen/Qwen3-8B family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b", family="dense", n_layers=28, d_model=2048,
+    n_heads=16, n_kv_heads=8, head_dim=128, d_ff=6144, vocab_size=151936,
+    attn_type="gqa", qk_norm=True, rope_theta=1e6,
+    seq_parallel=False)  # tiny model: seq-par overhead beats its win

@@ -1,0 +1,8 @@
+"""[dense] qwen3-4b: 36L d=2560 32H GQA kv=8 d_ff=9728 vocab=151936,
+qk_norm [hf:Qwen/Qwen3-8B family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b", family="dense", n_layers=36, d_model=2560,
+    n_heads=32, n_kv_heads=8, head_dim=128, d_ff=9728, vocab_size=151936,
+    attn_type="gqa", qk_norm=True, rope_theta=1e6)

@@ -1,0 +1,28 @@
+"""Assigned architecture pool: one module per arch (configs/<id>.py),
+aggregated here. Known spec discrepancies are documented in DESIGN.md
+§Arch-applicability."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.configs.falcon_mamba_7b import CONFIG as FALCON_MAMBA_7B
+from repro.configs.deepseek_v2_lite_16b import CONFIG as DEEPSEEK_V2_LITE
+from repro.configs.arctic_480b import CONFIG as ARCTIC_480B
+from repro.configs.seamless_m4t_large_v2 import CONFIG as SEAMLESS_M4T_LARGE_V2
+from repro.configs.qwen3_1_7b import CONFIG as QWEN3_1_7B
+from repro.configs.qwen2_7b import CONFIG as QWEN2_7B
+from repro.configs.qwen3_4b import CONFIG as QWEN3_4B
+from repro.configs.mistral_nemo_12b import CONFIG as MISTRAL_NEMO_12B
+from repro.configs.zamba2_7b import CONFIG as ZAMBA2_7B
+from repro.configs.qwen2_vl_7b import CONFIG as QWEN2_VL_7B
+
+REGISTRY = {c.name: c for c in [
+    FALCON_MAMBA_7B, DEEPSEEK_V2_LITE, ARCTIC_480B, SEAMLESS_M4T_LARGE_V2,
+    QWEN3_1_7B, QWEN2_7B, QWEN3_4B, MISTRAL_NEMO_12B, ZAMBA2_7B,
+    QWEN2_VL_7B,
+]}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]

@@ -1,0 +1,11 @@
+"""[audio] seamless-m4t-large-v2: enc-dec 24L d=1024 16H d_ff=8192,
+vocab 256206 [arXiv:2308.11596]. Audio frontend STUBBED: input_specs()
+provides precomputed frame embeddings."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="encdec", n_layers=24,
+    n_encoder_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    head_dim=64, d_ff=8192, vocab_size=256208,  # 256206 padded +2 so vocab % TP(16) == 0
+    attn_type="gqa",
+    modality_frontend="audio")

@@ -1,0 +1,13 @@
+"""[hybrid] zamba2-7b: 81 Mamba2 blocks (state 64) + shared attention
+block applied every 6 layers (32H kv=32, d_ff=14336), vocab 32000
+[arXiv:2411.15242]. Layout: 13 x (6 mamba + shared attn) + 3 tail mamba;
+the shared block reuses ONE parameter set (per-application LoRA deltas of
+the released model are omitted — DESIGN.md)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid", n_layers=81, d_model=3584,
+    n_heads=32, n_kv_heads=32, head_dim=112, d_ff=14336, vocab_size=32000,
+    attn_type="gqa", ssm_state=64, ssm_variant="mamba2", ssm_expand=2,
+    ssm_heads=112, hybrid_attn_every=6, subquadratic=True,
+    seq_parallel=False)  # measured 0.79x regression with seq-par (EXPERIMENTS §Perf)

@@ -1,0 +1,39 @@
+# ZaliQL's contribution as a composable JAX module: matching and
+# subclassification methods for causal inference (NRCM), re-expressed as
+# static-shape masked dataflow for TPU, plus the paper's optimization suite
+# (pushdown, covariate factoring, data-cube, offline preparation).
+from repro.core.coarsen import CoarsenSpec, coarsen, coarsen_columns
+from repro.core.keys import KeyCodec
+from repro.core import groupby
+from repro.core.cem import (CEMGroups, CEMResult, cem, cem_from_keys,
+                            exact_matching, make_codec, pack_keys)
+from repro.core.ate import (ATEEstimate, cem_weights, difference_in_means,
+                            estimate_ate)
+from repro.core.balance import awmd, raw_imbalance
+from repro.core.propensity import (LogisticModel, fit_logistic, predict_ps,
+                                   propensity_scores)
+from repro.core.subclassification import SubclassResult, ntile, subclassify
+from repro.core.matching import (MatchResult, greedy_nnmnr, knn_quadratic,
+                                 knn_sorted_1d, nnmnr, nnmwr, nnmwr_att)
+from repro.core.distance import (features, mahalanobis_transform,
+                                 masked_covariance, pairwise_sqdist,
+                                 ps_distance_features)
+from repro.core.factoring import (FactoredView, covariate_factoring, mcem,
+                                  partition_treatments, phi_coefficient,
+                                  phi_matrix)
+from repro.core import cube
+from repro.core.pushdown import (PushdownResult, cem_join_pushdown,
+                                 cem_overlap_filter)
+from repro.core.prepare import PreparedDatabase, prepare
+
+__all__ = [
+    "CoarsenSpec", "coarsen", "coarsen_columns", "KeyCodec", "groupby",
+    "CEMGroups", "CEMResult", "cem", "cem_from_keys", "exact_matching",
+    "make_codec", "pack_keys", "ATEEstimate", "cem_weights",
+    "difference_in_means", "estimate_ate", "awmd", "raw_imbalance",
+    "LogisticModel", "fit_logistic", "predict_ps", "propensity_scores",
+    "SubclassResult", "ntile", "subclassify", "MatchResult", "greedy_nnmnr",
+    "knn_quadratic", "knn_sorted_1d", "nnmnr", "nnmwr", "nnmwr_att",
+    "features", "mahalanobis_transform", "masked_covariance",
+    "pairwise_sqdist", "ps_distance_features",
+]

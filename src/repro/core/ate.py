@@ -1,0 +1,100 @@
+"""Average-treatment-effect estimation (paper Eq. 1 / Eq. 4).
+
+Given balanced groups b (CEM subclasses or propensity subclasses),
+
+  tau_ATE = E_b[ E[Y|T=1, b] - E[Y|T=0, b] ]        (Eq. 4)
+
+weighted by group probability n_b / N over the matched subset. We also
+provide ATT weighting (treated-count weights — the standard CEM estimand)
+and a per-unit weight vector ("cem weights") so any downstream weighted
+estimator (e.g. weighted least squares) can consume the match.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core import groupby
+from repro.core.cem import CEMGroups
+
+
+@dataclasses.dataclass(frozen=True)
+class ATEEstimate:
+    ate: jnp.ndarray          # Eq. 4, group-probability weights
+    att: jnp.ndarray          # treated-weighted
+    n_matched_treated: jnp.ndarray
+    n_matched_control: jnp.ndarray
+    n_groups: jnp.ndarray
+    variance: jnp.ndarray     # conservative within-group variance of ATE
+
+
+def _group_means(groups: CEMGroups):
+    nt = jnp.where(groups.keep, groups.n_treated, 0.0)
+    nc = jnp.where(groups.keep, groups.n_control, 0.0)
+    mean_t = jnp.where(nt > 0, groups.sum_y_t / jnp.maximum(nt, 1e-9), 0.0)
+    mean_c = jnp.where(nc > 0, groups.sum_y_c / jnp.maximum(nc, 1e-9), 0.0)
+    return nt, nc, mean_t, mean_c
+
+
+def estimate_ate(groups: CEMGroups,
+                 y: jnp.ndarray = None, treatment: jnp.ndarray = None,
+                 matched_valid: jnp.ndarray = None) -> ATEEstimate:
+    """ATE/ATT from group stats. If (y, treatment, matched_valid) are given,
+    a within-group variance estimate is included (else 0)."""
+    nt, nc, mean_t, mean_c = _group_means(groups)
+    diff = mean_t - mean_c
+    n_b = nt + nc
+    n_tot = jnp.maximum(jnp.sum(n_b), 1e-9)
+    ate = jnp.sum(jnp.where(groups.keep, n_b * diff, 0.0)) / n_tot
+    t_tot = jnp.maximum(jnp.sum(nt), 1e-9)
+    att = jnp.sum(jnp.where(groups.keep, nt * diff, 0.0)) / t_tot
+
+    var = jnp.float32(0.0)
+    if y is not None:
+        g = groups.grouping
+        w = matched_valid.astype(jnp.float32)
+        t = treatment.astype(jnp.float32) * w
+        c = (1.0 - treatment.astype(jnp.float32)) * w
+        yf = y.astype(jnp.float32)
+        sums = groupby.segment_sums(g, {"yy_t": t * yf * yf,
+                                        "yy_c": c * yf * yf})
+        # within-arm variance per group, Neyman-style
+        var_t = sums["yy_t"] / jnp.maximum(nt, 1e-9) - mean_t ** 2
+        var_c = sums["yy_c"] / jnp.maximum(nc, 1e-9) - mean_c ** 2
+        se2_b = (var_t / jnp.maximum(nt, 1.0) + var_c / jnp.maximum(nc, 1.0))
+        var = jnp.sum(jnp.where(groups.keep, (n_b / n_tot) ** 2 * se2_b, 0.0))
+
+    return ATEEstimate(ate=ate, att=att,
+                       n_matched_treated=jnp.sum(nt),
+                       n_matched_control=jnp.sum(nc),
+                       n_groups=jnp.sum(groups.keep.astype(jnp.int32)),
+                       variance=var)
+
+
+def cem_weights(groups: CEMGroups, treatment: jnp.ndarray,
+                matched_valid: jnp.ndarray) -> jnp.ndarray:
+    """Per-unit CEM weights (Iacus-King-Porro): treated units weight 1;
+    control units in group b weight (n_t_b / n_c_b) * (N_c / N_t)."""
+    g = groups.grouping
+    nt_rows = groupby.broadcast_to_rows(g, groups.n_treated)
+    nc_rows = groupby.broadcast_to_rows(g, groups.n_control)
+    Nt, Nc = groups.matched_counts()
+    t = treatment.astype(jnp.float32)
+    w_control = (nt_rows / jnp.maximum(nc_rows, 1e-9)) * (Nc / jnp.maximum(Nt, 1e-9))
+    w = jnp.where(t > 0, 1.0, w_control)
+    return jnp.where(matched_valid, w, 0.0)
+
+
+def difference_in_means(y: jnp.ndarray, treatment: jnp.ndarray,
+                        valid: jnp.ndarray) -> jnp.ndarray:
+    """Naive (confounded) estimator E[Y|T=1] - E[Y|T=0] — Eq. 2 applied
+    without balancing; the paper's cautionary baseline."""
+    w = valid.astype(jnp.float32)
+    t = treatment.astype(jnp.float32) * w
+    c = (1.0 - treatment.astype(jnp.float32)) * w
+    yf = y.astype(jnp.float32)
+    mean_t = jnp.sum(t * yf) / jnp.maximum(jnp.sum(t), 1e-9)
+    mean_c = jnp.sum(c * yf) / jnp.maximum(jnp.sum(c), 1e-9)
+    return mean_t - mean_c

@@ -1,0 +1,169 @@
+"""Data-cube aggregation for CEM over many treatments (paper §4.2).
+
+CEM for one treatment is a GROUP BY over its covariates. CEM for all
+2^|X| conjunctive treatments is the group-by *lattice* — so the classic
+cube optimizations apply: materialize a base cuboid once, and compute every
+coarser group-by from its smallest materialized ancestor instead of the
+base relation.
+
+A :class:`Cuboid` is a group-stat table: packed keys + decomposable
+aggregates (counts/sums per treatment arm). Everything CEM/ATE need is
+decomposable (min/max/sum/count), so rollups are exact. The same stat-table
+shape is what `repro.core.distributed` all-gathers across chips — the cube
+and the distributed combine are literally one mechanism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import groupby
+from repro.core.ate import ATEEstimate
+from repro.core.cem import CEMGroups, make_codec
+from repro.core.coarsen import CoarsenSpec, coarsen_columns
+from repro.core.keys import KeyCodec
+from repro.data.columnar import Table, _round_capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class Cuboid:
+    """Group-stat table over a set of dims (coarsened covariates).
+
+    stats: per-group decomposable sums:
+      "one"  -> n rows, "y" -> sum outcome, and per treatment t:
+      f"t_{t}" -> n treated, f"yt_{t}" -> sum outcome over treated.
+    """
+
+    codec: KeyCodec
+    key_hi: jnp.ndarray
+    key_lo: jnp.ndarray
+    stats: Dict[str, jnp.ndarray]
+    group_valid: jnp.ndarray
+    treatments: Tuple[str, ...]
+
+    @property
+    def capacity(self) -> int:
+        return int(self.key_hi.shape[0])
+
+    @property
+    def dims(self) -> Tuple[str, ...]:
+        return self.codec.names
+
+    def n_groups(self) -> jnp.ndarray:
+        return jnp.sum(self.group_valid.astype(jnp.int32))
+
+
+def build_cuboid(table: Table, specs: Mapping[str, CoarsenSpec],
+                 treatments: Sequence[str], outcome: str) -> Cuboid:
+    """Base cuboid: group the relation by ALL dims, store decomposable stats."""
+    codec = make_codec(specs)
+    buckets = coarsen_columns(table.columns, specs)
+    hi, lo = codec.pack(buckets, table.valid)
+    g = groupby.group_by_key(hi, lo)
+    w = table.valid.astype(jnp.float32)
+    y = table[outcome].astype(jnp.float32)
+    cols = {"one": w, "y": w * y}
+    for t in treatments:
+        tv = table[t].astype(jnp.float32) * w
+        cols[f"t_{t}"] = tv
+        cols[f"yt_{t}"] = tv * y
+    sums = groupby.segment_sums(g, cols)
+    return Cuboid(codec=codec, key_hi=g.group_hi, key_lo=g.group_lo,
+                  stats=sums, group_valid=g.group_valid,
+                  treatments=tuple(treatments))
+
+
+def rollup(cuboid: Cuboid, dims: Sequence[str]) -> Cuboid:
+    """Coarser cuboid over a subset of dims, computed from ``cuboid`` (not
+    the base relation). Cost scales with cuboid capacity, not data size."""
+    missing = set(dims) - set(cuboid.dims)
+    if missing:
+        raise ValueError(f"dims {missing} not in cuboid {cuboid.dims}")
+    sub, shi, slo = cuboid.codec.rollup(cuboid.key_hi, cuboid.key_lo, dims,
+                                        cuboid.group_valid)
+    g = groupby.group_by_key(shi, slo)
+    sums = groupby.segment_sums(g, cuboid.stats)
+    return Cuboid(codec=sub, key_hi=g.group_hi, key_lo=g.group_lo,
+                  stats=sums, group_valid=g.group_valid,
+                  treatments=cuboid.treatments)
+
+
+def compact_cuboid(cuboid: Cuboid, granule: int = 1024) -> Cuboid:
+    """Host-side shrink to ~n_groups rows (materialization for reuse)."""
+    gv = np.asarray(cuboid.group_valid)
+    idx = np.nonzero(gv)[0]
+    cap = _round_capacity(len(idx), granule)
+    pad = cap - len(idx)
+
+    def take(a, fill=0):
+        out = np.asarray(a)[idx]
+        return np.pad(out, [(0, pad)] + [(0, 0)] * (out.ndim - 1),
+                      constant_values=fill)
+
+    return Cuboid(
+        codec=cuboid.codec,
+        key_hi=jnp.asarray(take(cuboid.key_hi, fill=np.uint32(0xFFFFFFFF))),
+        key_lo=jnp.asarray(take(cuboid.key_lo, fill=np.uint32(0xFFFFFFFF))),
+        stats={k: jnp.asarray(take(v)) for k, v in cuboid.stats.items()},
+        group_valid=jnp.asarray(np.pad(np.ones(len(idx), bool), (0, pad))),
+        treatments=cuboid.treatments)
+
+
+def cem_groups_from_cuboid(cuboid: Cuboid, treatment: str) -> CEMGroups:
+    """CEM group stats for one treatment straight from a cuboid whose dims
+    are exactly that treatment's covariates (use :func:`rollup` first)."""
+    nt = cuboid.stats[f"t_{treatment}"]
+    n = cuboid.stats["one"]
+    nc = n - nt
+    yt = cuboid.stats[f"yt_{treatment}"]
+    yc = cuboid.stats["y"] - yt
+    keep = cuboid.group_valid & (nt > 0) & (nc > 0)
+    # CEMGroups wants a Grouping; cuboid-level estimation never touches the
+    # row-level fields, so install an inert one.
+    dummy = groupby.Grouping(
+        perm=jnp.zeros((cuboid.capacity,), jnp.int32),
+        inv_perm=jnp.zeros((cuboid.capacity,), jnp.int32),
+        seg_ids=jnp.zeros((cuboid.capacity,), jnp.int32),
+        group_hi=cuboid.key_hi, group_lo=cuboid.key_lo,
+        group_valid=cuboid.group_valid,
+        n_groups=cuboid.n_groups())
+    return CEMGroups(grouping=dummy, keep=keep, n_treated=nt, n_control=nc,
+                     sum_y_t=yt, sum_y_c=yc)
+
+
+def smallest_ancestor(targets: Mapping[str, Sequence[str]],
+                      materialized: Mapping[str, Cuboid]
+                      ) -> Dict[str, str]:
+    """Cube planning: for each target group-by, pick the smallest
+    materialized cuboid whose dims are a superset (classic cube heuristic)."""
+    plan = {}
+    for tname, dims in targets.items():
+        need = set(dims)
+        best = None
+        for cname, cub in materialized.items():
+            if need <= set(cub.dims):
+                size = int(cub.n_groups())
+                if best is None or size < best[0]:
+                    best = (size, cname)
+        if best is None:
+            raise ValueError(f"no materialized ancestor covers {tname}: {dims}")
+        plan[tname] = best[1]
+    return plan
+
+
+def filter_cuboid(cuboid: Cuboid, dim: str, bucket_values: Sequence[int]
+                  ) -> Cuboid:
+    """Sub-population restriction (paper §4.2 offline setting): keep only
+    groups whose ``dim`` bucket is in ``bucket_values`` (e.g. airport=SFO)."""
+    vals = cuboid.codec.extract(cuboid.key_hi, cuboid.key_lo, dim)
+    ok = jnp.zeros_like(cuboid.group_valid)
+    for b in bucket_values:
+        ok = ok | (vals == b)
+    gv = cuboid.group_valid & ok
+    stats = {k: jnp.where(gv, v, 0.0) for k, v in cuboid.stats.items()}
+    return Cuboid(codec=cuboid.codec, key_hi=cuboid.key_hi,
+                  key_lo=cuboid.key_lo, stats=stats, group_valid=gv,
+                  treatments=cuboid.treatments)

@@ -1,0 +1,194 @@
+"""Distributed ZaliQL: CEM/ATE and k-NN matching across a device mesh.
+
+Two TPU-native communication patterns replace the single-node SQL engine
+(design rationale in DESIGN.md §2):
+
+COMBINE-BROADCAST GROUP-BY (CEM, subclassification, cuboids):
+  1. each device groups its row shard locally (sort + segment stats — the
+     paper's Fig. 5 view, per shard);
+  2. the fixed-capacity local stat tables are `all_gather`ed over the data
+     axis (stats are tiny relative to rows: #groups << #rows);
+  3. every device re-combines the gathered tables (same group-by code) and
+     now holds the REPLICATED global group stats -> overlap filter, ATE,
+     AWMD are pure local math;
+  4. row-level matched masks come from looking each row's key up in the
+     broadcast table (binary search).
+  Rows never move: no skew, no repartition, deterministic. Collective cost
+  = capacity * n_stats * 4B per device, independent of data size.
+
+RING k-NN JOIN (NNM):
+  control shards circulate around the data axis via `ppermute` (ring-
+  attention style) while each device folds every visiting shard into its
+  queries' running top-k — the same merge loop as the knn_topk Pallas
+  kernel, so compute overlaps the ring transfer on real hardware.
+
+Both are shard_map programs over a 1-D "data" axis (the flattened
+(pod, data) axes of the production mesh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import groupby
+from repro.core.cem import CEMGroups
+from repro.core.matching import BIG, _topk_merge
+
+
+# ===================== combine-broadcast group-by ===========================
+def _local_stat_table(hi, lo, stats: Dict[str, jnp.ndarray], capacity: int,
+                      single_word: bool = False):
+    g = groupby.group_by_key(hi, lo, single_word=single_word)
+    sums = groupby.segment_sums(g, stats)
+    return (g.group_hi[:capacity], g.group_lo[:capacity],
+            {k: v[:capacity] for k, v in sums.items()},
+            g.n_groups > capacity)
+
+
+def _combine_gathered(ghi, glo, gstats: Dict[str, jnp.ndarray],
+                      capacity: int, single_word: bool = False):
+    """ghi/glo: (n_dev * capacity,) gathered keys (with invalid padding);
+    re-group and sum."""
+    g = groupby.group_by_key(ghi, glo, single_word=single_word)
+    sums = groupby.segment_sums(g, gstats)
+    return (g.group_hi[:capacity], g.group_lo[:capacity],
+            {k: v[:capacity] for k, v in sums.items()},
+            g.n_groups > capacity)
+
+
+def make_distributed_cem(mesh, capacity: int = 8192,
+                         axis: str = "data", key_bits: int = 64):
+    """Returns a jitted function
+        f(hi, lo, t, y, valid) -> (ate, att, n_groups, n_matched_t,
+                                   n_matched_c, matched_valid, overflow)
+    with rows sharded over `axis` and scalar outputs replicated.
+    """
+
+    single_word = key_bits <= 31
+
+    def shard_body(hi, lo, t, y, valid):
+        w = valid.astype(jnp.float32)
+        tf = t.astype(jnp.float32) * w
+        cf = (1.0 - t.astype(jnp.float32)) * w
+        yf = y.astype(jnp.float32)
+        stats = {"n_t": tf, "n_c": cf, "y_t": tf * yf, "y_c": cf * yf}
+        lhi, llo, lstats, loverflow = _local_stat_table(
+            hi, lo, stats, capacity, single_word=single_word)
+        # gather stat tables from every device (tiny vs rows)
+        ghi = jax.lax.all_gather(lhi, axis, tiled=True)
+        glo = jax.lax.all_gather(llo, axis, tiled=True)
+        gstats = {k: jax.lax.all_gather(v, axis, tiled=True)
+                  for k, v in lstats.items()}
+        chi, clo, cstats, coverflow = _combine_gathered(
+            ghi, glo, gstats, capacity, single_word=single_word)
+        keep = (~((chi == jnp.uint32(0xFFFFFFFF))
+                  & (clo == jnp.uint32(0xFFFFFFFF)))
+                & (cstats["n_t"] > 0) & (cstats["n_c"] > 0))
+        nt = jnp.where(keep, cstats["n_t"], 0.0)
+        nc = jnp.where(keep, cstats["n_c"], 0.0)
+        mean_t = jnp.where(nt > 0, cstats["y_t"] / jnp.maximum(nt, 1e-9), 0.)
+        mean_c = jnp.where(nc > 0, cstats["y_c"] / jnp.maximum(nc, 1e-9), 0.)
+        diff = mean_t - mean_c
+        n_b = nt + nc
+        n_tot = jnp.maximum(jnp.sum(n_b), 1e-9)
+        ate = jnp.sum(n_b * diff) / n_tot
+        att = jnp.sum(nt * diff) / jnp.maximum(jnp.sum(nt), 1e-9)
+        n_groups = jnp.sum(keep.astype(jnp.int32))
+        # row-level matched mask: look up each local row in the (sorted)
+        # global table
+        pos, found = groupby.lookup_rows_in_table(hi, lo, chi, clo)
+        matched = valid & found & keep[pos]
+        overflow = loverflow | coverflow
+        any_overflow = jax.lax.pmax(overflow.astype(jnp.int32), axis) > 0
+        return (ate, att, n_groups, jnp.sum(nt), jnp.sum(nc), matched,
+                any_overflow)
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(), P(), P(), P(), P(), P(axis), P()),
+        check_rep=False)
+    return jax.jit(fn)
+
+
+# ============================= ring k-NN ====================================
+def make_ring_knn(mesh, k: int, axis: str = "data"):
+    """Returns jitted f(Q, C, c_valid) -> (dist, idx): for each query row,
+    the k nearest controls ANYWHERE on the mesh. Q, C row-sharded over
+    `axis`; outputs sharded like Q; idx are global control row ids."""
+
+    def shard_body(Q, C, cv):
+        n_dev = jax.lax.psum(1, axis)
+        me = jax.lax.axis_index(axis)
+        nc_local = C.shape[0]
+        qn = jnp.sum(Q * Q, axis=1, keepdims=True)
+        perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+        def fold(carry, hop):
+            run_d, run_i, Cb, cvb = carry
+            owner = (me - hop) % n_dev          # whose shard we hold now
+            cn = jnp.sum(Cb * Cb, axis=1)[None, :]
+            d2 = jnp.maximum(qn + cn - 2.0 * (Q @ Cb.T), 0.0)
+            d2 = jnp.where(cvb[None, :].astype(bool), d2, BIG)
+            base = owner * nc_local
+            idx = base + jnp.arange(nc_local, dtype=jnp.int32)[None, :]
+            idx = jnp.broadcast_to(idx, d2.shape)
+            bk = min(k, nc_local)
+            nd, np_ = jax.lax.top_k(-d2, bk)
+            ni = jnp.take_along_axis(idx, np_, axis=1)
+            run_d, run_i = _topk_merge(run_d, run_i, -nd, ni, k)
+            # pass the control shard along the ring
+            Cb = jax.lax.ppermute(Cb, axis, perm)
+            cvb = jax.lax.ppermute(cvb, axis, perm)
+            return (run_d, run_i, Cb, cvb), None
+
+        run_d = jnp.full((Q.shape[0], k), BIG, jnp.float32)
+        run_i = jnp.full((Q.shape[0], k), -1, jnp.int32)
+        (run_d, run_i, _, _), _ = jax.lax.scan(
+            fold, (run_d, run_i, C, cv.astype(jnp.int32)),
+            jnp.arange(n_dev))
+        return jnp.sqrt(run_d), run_i
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(shard_body, mesh=mesh,
+                   in_specs=(P(axis), P(axis), P(axis)),
+                   out_specs=(P(axis), P(axis)),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+# ===================== distributed propensity (Newton) ======================
+def make_distributed_newton(mesh, n_iter: int = 32, ridge: float = 1e-4,
+                            axis: str = "data"):
+    """Batch-sharded logistic regression: per-device fused grad/Hessian
+    partials (the logistic_grad kernel's math) + psum — exact Newton."""
+
+    def shard_body(X, t, m):
+        d = X.shape[1]
+
+        def step(w, _):
+            logits = X @ w
+            p = jax.nn.sigmoid(logits)
+            r = m * (p - t)
+            g = X.T @ r
+            s = m * p * (1.0 - p)
+            H = (X * s[:, None]).T @ X
+            g = jax.lax.psum(g, axis) + ridge * w
+            H = jax.lax.psum(H, axis) + ridge * jnp.eye(d)
+            return w - jnp.linalg.solve(H, g), None
+
+        w0 = jnp.zeros((X.shape[1],), jnp.float32)
+        w, _ = jax.lax.scan(step, w0, None, length=n_iter)
+        return w
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(shard_body, mesh=mesh,
+                   in_specs=(P(axis), P(axis), P(axis)),
+                   out_specs=P(),
+                   check_rep=False)
+    return jax.jit(fn)

@@ -1,0 +1,141 @@
+"""Covariate factoring for multiple treatments (paper §4.2, Prop. 3, Alg. 1).
+
+Many treatments share covariates (all weather treatments condition on
+season/traffic/airport). Factoring pre-filters the data ONCE per treatment
+group on the *shared* covariates X' = intersection of the group's covariate
+sets, keeping only super-subclasses where at least one treatment has overlap
+(the paper's P_S view). Per-treatment CEM then runs on the (compacted)
+survivor set — Prop. 3 guarantees the result is identical to running CEM
+from scratch.
+
+Alg. 1 chooses the grouping: treatments that are highly correlated (phi
+coefficient) prune together, so greedy agglomeration maximizes the summed
+|phi| within groups subject to a nonempty shared-covariate constraint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Mapping, Sequence, Set, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import groupby
+from repro.core.cem import cem_from_keys, make_codec, pack_keys
+from repro.core.coarsen import CoarsenSpec
+from repro.data.columnar import Table
+
+
+def phi_coefficient(t1: jnp.ndarray, t2: jnp.ndarray, valid: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Phi (Matthews) coefficient between two binary treatments."""
+    w = valid.astype(jnp.float32)
+    a = t1.astype(jnp.float32)
+    b = t2.astype(jnp.float32)
+    n11 = jnp.sum(w * a * b)
+    n10 = jnp.sum(w * a * (1 - b))
+    n01 = jnp.sum(w * (1 - a) * b)
+    n00 = jnp.sum(w * (1 - a) * (1 - b))
+    n1_, n0_ = n11 + n10, n01 + n00
+    n_1, n_0 = n11 + n01, n10 + n00
+    denom = jnp.sqrt(jnp.maximum(n1_ * n0_ * n_1 * n_0, 1e-9))
+    return (n11 * n00 - n10 * n01) / denom
+
+
+def phi_matrix(treatments: Mapping[str, jnp.ndarray], valid: jnp.ndarray
+               ) -> Tuple[List[str], np.ndarray]:
+    names = sorted(treatments)
+    k = len(names)
+    M = np.zeros((k, k))
+    for i, j in itertools.combinations(range(k), 2):
+        M[i, j] = M[j, i] = float(phi_coefficient(
+            treatments[names[i]], treatments[names[j]], valid))
+    return names, M
+
+
+def partition_treatments(names: Sequence[str], M: np.ndarray,
+                         covsets: Mapping[str, Set[str]],
+                         max_group: int = 4) -> List[List[str]]:
+    """Alg. 1: greedy agglomerative grouping maximizing summed |phi| within
+    groups, subject to a nonempty shared-covariate intersection."""
+    idx = {n: i for i, n in enumerate(names)}
+    groups: List[List[str]] = [[n] for n in names]
+
+    def shared(g1, g2):
+        inter = set.intersection(*(covsets[n] for n in g1 + g2))
+        return inter
+
+    def gain(g1, g2):
+        return sum(abs(M[idx[a], idx[b]]) for a in g1 for b in g2)
+
+    while True:
+        best = None
+        for i, j in itertools.combinations(range(len(groups)), 2):
+            g1, g2 = groups[i], groups[j]
+            if len(g1) + len(g2) > max_group or not shared(g1, g2):
+                continue
+            g = gain(g1, g2)
+            if g > 1e-9 and (best is None or g > best[0]):
+                best = (g, i, j)
+        if best is None:
+            return groups
+        _, i, j = best
+        groups[i] = groups[i] + groups[j]
+        del groups[j]
+
+
+@dataclasses.dataclass(frozen=True)
+class FactoredView:
+    """The paper's P_S view: rows surviving the shared-covariate prefilter,
+    with their super-subclass id."""
+
+    table: Table             # valid mask narrowed to surviving rows
+    supersubclass: jnp.ndarray  # (N,) int32 group id over shared covariates
+    shared: Tuple[str, ...]
+
+
+def covariate_factoring(table: Table, treatments: Sequence[str],
+                        specs: Mapping[str, CoarsenSpec],
+                        shared: Sequence[str]) -> FactoredView:
+    """Build P_S: group by shared covariates; keep groups where at least one
+    treatment in S has overlap (Fig. 6(a))."""
+    shared_specs = {n: specs[n] for n in shared}
+    codec, hi, lo = pack_keys(table, shared_specs)
+    g = groupby.group_by_key(hi, lo)
+    w = table.valid.astype(jnp.float32)
+    cols = {}
+    for tname in treatments:
+        t = table[tname].astype(jnp.float32) * w
+        cols[f"nt_{tname}"] = t
+        cols[f"nc_{tname}"] = w - t
+    sums = groupby.segment_sums(g, cols)
+    any_overlap = jnp.zeros_like(g.group_valid)
+    for tname in treatments:
+        any_overlap = any_overlap | ((sums[f"nt_{tname}"] > 0)
+                                     & (sums[f"nc_{tname}"] > 0))
+    keep = g.group_valid & any_overlap
+    row_keep = groupby.broadcast_to_rows(g, keep)
+    out = Table(dict(table.columns), table.valid & row_keep)
+    return FactoredView(table=out, supersubclass=g.row_group(),
+                        shared=tuple(shared))
+
+
+def mcem(view: FactoredView, treatment: str, outcome: str,
+         specs: Mapping[str, CoarsenSpec]):
+    """Modified CEM over P_S (Fig. 6(b)).
+
+    Grouping by (supersubclass, X_T \\ X') partitions rows identically to
+    grouping by X_T (the shared fields determine the supersubclass), so we
+    group directly on X_T restricted to the surviving rows — Prop. 3 says
+    the result equals CEM(R_T).
+    """
+    table = view.table
+    codec, hi, lo = pack_keys(table, specs)
+    matched_valid, row_subclass, groups = cem_from_keys(
+        hi, lo, table[treatment], table[outcome], table.valid)
+    out = Table(dict(table.columns), matched_valid).with_columns(
+        {"subclass": row_subclass, "supersubclass": view.supersubclass})
+    from repro.core.cem import CEMResult  # local import to avoid cycle
+    return CEMResult(table=out, groups=groups, codec=codec, key_hi=hi,
+                     key_lo=lo)

@@ -1,0 +1,168 @@
+"""Sort-based GROUP BY with segmented aggregation.
+
+TPUs have no hash tables; the idiom for SQL's GROUP BY is:
+sort rows by packed key (lexicographic over two u32 words), mark segment
+boundaries, and run segmented reductions. All outputs are padded to N
+(static shape); ``n_groups`` is dynamic.
+
+This module is the pure-jnp engine; ``repro.kernels.segment_stats`` provides
+the fused Pallas hot path for the CEM statistics bundle, and
+``repro.core.distributed`` layers the multi-chip combine-broadcast on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.keys import INVALID_HI, INVALID_LO
+
+
+@dataclasses.dataclass(frozen=True)
+class Grouping:
+    """Result of grouping N rows by key.
+
+    All arrays have length N (padded). Row-order fields are in *sorted* row
+    order; ``perm`` maps sorted position -> original row index and
+    ``inv_perm`` the other way.
+    """
+
+    perm: jnp.ndarray        # (N,) int32: sorted pos -> original row
+    inv_perm: jnp.ndarray    # (N,) int32: original row -> sorted pos
+    seg_ids: jnp.ndarray     # (N,) int32: sorted pos -> group id (invalid rows
+                             #   share the trailing group)
+    group_hi: jnp.ndarray    # (N,) u32: group id -> key hi (padded w/ invalid)
+    group_lo: jnp.ndarray    # (N,) u32
+    group_valid: jnp.ndarray  # (N,) bool: group id -> is a real (valid-key) group
+    n_groups: jnp.ndarray    # () int32 (dynamic), count of valid groups
+
+    @property
+    def nrows(self) -> int:
+        return int(self.perm.shape[0])
+
+    def row_group(self) -> jnp.ndarray:
+        """(N,) int32: original row -> group id."""
+        return self.seg_ids[self.inv_perm]
+
+
+def group_by_key(hi: jnp.ndarray, lo: jnp.ndarray,
+                 single_word: bool = False) -> Grouping:
+    """Group rows by (hi, lo) key. Invalid rows carry the all-ones marker and
+    sort to the end, landing in a trailing pseudo-group flagged invalid.
+
+    single_word=True (keys known to fit 31 bits, hi == 0 for valid rows and
+    the invalid marker still sorts last within lo alone) sorts ONE u32 word
+    instead of the lexicographic pair — ~1/3 less sort traffic; the common
+    CEM case (§Perf hillclimb on the zaliql cell)."""
+    n = hi.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    if single_word:
+        slo, perm = jax.lax.sort((lo, iota), num_keys=1, is_stable=True)
+        marker = slo == jnp.uint32(0xFFFFFFFF)
+        shi = jnp.where(marker, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+    else:
+        shi, slo, perm = jax.lax.sort((hi, lo, iota), num_keys=2,
+                                      is_stable=True)
+    inv_perm = jnp.zeros((n,), jnp.int32).at[perm].set(iota)
+
+    prev_hi = jnp.concatenate([jnp.array([~shi[0]], dtype=shi.dtype), shi[:-1]])
+    prev_lo = jnp.concatenate([jnp.array([~slo[0]], dtype=slo.dtype), slo[:-1]])
+    new_seg = (shi != prev_hi) | (slo != prev_lo)
+    seg_ids = jnp.cumsum(new_seg.astype(jnp.int32)) - 1
+
+    # Group-id -> representative key (first sorted row of each segment).
+    group_hi = jnp.full((n,), INVALID_HI, dtype=hi.dtype)
+    group_lo = jnp.full((n,), INVALID_LO, dtype=lo.dtype)
+    group_hi = group_hi.at[seg_ids].set(shi)  # last-wins, same key per segment
+    group_lo = group_lo.at[seg_ids].set(slo)
+    group_valid = ~((group_hi == INVALID_HI) & (group_lo == INVALID_LO))
+    n_groups = jnp.sum(group_valid.astype(jnp.int32))
+    return Grouping(perm=perm, inv_perm=inv_perm, seg_ids=seg_ids,
+                    group_hi=group_hi, group_lo=group_lo,
+                    group_valid=group_valid, n_groups=n_groups)
+
+
+def segment_sums(g: Grouping, columns: Mapping[str, jnp.ndarray]
+                 ) -> Dict[str, jnp.ndarray]:
+    """Per-group sums of each column (rows gathered into sorted order first).
+
+    Caller is responsible for pre-masking columns (multiply by validity /
+    arm indicators); this keeps one sort amortized over many aggregates.
+    """
+    out = {}
+    for name, col in columns.items():
+        sortd = col.astype(jnp.float32)[g.perm]
+        out[name] = jax.ops.segment_sum(sortd, g.seg_ids,
+                                        num_segments=g.nrows)
+    return out
+
+
+def group_minmax(g: Grouping, col: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-group (min, max) — the paper's ``min(T) OVER w / max(T) OVER w``."""
+    sortd = col[g.perm]
+    mn = jax.ops.segment_min(sortd, g.seg_ids, num_segments=g.nrows)
+    mx = jax.ops.segment_max(sortd, g.seg_ids, num_segments=g.nrows)
+    return mn, mx
+
+
+def broadcast_to_rows(g: Grouping, group_vals: jnp.ndarray) -> jnp.ndarray:
+    """Group-level values -> per-row values (original row order).
+
+    The SQL analogue is selecting a window aggregate alongside each row.
+    """
+    return group_vals[g.seg_ids][g.inv_perm]
+
+
+def combine_stat_tables(hi: jnp.ndarray, lo: jnp.ndarray,
+                        stats: Mapping[str, jnp.ndarray], capacity: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray], jnp.ndarray]:
+    """Merge (possibly duplicated-key) stat tables into one table of
+    ``capacity`` rows: sort by key, segment-sum the stats. Used by the
+    distributed combine-broadcast aggregation to merge per-chip partials.
+
+    Returns (group_hi, group_lo, summed stats, overflow flag). Overflow is
+    reported when distinct keys exceed ``capacity`` (results then invalid).
+    """
+    g = group_by_key(hi, lo)
+    summed = segment_sums(g, stats)
+    ghi = g.group_hi[:capacity]
+    glo = g.group_lo[:capacity]
+    out = {k: v[:capacity] for k, v in summed.items()}
+    overflow = g.n_groups > capacity
+    return ghi, glo, out, overflow
+
+
+def lookup_rows_in_table(hi: jnp.ndarray, lo: jnp.ndarray,
+                         table_hi: jnp.ndarray, table_lo: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """For each row key, find its position in a *sorted* key table.
+
+    Returns (pos, found). Rows whose key is absent get found=False.
+    Table must be sorted lexicographically by (hi, lo) — group tables from
+    :func:`group_by_key` already are.
+    """
+    # Vectorized binary search over the composite (hi, lo) key.
+    n_table = table_hi.shape[0]
+    def composite_less(i, key_hi, key_lo):
+        thi = table_hi[i]
+        tlo = table_lo[i]
+        return (thi < key_hi) | ((thi == key_hi) & (tlo < key_lo))
+    def body(state, _):
+        lo_b, hi_b, key_hi, key_lo = state
+        mid = (lo_b + hi_b) // 2
+        less = composite_less(mid, key_hi, key_lo)
+        lo_b = jnp.where(less, mid + 1, lo_b)
+        hi_b = jnp.where(less, hi_b, mid)
+        return (lo_b, hi_b, key_hi, key_lo), None
+    n_iter = max(1, math.ceil(math.log2(max(2, n_table))) + 1)
+    def search_one(key_hi, key_lo):
+        state = (jnp.int32(0), jnp.int32(n_table), key_hi, key_lo)
+        (lo_b, _, _, _), _ = jax.lax.scan(body, state, None, length=n_iter)
+        return lo_b
+    pos = jax.vmap(search_one)(hi, lo)
+    pos = jnp.clip(pos, 0, n_table - 1)
+    found = (table_hi[pos] == hi) & (table_lo[pos] == lo)
+    return pos, found

@@ -1,0 +1,110 @@
+"""Bit-packed group keys.
+
+SQL's ``GROUP BY cx_1, ..., cx_n`` becomes: pack the coarsened bucket ids
+into a 63-bit key held as two uint32 words (TPUs have no native int64), then
+lexicographically sort (hi, lo). The codec also supports *extracting* a
+subset of fields and repacking under a sub-codec — that is exactly the
+data-cube rollup of paper §4.2 (a coarser GROUP BY computed from a finer one).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Sequence, Tuple
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+INVALID_HI = jnp.uint32(0xFFFFFFFF)
+INVALID_LO = jnp.uint32(0xFFFFFFFF)
+_MAX_BITS = 63  # valid keys can never collide with the invalid marker
+
+
+def _width(cardinality: int) -> int:
+    return max(1, math.ceil(math.log2(max(2, cardinality))))
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyCodec:
+    """Packs named fields (each with a static cardinality) into (hi, lo) u32."""
+
+    fields: Tuple[Tuple[str, int], ...]  # (name, cardinality), MSB-first
+
+    def __post_init__(self):
+        if self.total_bits > _MAX_BITS:
+            raise ValueError(
+                f"key needs {self.total_bits} bits > {_MAX_BITS}; coarsen more "
+                f"aggressively or split the GROUP BY: {self.fields}")
+
+    @staticmethod
+    def from_cardinalities(cards: Mapping[str, int]) -> "KeyCodec":
+        return KeyCodec(tuple((n, int(c)) for n, c in sorted(cards.items())))
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.fields)
+
+    @property
+    def widths(self) -> Dict[str, int]:
+        return {n: _width(c) for n, c in self.fields}
+
+    @property
+    def total_bits(self) -> int:
+        return sum(self.widths.values())
+
+    def offsets(self) -> Dict[str, int]:
+        """Bit offset (from LSB of the 64-bit key) of each field."""
+        offs, pos = {}, self.total_bits
+        for n, _ in self.fields:
+            pos -= self.widths[n]
+            offs[n] = pos
+        return offs
+
+    # -- packing ---------------------------------------------------------
+    def pack(self, buckets: Mapping[str, jnp.ndarray], valid: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """buckets[name] int32 in [0, card) -> (hi, lo) uint32 keys.
+
+        Invalid rows get the all-ones marker so sorting pushes them last.
+        """
+        n = valid.shape[0]
+        hi = jnp.zeros((n,), dtype=U32)
+        lo = jnp.zeros((n,), dtype=U32)
+        for name, _ in self.fields:
+            w = self.widths[name]
+            v = buckets[name].astype(U32)
+            # (hi, lo) <<= w ; lo |= v      (w in [1, 31])
+            hi = (hi << w) | (lo >> (32 - w))
+            lo = (lo << w) | v
+        hi = jnp.where(valid, hi, INVALID_HI)
+        lo = jnp.where(valid, lo, INVALID_LO)
+        return hi, lo
+
+    # -- field extraction / rollup ----------------------------------------
+    def extract(self, hi: jnp.ndarray, lo: jnp.ndarray, name: str
+                ) -> jnp.ndarray:
+        """Recover one field's bucket ids from packed keys (valid rows)."""
+        off = self.offsets()[name]
+        w = self.widths[name]
+        mask = U32((1 << w) - 1)
+        if off >= 32:
+            return ((hi >> (off - 32)) & mask).astype(jnp.int32)
+        if off + w <= 32:
+            return ((lo >> off) & mask).astype(jnp.int32)
+        lo_bits = 32 - off
+        lo_part = lo >> off
+        hi_part = (hi & U32((1 << (w - lo_bits)) - 1)) << lo_bits
+        return ((hi_part | lo_part) & mask).astype(jnp.int32)
+
+    def subcodec(self, names: Sequence[str]) -> "KeyCodec":
+        keep = set(names)
+        return KeyCodec(tuple((n, c) for n, c in self.fields if n in keep))
+
+    def rollup(self, hi: jnp.ndarray, lo: jnp.ndarray, names: Sequence[str],
+               valid: jnp.ndarray) -> Tuple["KeyCodec", jnp.ndarray, jnp.ndarray]:
+        """Re-key onto a subset of fields (cube rollup). Returns sub-codec +
+        packed sub-keys."""
+        sub = self.subcodec(names)
+        buckets = {n: self.extract(hi, lo, n) for n in sub.names}
+        shi, slo = sub.pack(buckets, valid)
+        return sub, shi, slo

@@ -1,0 +1,87 @@
+"""Offline database preparation (paper §4.2, Alg. 2).
+
+Amortize matching cost across many online causal queries:
+  1. Alg. 1 partitions the treatments into correlated groups with shared
+     covariates.
+  2. Per group: covariate factoring prunes the base data once (P_S), then
+     the survivors are **compacted** (the TPU analogue of materializing the
+     view).
+  3. Per group: a cuboid over the union of the group's covariates (+ any
+     sub-population query dims, e.g. airport/year) is materialized.
+  4. Online: ATE for any (treatment, sub-population) = filter + rollup +
+     group-stat CEM on the (tiny) cuboid — no pass over the base data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import cube as cube_mod
+from repro.core.ate import ATEEstimate, estimate_ate
+from repro.core.coarsen import CoarsenSpec
+from repro.core.factoring import (covariate_factoring, partition_treatments,
+                                  phi_matrix)
+from repro.data.columnar import Table, compact
+
+
+@dataclasses.dataclass
+class PreparedDatabase:
+    cuboids: Dict[str, cube_mod.Cuboid]        # group name -> cuboid
+    treatment_group: Dict[str, str]            # treatment -> group name
+    covsets: Dict[str, Tuple[str, ...]]        # treatment -> its covariates
+    query_dims: Tuple[str, ...]
+    prep_seconds: float
+
+    def ate(self, treatment: str,
+            subpopulation: Optional[Mapping[str, Sequence[int]]] = None
+            ) -> ATEEstimate:
+        """Online causal query: ATE of ``treatment``, optionally restricted
+        to a sub-population given as {dim: [allowed bucket ids]}."""
+        cub = self.cuboids[self.treatment_group[treatment]]
+        if subpopulation:
+            for dim, buckets in subpopulation.items():
+                cub = cube_mod.filter_cuboid(cub, dim, buckets)
+        dims = set(self.covsets[treatment]) | set(self.query_dims)
+        dims = [d for d in cub.dims if d in dims]
+        rolled = cube_mod.rollup(cub, dims)
+        groups = cube_mod.cem_groups_from_cuboid(rolled, treatment)
+        return estimate_ate(groups)
+
+
+def prepare(table: Table, treatments: Mapping[str, Sequence[str]],
+            specs: Mapping[str, CoarsenSpec], outcome: str,
+            query_dims: Sequence[str] = (), max_group: int = 4
+            ) -> PreparedDatabase:
+    """Alg. 2. ``treatments`` maps treatment name -> its covariate names."""
+    t0 = time.perf_counter()
+    covsets: Dict[str, Set[str]] = {t: set(c) for t, c in treatments.items()}
+    names, M = phi_matrix({t: table[t] for t in treatments}, table.valid)
+    groups = partition_treatments(names, M, covsets, max_group=max_group)
+
+    cuboids: Dict[str, cube_mod.Cuboid] = {}
+    treatment_group: Dict[str, str] = {}
+    for gi, group in enumerate(groups):
+        gname = "+".join(group)
+        shared = sorted(set.intersection(*(covsets[t] for t in group)))
+        union = sorted(set.union(*(covsets[t] for t in group))
+                       | set(query_dims))
+        if shared:
+            view = covariate_factoring(table, group,
+                                       {n: specs[n] for n in union
+                                        if n in specs}, shared)
+            base = compact(view.table)
+        else:
+            base = table
+        cub = cube_mod.build_cuboid(base, {n: specs[n] for n in union},
+                                    group, outcome)
+        cuboids[gname] = cube_mod.compact_cuboid(cub)
+        for t in group:
+            treatment_group[t] = gname
+    return PreparedDatabase(
+        cuboids=cuboids, treatment_group=treatment_group,
+        covsets={t: tuple(sorted(c)) for t, c in covsets.items()},
+        query_dims=tuple(query_dims),
+        prep_seconds=time.perf_counter() - t0)

@@ -1,0 +1,83 @@
+"""Propensity-score estimation: E(x) = Pr(T=1 | X=x)  (Rosenbaum-Rubin).
+
+The paper learns E with logistic regression (MADlib inside Postgres). Here:
+masked, batch-shardable Newton-Raphson with ridge damping. The gradient
+X^T(sigma(Xw) - t) is the compute hot spot at scale — `repro.kernels.
+logistic_grad` provides the fused Pallas path; this module is the engine
+and pure-jnp reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.columnar import Table
+
+
+@dataclasses.dataclass(frozen=True)
+class LogisticModel:
+    w: jnp.ndarray          # (d+1,) last entry = intercept
+    mean: jnp.ndarray       # (d,) standardization
+    std: jnp.ndarray        # (d,)
+    converged: jnp.ndarray  # bool (grad-norm based)
+
+
+def design_matrix(table: Table, features: Sequence[str]) -> jnp.ndarray:
+    cols = [table[f].astype(jnp.float32) for f in features]
+    return jnp.stack(cols, axis=-1)
+
+
+def _standardize(X: jnp.ndarray, valid: jnp.ndarray):
+    w = valid.astype(jnp.float32)[:, None]
+    n = jnp.maximum(jnp.sum(w), 1.0)
+    mean = jnp.sum(X * w, axis=0) / n
+    var = jnp.sum(w * (X - mean) ** 2, axis=0) / n
+    std = jnp.sqrt(jnp.maximum(var, 1e-12))
+    return (X - mean) / std, mean, std
+
+
+def fit_logistic(X: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
+                 n_iter: int = 32, ridge: float = 1e-4,
+                 ) -> LogisticModel:
+    """Newton-Raphson logistic regression on valid rows.
+
+    X: (N, d) raw features; t: (N,) binary treatment; valid: (N,) mask.
+    """
+    Xs, mean, std = _standardize(X, valid)
+    n, d = Xs.shape
+    Xb = jnp.concatenate([Xs, jnp.ones((n, 1), jnp.float32)], axis=1)
+    m = valid.astype(jnp.float32)
+    tf = t.astype(jnp.float32)
+
+    def step(w, _):
+        logits = Xb @ w
+        p = jax.nn.sigmoid(logits)
+        g = Xb.T @ (m * (p - tf)) + ridge * w
+        s = m * p * (1.0 - p) + 1e-6
+        H = (Xb * s[:, None]).T @ Xb + ridge * jnp.eye(d + 1)
+        dw = jnp.linalg.solve(H, g)
+        return w - dw, jnp.linalg.norm(g)
+
+    w0 = jnp.zeros((d + 1,), jnp.float32)
+    w, gnorms = jax.lax.scan(step, w0, None, length=n_iter)
+    return LogisticModel(w=w, mean=mean, std=std,
+                         converged=gnorms[-1] < 1e-3 * (1 + jnp.sum(m)) ** 0.5)
+
+
+def predict_ps(model: LogisticModel, X: jnp.ndarray) -> jnp.ndarray:
+    Xs = (X - model.mean) / model.std
+    logits = Xs @ model.w[:-1] + model.w[-1]
+    return jax.nn.sigmoid(logits)
+
+
+def propensity_scores(table: Table, treatment: str,
+                      features: Sequence[str], n_iter: int = 32,
+                      ridge: float = 1e-4) -> Tuple[jnp.ndarray, LogisticModel]:
+    """Fit on the table's valid rows, predict for all rows."""
+    X = design_matrix(table, features)
+    model = fit_logistic(X, table[treatment], table.valid, n_iter=n_iter,
+                         ridge=ridge)
+    return predict_ps(model, X), model

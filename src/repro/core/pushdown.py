@@ -1,0 +1,67 @@
+"""CEM pushdown through foreign-key joins (paper §4.1, Prop. 2).
+
+CEM(R1 |><| R2) = CEM(CEM(R1) |><| R2) when R1 holds the treatment: a group
+discarded on R1's covariates has all-same T among its R1 rows, hence all-same
+T among every refinement after the join — so it can never regain overlap.
+Filtering (and compacting) R1 *before* the join shrinks both the join and
+the final CEM.
+
+In FLIGHTDELAY the treatment table is weather (dimension) and the fact table
+is flights; the pushdown prunes weather rows in no-overlap weather-covariate
+groups before any flight row is touched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.cem import CEMResult, cem, cem_from_keys, pack_keys
+from repro.core.coarsen import CoarsenSpec
+from repro.data.columnar import Table, compact
+from repro.data.join import fk_join
+
+
+def cem_overlap_filter(table: Table, treatment: str,
+                       specs: Mapping[str, CoarsenSpec]) -> Table:
+    """Stage-1 CEM: group by this relation's covariates, drop no-overlap
+    groups. The outcome is irrelevant to the filter, so zeros are used."""
+    codec, hi, lo = pack_keys(table, specs)
+    zeros = jnp.zeros((table.nrows,), jnp.float32)
+    matched_valid, _, _ = cem_from_keys(hi, lo, table[treatment], zeros,
+                                        table.valid)
+    return Table(dict(table.columns), matched_valid)
+
+
+@dataclasses.dataclass(frozen=True)
+class PushdownResult:
+    result: CEMResult
+    dim_rows_before: int
+    dim_rows_after: int
+
+
+def cem_join_pushdown(dim: Table, dim_specs: Mapping[str, CoarsenSpec],
+                      fact: Table, fact_specs: Mapping[str, CoarsenSpec],
+                      on: Mapping[str, int], treatment: str, outcome: str,
+                      prefix: str = "", do_compact: bool = True
+                      ) -> PushdownResult:
+    """CEM(CEM(dim) |><| fact) — Prop. 2 specialized to a 2-relation FK
+    schema with the treatment on the dimension side.
+
+    The final CEM groups by dim covariates (prefixed) + fact covariates,
+    exactly like CEM over the integrated relation.
+    """
+    filtered = cem_overlap_filter(dim, treatment, dim_specs)
+    before = int(dim.count())
+    if do_compact:
+        filtered = compact(filtered)
+    after = int(filtered.count())
+    joined = fk_join(fact, filtered, on=on, prefix=prefix)
+    all_specs = dict(fact_specs)
+    for name, spec in dim_specs.items():
+        all_specs[prefix + name] = spec
+    res = cem(joined, prefix + treatment if prefix + treatment in joined.columns
+              else treatment, outcome, all_specs)
+    return PushdownResult(result=res, dim_rows_before=before,
+                          dim_rows_after=after)

@@ -1,0 +1,59 @@
+"""Propensity-score subclassification (paper §3.2, Fig. 4).
+
+SQL: ``ntile(n) OVER (ORDER BY ps)`` then drop subclasses failing overlap.
+TPU: global sort of ps (invalid rows pushed to +inf), rank = sorted position
+among valid rows, bucket = floor(rank * n / n_valid); then the same overlap
+machinery as CEM over the bucket key.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cem import CEMGroups, cem_from_keys
+from repro.core.keys import KeyCodec
+from repro.data.columnar import Table
+
+
+def ntile(ps: jnp.ndarray, valid: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Equal-count buckets of ps over valid rows; invalid rows get bucket n."""
+    big = jnp.where(valid, ps.astype(jnp.float32), jnp.inf)
+    nrows = ps.shape[0]
+    iota = jnp.arange(nrows, dtype=jnp.int32)
+    _, perm = jax.lax.sort((big, iota), num_keys=1, is_stable=True)
+    inv = jnp.zeros((nrows,), jnp.int32).at[perm].set(iota)
+    n_valid = jnp.maximum(jnp.sum(valid.astype(jnp.int32)), 1)
+    bucket = jnp.minimum((inv * n) // n_valid, n - 1).astype(jnp.int32)
+    return jnp.where(valid, bucket, n)
+
+
+@dataclasses.dataclass(frozen=True)
+class SubclassResult:
+    table: Table
+    groups: CEMGroups
+    ps: jnp.ndarray
+
+
+def subclassify(table: Table, treatment: str, outcome: str,
+                ps: jnp.ndarray, n_subclasses: int = 5,
+                trim: Optional[Tuple[float, float]] = (0.1, 0.9)
+                ) -> SubclassResult:
+    """Subclassification on a given propensity score.
+
+    ``trim`` discards units with ps outside [lo, hi] (the paper's §5.2
+    "common practice" of dropping ps < 0.1 or > 0.9).
+    """
+    valid = table.valid
+    if trim is not None:
+        valid = valid & (ps >= trim[0]) & (ps <= trim[1])
+    bucket = ntile(ps, valid, n_subclasses)
+    codec = KeyCodec.from_cardinalities({"subclass": n_subclasses + 1})
+    hi, lo = codec.pack({"subclass": bucket}, valid)
+    matched_valid, row_subclass, groups = cem_from_keys(
+        hi, lo, table[treatment], table[outcome], valid)
+    out = Table(dict(table.columns), matched_valid).with_columns(
+        {"subclass": row_subclass, "ps": ps})
+    return SubclassResult(table=out, groups=groups, ps=ps)

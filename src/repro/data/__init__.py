@@ -1,0 +1,4 @@
+from repro.data.columnar import Table
+from repro.data import join, flightgen
+
+__all__ = ["Table", "join", "flightgen"]

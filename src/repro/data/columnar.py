@@ -1,0 +1,163 @@
+"""Masked columnar batches — the TPU-native stand-in for a SQL row set.
+
+A ``Table`` is a dict of equal-length device arrays plus a validity mask.
+SQL's dynamic-cardinality operations (WHERE, discarding no-overlap CEM
+groups, caliper misses) become mask updates: shapes never change, so
+everything stays jit/pjit-compatible. Aggregates are mask-weighted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterator, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Table:
+    """Fixed-shape masked columnar batch.
+
+    columns: name -> array of shape (N,) or (N, d).
+    valid:   bool (N,); False rows are "deleted".
+    """
+
+    columns: Dict[str, jnp.ndarray]
+    valid: jnp.ndarray
+
+    # -- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return tuple(self.columns[n] for n in names) + (self.valid,), names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(columns=dict(zip(names, children[:-1])), valid=children[-1])
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def from_dict(cls, cols: Mapping[str, jnp.ndarray], valid=None) -> "Table":
+        cols = {k: jnp.asarray(v) for k, v in cols.items()}
+        n = next(iter(cols.values())).shape[0]
+        for k, v in cols.items():
+            if v.shape[0] != n:
+                raise ValueError(f"column {k}: length {v.shape[0]} != {n}")
+        if valid is None:
+            valid = jnp.ones((n,), dtype=bool)
+        return cls(columns=cols, valid=jnp.asarray(valid, dtype=bool))
+
+    @classmethod
+    def from_numpy(cls, cols: Mapping[str, np.ndarray], valid=None) -> "Table":
+        return cls.from_dict({k: jnp.asarray(v) for k, v in cols.items()}, valid)
+
+    # -- basic accessors ---------------------------------------------------
+    @property
+    def nrows(self) -> int:
+        return int(self.valid.shape[0])
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    def names(self) -> Iterator[str]:
+        return iter(sorted(self.columns))
+
+    def count(self) -> jnp.ndarray:
+        """Number of valid rows (dynamic)."""
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    # -- relational-ish ops ------------------------------------------------
+    def filter(self, mask: jnp.ndarray) -> "Table":
+        """WHERE: rows failing ``mask`` become invalid. Shape unchanged."""
+        return Table(self.columns, self.valid & mask.astype(bool))
+
+    def with_columns(self, new: Mapping[str, jnp.ndarray]) -> "Table":
+        cols = dict(self.columns)
+        cols.update({k: jnp.asarray(v) for k, v in new.items()})
+        return Table(cols, self.valid)
+
+    def select(self, names) -> "Table":
+        return Table({n: self.columns[n] for n in names}, self.valid)
+
+    def drop(self, names) -> "Table":
+        names = set(names)
+        return Table({k: v for k, v in self.columns.items() if k not in names},
+                     self.valid)
+
+    def rename(self, mapping: Mapping[str, str]) -> "Table":
+        return Table({mapping.get(k, k): v for k, v in self.columns.items()},
+                     self.valid)
+
+    def masked(self, name: str, fill=0) -> jnp.ndarray:
+        """Column with invalid rows replaced by ``fill``."""
+        col = self.columns[name]
+        mask = self.valid
+        if col.ndim > 1:
+            mask = mask[(...,) + (None,) * (col.ndim - 1)]
+        return jnp.where(mask, col, jnp.asarray(fill, dtype=col.dtype))
+
+    def mean(self, name: str) -> jnp.ndarray:
+        """Mask-weighted mean of a column."""
+        w = self.valid.astype(jnp.float32)
+        x = self.columns[name].astype(jnp.float32)
+        return jnp.sum(w * x) / jnp.maximum(jnp.sum(w), 1.0)
+
+    # -- host-side utilities (not jittable) ---------------------------------
+    def to_numpy(self, compact: bool = False) -> Dict[str, np.ndarray]:
+        """Materialize on host. compact=True drops invalid rows."""
+        out = {k: np.asarray(v) for k, v in self.columns.items()}
+        v = np.asarray(self.valid)
+        if compact:
+            out = {k: a[v] for k, a in out.items()}
+        else:
+            out["_valid"] = v
+        return out
+
+    def head(self, n: int = 8) -> str:
+        cols = self.to_numpy(compact=True)
+        lines = ["\t".join(sorted(cols))]
+        k = min(n, len(next(iter(cols.values()))) if cols else 0)
+        for i in range(k):
+            lines.append("\t".join(str(cols[c][i]) for c in sorted(cols)))
+        return "\n".join(lines)
+
+
+def _round_capacity(n: int, granule: int = 4096) -> int:
+    """Round row counts up to a granule so re-jitted shapes cache well."""
+    return max(granule, ((n + granule - 1) // granule) * granule)
+
+
+def compact(table: Table, granule: int = 4096) -> Table:
+    """Materialize only the valid rows (host-side gather), padded to a shape
+    granule. This is the TPU analogue of materializing a filtered SQL view:
+    masking alone never shrinks compute, compaction does. Used by the
+    covariate-factoring / pushdown / prepared-database optimizations between
+    pipeline stages (paper §4).
+    """
+    v = np.asarray(table.valid)
+    idx = np.nonzero(v)[0]
+    n_out = _round_capacity(len(idx), granule)
+    pad = n_out - len(idx)
+    cols = {}
+    for name, col in table.columns.items():
+        a = np.asarray(col)[idx]
+        widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+        cols[name] = np.pad(a, widths)
+    valid = np.zeros(n_out, dtype=bool)
+    valid[:len(idx)] = True
+    return Table.from_numpy(cols, valid)
+
+
+def concat(tables: list) -> Table:
+    """UNION ALL of same-schema tables."""
+    names = set(tables[0].columns)
+    for t in tables[1:]:
+        if set(t.columns) != names:
+            raise ValueError("schema mismatch in concat")
+    cols = {n: jnp.concatenate([t.columns[n] for t in tables]) for n in names}
+    valid = jnp.concatenate([t.valid for t in tables])
+    return Table(cols, valid)

@@ -1,0 +1,55 @@
+"""Foreign-key joins for normalized schemas (paper §4.1).
+
+The FLIGHTDELAY schema is a fact table (flights) pointing at a dimension
+table (weather) via (airport, hour). TPU idiom for a many-to-one FK join:
+pack join keys on both sides, sort the dimension side once, binary-search
+each fact key, gather. Output shape == fact shape (static).
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.groupby import lookup_rows_in_table
+from repro.core.keys import KeyCodec
+from repro.data.columnar import Table
+
+
+def pack_join_keys(table: Table, on: Mapping[str, int], codec: KeyCodec = None
+                   ) -> Tuple[KeyCodec, jnp.ndarray, jnp.ndarray]:
+    """Pack integer join columns (name -> cardinality) into sortable keys."""
+    codec = codec or KeyCodec.from_cardinalities(on)
+    buckets = {n: table[n].astype(jnp.int32) for n in codec.names}
+    hi, lo = codec.pack(buckets, table.valid)
+    return codec, hi, lo
+
+
+def fk_join(fact: Table, dim: Table, on: Mapping[str, int],
+            prefix: str = "") -> Table:
+    """fact LEFT-INNER join dim on shared integer key columns.
+
+    Facts whose key is missing (or whose dim row is invalid) become invalid —
+    the masked analogue of an inner join. Dim columns are appended (optionally
+    prefixed); shared key columns are not duplicated.
+    """
+    codec, fhi, flo = pack_join_keys(fact, on)
+    _, dhi, dlo = pack_join_keys(dim, on, codec)
+
+    n_dim = dim.nrows
+    iota = jnp.arange(n_dim, dtype=jnp.int32)
+    shi, slo, perm = jax.lax.sort((dhi, dlo, iota), num_keys=2, is_stable=True)
+    pos, found = lookup_rows_in_table(fhi, flo, shi, slo)
+    src = perm[pos]
+
+    new_cols: Dict[str, jnp.ndarray] = dict(fact.columns)
+    for name in dim.names():
+        if name in on:
+            continue
+        out_name = prefix + name
+        if out_name in new_cols:
+            raise ValueError(f"join column collision: {out_name}")
+        new_cols[out_name] = dim.columns[name][src]
+    valid = fact.valid & found & dim.valid[src]
+    return Table(new_cols, valid)

@@ -1,0 +1,77 @@
+"""Pallas kernel: fused coarsen + bit-pack of CEM group keys.
+
+The CEM front-end touches every row once: bucketize d covariates against
+their cutpoint vectors and pack the bucket ids into a 63-bit (hi, lo) key.
+Done naively this is d searchsorteds + d shift/or passes = 2d+ HBM trips.
+The kernel fuses everything into ONE pass: a (B, d) tile of covariates
+streams through VMEM, cutpoints (d, C) stay resident, and the two u32 key
+words leave. Memory-bound by design — the roofline term is exactly
+N*(4d + 8 + 1) bytes.
+
+Block layout: rows B=512 (sublane multiple), covariates padded to the lane
+width in ops.py. Cutpoint comparisons vectorize over the C lane dimension;
+bucket id = popcount of (x >= cutpoint) over real cutpoints.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, cp_ref, valid_ref, hi_ref, lo_ref, *, n_cuts, widths):
+    x = x_ref[...]                       # (B, d) f32
+    cps = cp_ref[...]                    # (d, C) f32, +inf padded
+    valid = valid_ref[...]               # (B,) int32 (bool as i32)
+    b, d = x.shape
+    c = cps.shape[1]
+    hi = jnp.zeros((b,), jnp.uint32)
+    lo = jnp.zeros((b,), jnp.uint32)
+    for j in range(d):
+        if widths[j] == 0:
+            continue
+        cmp = (x[:, j:j + 1] >= cps[j][None, :]).astype(jnp.uint32)
+        mask = (jnp.arange(c) < n_cuts[j])[None, :].astype(jnp.uint32)
+        bucket = jnp.sum(cmp * mask, axis=1).astype(jnp.uint32)
+        w = widths[j]
+        hi = (hi << w) | (lo >> (32 - w))
+        lo = (lo << w) | bucket
+    inval = jnp.uint32(0xFFFFFFFF)
+    ok = valid != 0
+    hi_ref[...] = jnp.where(ok, hi, inval)
+    lo_ref[...] = jnp.where(ok, lo, inval)
+
+
+def cem_keys_pallas(X: jnp.ndarray, cutpoints: jnp.ndarray,
+                    valid: jnp.ndarray, n_cuts: Sequence[int],
+                    widths: Sequence[int], block: int = 512,
+                    interpret: bool = True
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """X: (N, d) f32, N % block == 0; cutpoints: (d, C) f32 (+inf padded);
+    valid: (N,) int32. Returns (hi, lo) u32 keys."""
+    n, d = X.shape
+    c = cutpoints.shape[1]
+    grid = (n // block,)
+    kernel = functools.partial(_kernel, n_cuts=tuple(n_cuts),
+                               widths=tuple(widths))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, c), lambda i: (0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(X, cutpoints, valid)

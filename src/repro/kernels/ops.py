@@ -1,0 +1,114 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Responsibilities: pad inputs to block multiples, pick interpret mode (this
+container is CPU-only — interpret=True executes the kernel body in Python
+for correctness; on TPU backends the same calls compile to Mosaic), and
+slice padding back off. `repro.core` calls these; `ref.py` holds oracles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coarsen import CoarsenSpec
+from repro.core.keys import KeyCodec
+from repro.kernels import ref
+from repro.kernels.cem_keys import cem_keys_pallas
+from repro.kernels.knn_topk import knn_topk_pallas
+from repro.kernels.logistic_grad import logistic_newton_terms_pallas
+from repro.kernels.segment_stats import (combine_partials,
+                                         segment_partials_pallas)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jnp.ndarray, block: int, fill=0):
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad == 0:
+        return x, n
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill), n
+
+
+def cem_keys_op(X: jnp.ndarray, specs_cutpoints: Sequence[Sequence[float]],
+                widths: Sequence[int], valid: jnp.ndarray,
+                block: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused coarsen+pack for continuous covariates.
+
+    specs_cutpoints[j] = cutpoint list of covariate j (column j of X);
+    widths[j] = bit width (from KeyCodec). Fields are packed MSB-first in
+    column order — callers must order columns to match their codec.
+    """
+    n, d = X.shape
+    cmax = max(1, max(len(c) for c in specs_cutpoints))
+    cp = np.full((d, cmax), np.inf, np.float32)
+    n_cuts = []
+    for j, c in enumerate(specs_cutpoints):
+        cp[j, :len(c)] = c
+        n_cuts.append(len(c))
+    Xp, n0 = _pad_rows(X.astype(jnp.float32), block)
+    vp, _ = _pad_rows(valid.astype(jnp.int32), block)
+    hi, lo = cem_keys_pallas(Xp, jnp.asarray(cp), vp, tuple(n_cuts),
+                             tuple(widths), block=block,
+                             interpret=_interpret())
+    return hi[:n0], lo[:n0]
+
+
+def segment_sums_op(values: jnp.ndarray, seg_ids: jnp.ndarray,
+                    num_segments: int, block: int = 256) -> jnp.ndarray:
+    """Drop-in for jax.ops.segment_sum over SORTED seg_ids (N, S) -> (G, S),
+    backed by the MXU one-hot matmul kernel."""
+    n, s = values.shape
+    vp, n0 = _pad_rows(values.astype(jnp.float32), block)
+    # padded rows: give them a segment id one past the last (clipped later)
+    pad_id = num_segments
+    ip, _ = _pad_rows(seg_ids.astype(jnp.int32), block, fill=pad_id)
+    nb = vp.shape[0] // block
+    base = ip.reshape(nb, block)[:, 0]
+    local = ip - jnp.repeat(base, block)
+    local = jnp.clip(local, 0, block - 1)
+    partials = segment_partials_pallas(vp, local, block=block,
+                                       interpret=_interpret())
+    return combine_partials(partials, base, num_segments + 1)[:num_segments]
+
+
+def knn_topk_op(Q: jnp.ndarray, C: jnp.ndarray, c_valid: jnp.ndarray,
+                k: int, caliper: float = None, block_q: int = 256,
+                block_c: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """k-NN (squared distances) with optional caliper on the *Euclidean*
+    distance; pads both sides, slices back."""
+    Qp, nq = _pad_rows(Q.astype(jnp.float32), block_q)
+    Cp, nc = _pad_rows(C.astype(jnp.float32), block_c)
+    cvp, _ = _pad_rows(c_valid.astype(jnp.int32), block_c, fill=0)
+    d2, idx = knn_topk_pallas(Qp, Cp, cvp, k, block_q=block_q,
+                              block_c=block_c, interpret=_interpret())
+    d2, idx = d2[:nq], idx[:nq]
+    dist = jnp.sqrt(d2)
+    if caliper is not None:
+        dist = jnp.where(dist <= caliper, dist, ref.BIG)
+    return dist, idx
+
+
+def logistic_newton_terms_op(X: jnp.ndarray, t: jnp.ndarray, m: jnp.ndarray,
+                             w: jnp.ndarray, block: int = 1024
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    Xp, n0 = _pad_rows(X.astype(jnp.float32), block)
+    tp, _ = _pad_rows(t.astype(jnp.float32), block)
+    mp, _ = _pad_rows(m.astype(jnp.float32), block, fill=0)  # pad -> weight 0
+    return logistic_newton_terms_pallas(Xp, tp, mp, w.astype(jnp.float32),
+                                        block=block, interpret=_interpret())
+
+
+def local_seg_ids(seg_ids: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Helper mirrored from segment_sums_op for tests."""
+    n = seg_ids.shape[0]
+    nb = n // block
+    base = seg_ids.reshape(nb, block)[:, 0]
+    return seg_ids - jnp.repeat(base, block)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are tested against
+(interpret-mode allclose over shape/dtype sweeps in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.float32(3.4e38)
+
+
+def cem_keys_ref(X: jnp.ndarray, cutpoints: jnp.ndarray,
+                 n_cuts: Sequence[int], widths: Sequence[int],
+                 valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused coarsen + bit-pack.
+
+    X: (N, d) f32; cutpoints: (d, C) f32 padded with +inf; n_cuts[j] = number
+    of real cutpoints of field j (buckets = n_cuts[j]+1); widths[j] = bit
+    width allotted to field j (MSB-first packing, same as KeyCodec).
+    """
+    n, d = X.shape
+    hi = jnp.zeros((n,), jnp.uint32)
+    lo = jnp.zeros((n,), jnp.uint32)
+    for j in range(d):
+        cp = cutpoints[j]
+        b = jnp.sum((X[:, j:j + 1] >= cp[None, :]).astype(jnp.uint32)
+                    * (jnp.arange(cp.shape[0]) < n_cuts[j])[None, :],
+                    axis=1).astype(jnp.uint32)
+        w = widths[j]
+        hi = (hi << w) | (lo >> (32 - w))
+        lo = (lo << w) | b
+    hi = jnp.where(valid, hi, jnp.uint32(0xFFFFFFFF))
+    lo = jnp.where(valid, lo, jnp.uint32(0xFFFFFFFF))
+    return hi, lo
+
+
+def segment_partials_ref(values: jnp.ndarray, local_ids: jnp.ndarray,
+                         block: int) -> jnp.ndarray:
+    """Per-block segmented partial sums.
+
+    values: (N, S); local_ids: (N,) int32 in [0, block) — the row's segment
+    id *relative to the first segment of its block*. Output: (nb, block, S)
+    partial sums per (block, local segment).
+    """
+    n, s = values.shape
+    nb = n // block
+    v = values.reshape(nb, block, s)
+    ids = local_ids.reshape(nb, block)
+    onehot = (ids[:, None, :] == jnp.arange(block)[None, :, None])
+    return jnp.einsum("bij,bjs->bis", onehot.astype(values.dtype), v)
+
+
+def knn_topk_ref(Q: jnp.ndarray, C: jnp.ndarray, c_valid: jnp.ndarray,
+                 k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """k smallest squared-Euclidean distances (and indices) per query row.
+    Invalid controls -> BIG. Ties broken by lower index."""
+    qn = jnp.sum(Q * Q, axis=1, keepdims=True)
+    cn = jnp.sum(C * C, axis=1)[None, :]
+    d2 = jnp.maximum(qn + cn - 2.0 * (Q @ C.T), 0.0)
+    d2 = jnp.where(c_valid[None, :], d2, BIG)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return -neg, idx.astype(jnp.int32)
+
+
+def logistic_newton_terms_ref(X: jnp.ndarray, t: jnp.ndarray,
+                              m: jnp.ndarray, w: jnp.ndarray
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused pass of Newton logistic terms.
+
+    X: (N, d) standardized features WITH bias column; t: (N,) targets;
+    m: (N,) row weights (validity); w: (d,) coefficients.
+    Returns (g, H): g = X^T(m*(sigmoid(Xw)-t)), H = X^T diag(m*p*(1-p)) X.
+    """
+    logits = X @ w
+    p = jax.nn.sigmoid(logits)
+    r = m * (p - t)
+    g = X.T @ r
+    s = m * p * (1.0 - p)
+    H = (X * s[:, None]).T @ X
+    return g, H

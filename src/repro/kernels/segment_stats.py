@@ -1,0 +1,63 @@
+"""Pallas kernel: MXU segmented partial reduction (the GROUP-BY hot loop).
+
+After sorting by key, CEM needs per-group sums of a statistics bundle
+(n_t, n_c, y_t, y_c, per-covariate arm sums...). TPUs have no fast scatter;
+the MXU idiom is a one-hot matmul: within a row block, partial[i, s] =
+sum_j [local_seg(j) == i] * value[j, s] — a (B, B) @ (B, S) matmul that runs
+on the systolic array instead of a serial scatter loop. Cross-block segment
+spill is handled by a cheap jnp combine over the (nb*B, S) partials (a
+segment id crosses at most nb blocks).
+
+local_ids (= global segment id minus the block's first segment id) are
+computed outside with a cumsum; the kernel is the FLOP hot spot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ids_ref, vals_ref, out_ref):
+    ids = ids_ref[...]                 # (B,) int32, in [0, B)
+    vals = vals_ref[...]               # (B, S) f32
+    b = ids.shape[0]
+    onehot = (ids[None, :] == jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+              ).astype(vals.dtype)     # (B, B): rows = local segment
+    out_ref[...] = jnp.dot(onehot, vals,
+                           preferred_element_type=jnp.float32)[None]
+
+
+def segment_partials_pallas(values: jnp.ndarray, local_ids: jnp.ndarray,
+                            block: int = 256, interpret: bool = True
+                            ) -> jnp.ndarray:
+    """values: (N, S) f32 (N % block == 0); local_ids: (N,) int32 in
+    [0, block). Returns (nb, block, S) per-block partial sums."""
+    n, s = values.shape
+    nb = n // block
+    return pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, s), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block, s), jnp.float32),
+        interpret=interpret,
+    )(local_ids, values)
+
+
+def combine_partials(partials: jnp.ndarray, block_base: jnp.ndarray,
+                     num_segments: int) -> jnp.ndarray:
+    """Merge per-block partials into global per-segment sums.
+
+    partials: (nb, B, S); block_base: (nb,) int32 = global segment id of each
+    block's local segment 0. Returns (num_segments, S).
+    """
+    nb, b, s = partials.shape
+    gid = (block_base[:, None] + jnp.arange(b, dtype=jnp.int32)[None, :]
+           ).reshape(-1)
+    flat = partials.reshape(nb * b, s)
+    gid = jnp.clip(gid, 0, num_segments - 1)
+    return jax.ops.segment_sum(flat, gid, num_segments=num_segments)

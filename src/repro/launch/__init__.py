@@ -1,0 +1,4 @@
+from repro.launch.mesh import (dp_axes, dp_size, make_production_mesh,
+                               model_size)
+
+__all__ = ["dp_axes", "dp_size", "make_production_mesh", "model_size"]

@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first initialization). Everything below is ordinary.
+"""Multi-pod dry-run driver.
+
+For every (architecture x applicable input shape x mesh):
+  jax.jit(step, in_shardings, out_shardings).lower(abstract...).compile()
+then record memory_analysis(), cost_analysis(), and the three-term roofline
+(parsed from the per-device HLO). No arrays are ever allocated.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+  python -m repro.launch.dryrun --zaliql          # the causal engine cell
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import REGISTRY, SHAPES, applicable_shapes
+from repro.configs.base import ShapeSpec
+from repro.launch import sharding as shp
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.launch.specs import (abstract_cache, abstract_state, input_specs,
+                                pick_microbatches)
+from repro.models import shard_hints
+from repro.optim import AdamWConfig
+from repro.roofline import analyze
+from repro.train import make_decode, make_prefill, make_train_step
+
+
+def _mesh_label(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def _scan_fallback_trip(cfg) -> int:
+    # deepest scan trip count, for while-loops whose bound the parser misses
+    return max(cfg.n_layers, cfg.n_encoder_layers, 1)
+
+
+def lower_cell(cfg, shape: ShapeSpec, mesh, microbatches=None):
+    """Returns (lowered, in_info) for one cell."""
+    features = set(shard_hints.ALL_FEATURES)
+    if not getattr(cfg, "seq_parallel", True):
+        features.discard("seq_par")
+    shard_hints.set_hints(dp_axes(mesh), dict(mesh.shape),
+                          features=features)
+    try:
+        return _lower_cell_inner(cfg, shape, mesh, microbatches)
+    finally:
+        shard_hints.clear_hints()
+
+
+def _lower_cell_inner(cfg, shape: ShapeSpec, mesh, microbatches=None):
+    dp_n = math.prod(mesh.shape[a] for a in dp_axes(mesh))
+    batch = input_specs(cfg, shape)
+    batch_specs = shp.batch_pspecs(cfg, shape.kind,
+                                   {k: v.shape for k, v in batch.items()},
+                                   mesh)
+    pspecs = shp.params_pspecs(
+        jax.eval_shape(lambda: abstract_state(cfg))["params"], mesh)
+
+    if shape.kind == "train":
+        state = abstract_state(cfg)
+        ospecs = shp.opt_pspecs(state["opt"], pspecs, mesh)
+        state_specs = {"params": pspecs, "opt": ospecs, "step": P()}
+        mb = microbatches or pick_microbatches(cfg, shape, dp_n)
+        step = make_train_step(cfg, AdamWConfig(), microbatches=mb,
+                               grad_shardings=shp.to_named(pspecs, mesh))
+        jitted = jax.jit(
+            step,
+            in_shardings=(shp.to_named(state_specs, mesh),
+                          shp.to_named(batch_specs, mesh)),
+            out_shardings=(shp.to_named(state_specs, mesh),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0,))
+        with mesh:
+            lowered = jitted.lower(state, batch)
+        return lowered, {"microbatches": mb}
+
+    if shape.kind == "prefill":
+        prefill = make_prefill(cfg, shape.seq_len)
+        cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cache_specs = shp.cache_pspecs(cache, cfg, mesh)
+        params = abstract_state(cfg)["params"]
+        jitted = jax.jit(
+            prefill,
+            in_shardings=(shp.to_named(pspecs, mesh),
+                          shp.to_named(batch_specs, mesh)),
+            out_shardings=(shp.to_named(cache_specs, mesh),
+                           NamedSharding(mesh, P())))
+        with mesh:
+            lowered = jitted.lower(params, batch)
+        return lowered, {}
+
+    # decode: one token against a seq_len cache
+    decode = make_decode(cfg)
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    cache_specs = shp.cache_pspecs(cache, cfg, mesh)
+    params = abstract_state(cfg)["params"]
+    batch = input_specs(cfg, shape)
+    extras = {k: v for k, v in batch.items() if k not in ("token", "pos")}
+    extras_specs = {k: batch_specs[k] for k in extras}
+    args = (params, cache, batch["token"], batch["pos"])
+    in_sh = (shp.to_named(pspecs, mesh), shp.to_named(cache_specs, mesh),
+             NamedSharding(mesh, batch_specs["token"]),
+             NamedSharding(mesh, batch_specs["pos"]))
+    if extras:
+        args = args + (extras,)
+        in_sh = in_sh + (shp.to_named(extras_specs, mesh),)
+    jitted = jax.jit(
+        decode,
+        in_shardings=in_sh,
+        out_shardings=(NamedSharding(mesh, P()),
+                       shp.to_named(cache_specs, mesh)),
+        donate_argnums=(1,))
+    with mesh:
+        lowered = jitted.lower(*args)
+    return lowered, {}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             collect_roofline: bool = True, microbatches=None
+             ) -> Dict[str, Any]:
+    cfg = REGISTRY[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = math.prod(mesh.shape.values())
+    t0 = time.time()
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": _mesh_label(multi_pod),
+        "kind": shape.kind,
+    }
+    try:
+        lowered, info = lower_cell(cfg, shape, mesh,
+                                   microbatches=microbatches)
+        rec.update(info)
+        compiled = lowered.compile()
+        ms = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        rec["ok"] = True
+        rec["compile_s"] = round(time.time() - t0, 1)
+        total = int(ms.argument_size_in_bytes + ms.output_size_in_bytes
+                    + ms.temp_size_in_bytes - ms.alias_size_in_bytes)
+        rec["memory"] = {
+            "argument_bytes": int(ms.argument_size_in_bytes),
+            "output_bytes": int(ms.output_size_in_bytes),
+            "temp_bytes": int(ms.temp_size_in_bytes),
+            "alias_bytes": int(ms.alias_size_in_bytes),
+            "total_nonaliased": total,
+            "fits_16g_hbm": total <= 16 * 2 ** 30,
+        }
+        rec["xla_cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+        if collect_roofline:
+            hlo = compiled.as_text()
+            rl = analyze(arch, shape, rec["mesh"], cfg, hlo, n_dev,
+                         memory_stats=ms,
+                         fallback_trip=_scan_fallback_trip(cfg))
+            rec["roofline"] = rl.row()
+            rec["hlo_bytes"] = len(hlo)
+    except Exception as e:  # record failures; the suite asserts none remain
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def zaliql_cell(multi_pod: bool, n_rows_per_dev: int = 1 << 20,
+                capacity: int = 1 << 14) -> Dict[str, Any]:
+    """Dry-run for the paper's engine itself: distributed CEM + ATE over the
+    production mesh (rows sharded over every axis)."""
+    from repro.core.distributed import make_distributed_cem
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = math.prod(mesh.shape.values())
+    # flatten all axes into one logical data axis for the engine
+    flat = jax.sharding.Mesh(mesh.devices.reshape(-1), ("data",))
+    n = n_rows_per_dev * n_dev
+    S = jax.ShapeDtypeStruct
+    t0 = time.time()
+    rec: Dict[str, Any] = {"arch": "zaliql-cem", "mesh": _mesh_label(multi_pod),
+                           "shape": f"rows_{n}", "kind": "analytics"}
+    try:
+        f = make_distributed_cem(flat, capacity=capacity)
+        lowered = f.lower(S((n,), jnp.uint32), S((n,), jnp.uint32),
+                          S((n,), jnp.int32), S((n,), jnp.float32),
+                          S((n,), jnp.bool_))
+        compiled = lowered.compile()
+        ms = compiled.memory_analysis()
+        rec["ok"] = True
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["memory"] = {"total_nonaliased": int(
+            ms.argument_size_in_bytes + ms.output_size_in_bytes
+            + ms.temp_size_in_bytes - ms.alias_size_in_bytes)}
+        from repro.configs.base import ShapeSpec as SS
+        from repro.roofline import analyze as rl_analyze
+        from repro.configs import REGISTRY as R
+        hlo = compiled.as_text()
+        from repro.roofline.hlo_cost import HloCostModel
+        from repro.roofline import hw
+        cost = HloCostModel(hlo, default_group=n_dev,
+                            fallback_trip=32).entry_cost()
+        rec["roofline"] = {
+            "flops_per_dev": cost.flops,
+            "hbm_bytes_per_dev": cost.hbm_bytes,
+            "coll_bytes_per_dev": cost.collective_bytes,
+            "coll_breakdown": cost.collective_breakdown,
+            "t_compute_s": cost.flops / hw.PEAK_BF16_FLOPS,
+            "t_memory_s": cost.hbm_bytes / hw.HBM_BW,
+            "t_collective_s": cost.collective_bytes / hw.ICI_LINK_BW,
+        }
+        tt = rec["roofline"]
+        rec["roofline"]["bottleneck"] = max(
+            ("compute", tt["t_compute_s"]), ("memory", tt["t_memory_s"]),
+            ("collective", tt["t_collective_s"]), key=lambda kv: kv[1])[0]
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--zaliql", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-roofline", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh]
+    cells = []
+    if args.zaliql:
+        for mp in meshes:
+            cells.append(("__zaliql__", None, mp))
+    elif args.all:
+        for arch, cfg in sorted(REGISTRY.items()):
+            for s in applicable_shapes(cfg):
+                for mp in meshes:
+                    cells.append((arch, s.name, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    results = []
+    for arch, shape_name, mp in cells:
+        if arch == "__zaliql__":
+            rec = zaliql_cell(mp)
+        else:
+            rec = run_cell(arch, shape_name, mp,
+                           collect_roofline=not args.no_roofline,
+                           microbatches=args.microbatches)
+        status = "OK " if rec.get("ok") else "FAIL"
+        extra = ""
+        if rec.get("ok") and "memory" in rec:
+            extra = f" mem/dev={rec['memory']['total_nonaliased']/2**30:.2f}GiB"
+            if "roofline" in rec:
+                extra += f" bottleneck={rec['roofline']['bottleneck']}"
+        print(f"[{status}] {rec['arch']:24s} {str(rec['shape']):12s} "
+              f"{rec['mesh']:8s} compile={rec.get('compile_s', '-')}s{extra}",
+              flush=True)
+        if not rec.get("ok"):
+            print("       ", rec.get("error"), flush=True)
+        results.append(rec)
+        if args.out:  # write incrementally — long runs survive interrupts
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_fail = sum(1 for r in results if not r.get("ok"))
+    print(f"\n{len(results) - n_fail}/{len(results)} cells OK")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,99 @@
+"""Batched serving launcher: prefill + decode with a simple continuous
+batcher (slot-based, like vLLM's scheduler at its smallest).
+
+  python -m repro.launch.serve --preset lm-tiny --requests 12 --new 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.train import get_any_config
+from repro.models import init_params
+from repro.train import make_decode, make_prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Batcher:
+    """Fixed-slot continuous batching: new requests join as slots free."""
+
+    def __init__(self, cfg, params, n_slots: int, max_seq: int):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.prefill = jax.jit(make_prefill(cfg, max_seq))
+        self.decode = jax.jit(make_decode(cfg))
+        self.slots: List[Optional[Request]] = [None] * n_slots
+
+    def serve(self, requests: List[Request]) -> Dict[int, List[int]]:
+        queue = list(requests)
+        results: Dict[int, List[int]] = {}
+        # simplest correct policy: group requests into slot-sized waves with
+        # same prompt length (pad), prefill the wave, decode until done
+        while queue:
+            wave = queue[:self.n_slots]
+            queue = queue[self.n_slots:]
+            plen = max(len(r.prompt) for r in wave)
+            toks = np.zeros((len(wave), plen), np.int32)
+            for i, r in enumerate(wave):
+                toks[i, -len(r.prompt):] = r.prompt  # left-pad
+            cache, last = self.prefill(self.params,
+                                       {"tokens": jnp.asarray(toks)})
+            tok = jnp.argmax(last, -1).astype(jnp.int32)
+            n_new = max(r.max_new for r in wave)
+            for step in range(n_new):
+                for i, r in enumerate(wave):
+                    if len(r.out) < r.max_new:
+                        r.out.append(int(tok[i]))
+                pos = jnp.full((len(wave),), plen + step, jnp.int32)
+                logits, cache = self.decode(self.params, cache, tok, pos)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            for r in wave:
+                r.done = True
+                results[r.rid] = r.out
+        return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="lm-tiny")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+    cfg = get_any_config(args.preset)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 12,
+                                        dtype=np.int32),
+                    max_new=args.new)
+            for i in range(args.requests)]
+    b = Batcher(cfg, params, n_slots=args.slots,
+                max_seq=12 + args.new + 4)
+    t0 = time.perf_counter()
+    results = b.serve(reqs)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(v) for v in results.values())
+    print(f"served {len(results)} requests, {n_tok} tokens "
+          f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+    assert all(len(v) == args.new for v in results.values())
+
+
+if __name__ == "__main__":
+    main()

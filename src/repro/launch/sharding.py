@@ -1,0 +1,230 @@
+"""Sharding policy: parameter/optimizer/batch/cache PartitionSpecs.
+
+Strategy (Megatron-style TP + FSDP, standard at 256+ chips):
+  * big 2-D matrices: TP-shard the larger of the last two dims over
+    "model"; FSDP-shard the other over "data" (so params/optimizer scale
+    with the full chip count, not just TP degree);
+  * expert tensors (".../moe/{gate,up,down}", rank>=3): expert dim over
+    "model" (EP) + FSDP on the feature dim;
+  * embeddings/heads: vocab over "model" when divisible, else hidden;
+  * small params (< 2^22 elements in the trailing two dims): replicated —
+    sharding them buys nothing and costs collectives;
+  * int8 optimizer states (blocked (nb, 128)): block dim over every mesh
+    axis that divides it;
+  * batch over ("pod","data"); decode caches: heads over "model" when
+    divisible else sequence over "model" (context-parallel decode), batch
+    over data axes when divisible else sequence again.
+
+Leading stacked-layer dims are never sharded (they are scan axes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+SMALL = 1 << 22
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh,
+                fsdp: bool = True) -> P:
+    nd = len(shape)
+    model_n = mesh.shape.get("model", 1)
+    fs_axes = dp_axes(mesh)              # ("pod","data") on the multi-pod
+    fs_n = math.prod(mesh.shape[a] for a in fs_axes)
+    none = (None,) * nd
+
+    def full(*trailing):
+        return P(*((None,) * (nd - len(trailing)) + trailing))
+
+    def fs_for(dim):
+        return fs_axes if (fsdp and dim % fs_n == 0) else None
+
+    base = path.rsplit("/", 1)[-1]
+    # --- embeddings / heads ---
+    if base in ("embed", "lm_head") and nd == 2:
+        v, d = shape
+        if v % model_n == 0:
+            return P("model", fs_for(d))
+        if d % model_n == 0:
+            return P(None, "model")
+        return P(None, None)
+    # --- expert tensors: weight-gathered MoE (EXPERIMENTS.md §Perf) ---
+    # EP-sharding the expert dim forces token scatter/gather across the
+    # "model" axis, which GSPMD lowers to TB-scale all-reduces; instead the
+    # experts are FSDP-sharded over BOTH axes and all-gathered per layer
+    # (~1 GB), keeping dispatch/combine token-local.
+    if "/moe/" in path and base in ("gate", "up", "down") and nd >= 3:
+        e, d0, d1 = shape[-3], shape[-2], shape[-1]
+        ep = "model" if e % model_n == 0 else None
+        if fsdp and d0 % fs_n == 0:
+            return full(ep, fs_axes, None)
+        return full(ep, None, None)
+    if nd < 2:
+        return P(*none)
+    d0, d1 = shape[-2], shape[-1]
+    if d0 * d1 < SMALL:
+        return P(*none)
+    # --- generic matrices: TP on larger trailing dim, FSDP on the other ---
+    if d1 >= d0 and d1 % model_n == 0:
+        return full(fs_for(d0), "model")
+    if d0 % model_n == 0:
+        return full("model", fs_for(d1))
+    if d1 % model_n == 0:
+        return full(fs_for(d0), "model")
+    return P(*none)
+
+
+def params_pspecs(abstract_params, mesh, fsdp: bool = True):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = [param_pspec(_path_str(p), leaf.shape, mesh, fsdp)
+             for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_pspecs(abstract_opt, param_specs, mesh):
+    """Optimizer-state specs. f32 m/v mirror the param spec. Int8 states are
+    shape-preserving (see optim/quantized.py): q mirrors the param spec
+    exactly; its per-channel scale (last dim == 1) mirrors all but the last
+    axis."""
+
+    def _lookup(tree, path):
+        node = tree
+        for p in path:
+            key = getattr(p, "key", getattr(p, "idx", None))
+            try:
+                node = node[key]
+            except (KeyError, TypeError, IndexError):
+                return None
+        return node if isinstance(node, P) else None
+
+    def one(branch):
+        def map_fn(path, leaf):
+            last = str(getattr(path[-1], "key", path[-1])) if path else ""
+            if last in ("q", "scale"):
+                pspec = _lookup(param_specs, path[:-1])
+                if pspec is None:
+                    return P(*((None,) * len(leaf.shape)))
+                if last == "q":
+                    return pspec
+                # scale: param spec with the last axis unsharded (size 1)
+                entries = list(pspec) + [None] * (len(leaf.shape)
+                                                  - len(pspec))
+                entries = entries[:len(leaf.shape)]
+                if entries:
+                    entries[-1] = None
+                return P(*entries)
+            pspec = _lookup(param_specs, path)
+            return pspec if pspec is not None else \
+                P(*((None,) * len(leaf.shape)))
+        return jax.tree_util.tree_map_with_path(map_fn, branch)
+
+    return {
+        "m": one(abstract_opt["m"]),
+        "v": one(abstract_opt["v"]),
+        "count": P(),
+    }
+
+
+def batch_pspecs(cfg, shape_kind: str, batch_shapes: Dict[str, Tuple[int, ...]],
+                 mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    dp_n = math.prod(mesh.shape[a] for a in dp)
+    out = {}
+    for name, shp in batch_shapes.items():
+        if name == "positions" and len(shp) == 3:      # (3, B, S)
+            out[name] = P(None, dp if shp[1] % dp_n == 0 else None, None)
+        elif name in ("tokens", "labels", "loss_mask"):
+            out[name] = P(dp if shp[0] % dp_n == 0 else None,
+                          *((None,) * (len(shp) - 1)))
+        elif name in ("frames", "inputs_embeds", "enc_out"):
+            out[name] = P(dp if shp[0] % dp_n == 0 else None,
+                          *((None,) * (len(shp) - 1)))
+        elif name in ("token", "pos"):                  # decode scalars (B,)
+            out[name] = P(dp if shp[0] % dp_n == 0 else None)
+        else:
+            out[name] = P(*((None,) * len(shp)))
+    return out
+
+
+def cache_pspec(path: str, shape: Tuple[int, ...], cfg, mesh) -> P:
+    """KV/SSM cache sharding by leaf name (see module docstring)."""
+    dp = dp_axes(mesh)
+    dp_n = math.prod(mesh.shape[a] for a in dp)
+    model_n = mesh.shape.get("model", 1)
+    nd = len(shape)
+    base = path.rsplit("/", 1)[-1]
+    spec = [None] * nd
+
+    def set_ax(i, ax):
+        spec[i] = ax
+
+    if base in ("k", "v"):          # (..., B, S, Hkv, Dh)
+        bi, si, hi = nd - 4, nd - 3, nd - 2
+        heads = shape[hi]
+        if shape[bi] % dp_n == 0 and shape[bi] > 1:
+            set_ax(bi, dp)
+        if heads % model_n == 0:
+            set_ax(hi, "model")
+            if spec[bi] is None and shape[si] % dp_n == 0:
+                set_ax(si, dp)
+        elif shape[si] % model_n == 0:
+            set_ax(si, "model")
+            if spec[bi] is None and shape[si] % (dp_n * model_n) == 0:
+                set_ax(si, dp + ("model",))
+    elif base in ("c_kv", "k_pe"):  # (..., B, S, r)
+        bi, si = nd - 3, nd - 2
+        if shape[bi] % dp_n == 0 and shape[bi] > 1:
+            set_ax(bi, dp)
+            if shape[si] % model_n == 0:
+                set_ax(si, "model")
+        elif shape[si] % (dp_n * model_n) == 0:
+            set_ax(si, dp + ("model",))
+        elif shape[si] % model_n == 0:
+            set_ax(si, "model")
+    elif base == "conv":            # (..., B, di, K-1)
+        bi, di = nd - 3, nd - 2
+        if shape[bi] % dp_n == 0 and shape[bi] > 1:
+            set_ax(bi, dp)
+            if shape[di] % model_n == 0:
+                set_ax(di, "model")
+        elif shape[di] % (dp_n * model_n) == 0:
+            set_ax(di, dp + ("model",))
+        elif shape[di] % model_n == 0:
+            set_ax(di, "model")
+    elif base == "h":
+        # mamba1 (..., B, di, st) / mamba2 (..., B, H, P, st)
+        m2 = cfg.ssm_variant == "mamba2" or cfg.family == "hybrid"
+        bi = nd - 4 if m2 else nd - 3
+        ci = nd - 3 if m2 else nd - 2   # H or di
+        if shape[bi] % dp_n == 0 and shape[bi] > 1:
+            set_ax(bi, dp)
+            if shape[ci] % model_n == 0:
+                set_ax(ci, "model")
+        elif shape[ci] % (dp_n * model_n) == 0:
+            set_ax(ci, dp + ("model",))
+        elif shape[ci] % model_n == 0:
+            set_ax(ci, "model")
+    return P(*spec)
+
+
+def cache_pspecs(abstract_cache, cfg, mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_cache)
+    specs = [cache_pspec(_path_str(p), leaf.shape, cfg, mesh)
+             for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_named(tree_of_pspecs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

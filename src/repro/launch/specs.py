@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+`input_specs(cfg, shape)` builds the abstract batch for a (arch x shape)
+cell; modality frontends are stubs per the assignment: audio supplies
+frame embeddings, vision supplies 3-D M-RoPE positions (patch embeddings
+ride through `tokens` + positions for shape purposes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import abstract_params, init_cache
+from repro.optim import get_optimizer
+
+S = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b = shape.global_batch
+    s = shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": S((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["positions"] = S((3, b, s), jnp.int32)
+        if cfg.family == "encdec":
+            # stub audio frontend: precomputed frame embeddings, 1 frame/token
+            batch["frames"] = S((b, s, cfg.d_model), jnp.float32)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    batch = {"token": S((b,), jnp.int32), "pos": S((b,), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["enc_out"] = S((b, s, cfg.d_model), jnp.float32)
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+def abstract_state(cfg: ModelConfig):
+    """Abstract {params, opt, step} for the train dry-run."""
+    params = abstract_params(cfg)
+    opt_init, _ = get_optimizer(cfg.optimizer)
+    opt = jax.eval_shape(lambda p: opt_init(p), params)
+    return {"params": params, "opt": opt,
+            "step": S((), jnp.int32)}
+
+
+def pick_microbatches(cfg: ModelConfig, shape: ShapeSpec, dp_total: int,
+                      act_budget_bytes: float = 1.2e9) -> int:
+    """Split the per-device batch so scanned-layer activation stash fits.
+
+    Per-layer stash ~= B_loc * S * d_model * 2 bytes (bf16 residual stream,
+    remat recomputes the rest); budget it against ~5 GB of the 16 GB HBM.
+    """
+    b_loc = max(1, shape.global_batch // dp_total)
+    n_scan = cfg.n_layers
+    stash = b_loc * shape.seq_len * cfg.d_model * 2 * n_scan
+    mb = 1
+    while stash / mb > act_budget_bytes and mb < b_loc:
+        mb *= 2
+    return min(mb, b_loc)

@@ -1,0 +1,6 @@
+from repro.models.model import (abstract_params, forward, init_cache,
+                                init_params, param_count,
+                                param_count_from_shapes)
+
+__all__ = ["abstract_params", "forward", "init_cache", "init_params",
+           "param_count", "param_count_from_shapes"]

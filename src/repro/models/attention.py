@@ -1,0 +1,343 @@
+"""Attention variants: GQA (flash-style chunked), MLA (DeepSeek compressed
+KV with absorbed decode), cross-attention, qk-norm, RoPE/M-RoPE.
+
+Memory discipline: training/prefill self-attention never materializes the
+(S, S) score matrix — an online-softmax double scan over (q_chunk, kv_chunk)
+tiles keeps the working set at O(S * chunk) like flash attention. Decode
+attends over the cache directly (Sq = 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shard_hints as hints
+from repro.models.layers import (apply_mrope, apply_rope, rms_norm,
+                                 truncnorm)
+
+NEG_INF = -1e30
+
+
+# =========================== flash self-attention ===========================
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    scale: float, causal: bool, q_chunk: int = 1024,
+                    kv_chunk: int = 1024) -> jnp.ndarray:
+    """q: (B, Sq, Hkv, G, Dk); k: (B, Skv, Hkv, Dk); v: (B, Skv, Hkv, Dv).
+    Aligned self-attention (query i attends keys <= i + Skv - Sq).
+    Returns (B, Sq, Hkv, G, Dv)."""
+    b, sq, hkv, g, dk = q.shape
+    skv, dv = k.shape[1], v.shape[-1]
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    assert sq % qc == 0 and skv % kc == 0, (sq, qc, skv, kc)
+    nq, nk = sq // qc, skv // kc
+    offset = skv - sq  # queries are the tail of the kv sequence
+
+    qr = q.reshape(b, nq, qc, hkv, g, dk)
+    kr = k.reshape(b, nk, kc, hkv, dk)
+    vr = v.reshape(b, nk, kc, hkv, dv)
+
+    def one_q_chunk(qi, qblk):
+        # qblk: (B, qc, Hkv, G, Dk)
+        q_idx = qi * qc + jnp.arange(qc) + offset
+
+        def kv_body(carry, inputs):
+            m, l, acc = carry
+            ki, kblk, vblk = inputs
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                k_idx = ki * kc + jnp.arange(kc)
+                mask = q_idx[:, None] >= k_idx[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qc, dv), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (ks, jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.transpose(out, (0, 3, 1, 2, 4))  # (B, qc, Hkv, G, Dv)
+
+    # Remat per q-chunk: without this, differentiating through the online-
+    # softmax scan saves EVERY (q, kv) score tile — the full S x S x H f32
+    # attention matrix per layer (3.5 GiB/layer/device at arctic scale).
+    # With it, backward recomputes one q-stripe at a time.
+    one_q_chunk = jax.checkpoint(one_q_chunk)
+    outs = jax.lax.map(lambda args: one_q_chunk(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, hkv, g, dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_pos: jnp.ndarray, *,
+                     scale: float) -> jnp.ndarray:
+    """Single-token attention over the cache.
+    q: (B, 1, Hkv, G, Dk); caches: (B, S, Hkv, D*); cache_pos: (B,) current
+    write position (attend to <= cache_pos)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    k_idx = jnp.arange(k_cache.shape[1])
+    mask = k_idx[None, :] <= cache_pos[:, None]          # (B, S)
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(q.dtype)
+
+
+# ================================ GQA layer =================================
+def init_gqa(key, cfg) -> Dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": truncnorm(ks[0], (d, h * dh), s, cfg.param_dtype),
+        "wk": truncnorm(ks[1], (d, hkv * dh), s, cfg.param_dtype),
+        "wv": truncnorm(ks[2], (d, hkv * dh), s, cfg.param_dtype),
+        "wo": truncnorm(ks[3], (h * dh, d), (h * dh) ** -0.5,
+                        cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), cfg.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((dh,), cfg.param_dtype)
+    return p
+
+
+def gqa_forward(params: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg, cache: Optional[Dict] = None,
+                cache_pos: Optional[jnp.ndarray] = None,
+                q_chunk: int = 1024, kv_chunk: int = 1024,
+                causal: bool = True
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B, S, D). Train/prefill when cache is None or being filled;
+    decode when S == 1 and cache is given. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    dt = x.dtype
+
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(b, s, hkv, g, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+
+    if cfg.rope_type == "mrope":
+        q = apply_mrope(q.reshape(b, s, hkv * g, dh), positions,
+                        cfg.rope_theta, cfg.mrope_sections
+                        ).reshape(b, s, hkv, g, dh)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q.reshape(b, s, hkv * g, dh), positions,
+                       cfg.rope_theta).reshape(b, s, hkv, g, dh)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    scale = dh ** -0.5
+    new_cache = None
+    if cache is not None and s == 1:
+        # decode: write (k, v) at cache_pos, attend over cache
+        bidx = jnp.arange(b)
+        kc = cache["k"].at[bidx, cache_pos].set(k[:, 0])
+        vc = cache["v"].at[bidx, cache_pos].set(v[:, 0])
+        out = decode_attention(q, kc, vc, cache_pos, scale=scale)
+        new_cache = {"k": kc, "v": vc}
+        out = out.reshape(b, s, h * dh)
+    else:
+        # expand KV heads to query heads: clean head-TP over "model" even
+        # when n_kv_heads < TP degree (the cache still stores hkv heads);
+        # pad heads up to the TP degree when they don't divide (hillclimb
+        # #2 in EXPERIMENTS.md §Perf — kills 16x attention replication)
+        hp = hints.padded_heads(h)
+        pad = hp - h
+        q4 = q.reshape(b, s, h, dh)
+        k_exp = jnp.repeat(k, g, axis=2)
+        v_exp = jnp.repeat(v, g, axis=2)
+        if pad:
+            zeros = jnp.zeros((b, s, pad, dh), q4.dtype)
+            q4 = jnp.concatenate([q4, zeros], axis=2)
+            k_exp = jnp.concatenate([k_exp, zeros], axis=2)
+            v_exp = jnp.concatenate([v_exp, zeros], axis=2)
+        q4 = hints.bshd(q4)
+        k_exp = hints.bshd(k_exp)
+        v_exp = hints.bshd(v_exp)
+        out = flash_attention(q4[:, :, :, None, :], k_exp, v_exp,
+                              scale=scale, causal=causal,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+        out = hints.bshd(out[:, :, :, 0, :])
+        if pad:
+            out = out[:, :, :h, :]
+        out = out.reshape(b, s, h * dh)
+        if cache is not None:  # prefill into cache
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": kc, "v": vc}
+    return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dt)), new_cache
+
+
+def init_gqa_cache(cfg, batch: int, max_seq: int, dtype) -> Dict:
+    return {
+        "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+# ============================ cross-attention ===============================
+def init_cross(key, cfg) -> Dict:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": truncnorm(ks[0], (d, h * dh), s, cfg.param_dtype),
+        "wk": truncnorm(ks[1], (d, h * dh), s, cfg.param_dtype),
+        "wv": truncnorm(ks[2], (d, h * dh), s, cfg.param_dtype),
+        "wo": truncnorm(ks[3], (h * dh, d), (h * dh) ** -0.5,
+                        cfg.param_dtype),
+    }
+
+
+def cross_forward(params: Dict, x: jnp.ndarray, enc: jnp.ndarray, cfg,
+                  kv_chunk: int = 1024) -> jnp.ndarray:
+    """x: (B, S, D) decoder side; enc: (B, Se, D) encoder output."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    dt = x.dtype
+    q = hints.bshd(jnp.einsum("bsd,de->bse", x, params["wq"].astype(dt)
+                              ).reshape(b, s, h, dh))[:, :, :, None, :]
+    k = hints.bshd(jnp.einsum("bsd,de->bse", enc, params["wk"].astype(dt)
+                              ).reshape(b, -1, h, dh))
+    v = hints.bshd(jnp.einsum("bsd,de->bse", enc, params["wv"].astype(dt)
+                              ).reshape(b, -1, h, dh))
+    out = flash_attention(q, k, v, scale=dh ** -0.5, causal=False,
+                          q_chunk=min(1024, s), kv_chunk=kv_chunk)
+    out = out.reshape(b, s, h * dh)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dt))
+
+
+# ================================ MLA layer =================================
+def init_mla(key, cfg) -> Dict:
+    d, h = cfg.d_model, cfg.n_heads
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        "wq": truncnorm(ks[0], (d, h * (dn + dr)), s, cfg.param_dtype),
+        "w_dkv": truncnorm(ks[1], (d, r + dr), s, cfg.param_dtype),
+        "kv_norm": jnp.ones((r,), cfg.param_dtype),
+        "w_uk": truncnorm(ks[2], (h, r, dn), r ** -0.5, cfg.param_dtype),
+        "w_uv": truncnorm(ks[3], (h, r, dv), r ** -0.5, cfg.param_dtype),
+        "wo": truncnorm(ks[4], (h * dv, d), (h * dv) ** -0.5,
+                        cfg.param_dtype),
+    }
+
+
+def mla_forward(params: Dict, x: jnp.ndarray, positions: jnp.ndarray, cfg,
+                cache: Optional[Dict] = None,
+                cache_pos: Optional[jnp.ndarray] = None,
+                q_chunk: int = 1024, kv_chunk: int = 1024
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """DeepSeek-V2 Multi-head Latent Attention.
+
+    Cache holds only (c_kv: (B, S, r), k_pe: (B, S, dr)) — the compressed
+    latent — cutting decode KV traffic by ~(h*(dn+dv))/(r+dr). Decode uses
+    the absorbed formulation (q projected into latent space) so per-token
+    work is O(r) per head, never materializing per-head K/V.
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    r, dr, dn, dv = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                     cfg.v_head_dim)
+    dt = x.dtype
+    scale = (dn + dr) ** -0.5
+
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(dt)
+                   ).reshape(b, s, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,de->bse", x, params["w_dkv"].astype(dt))
+    c_kv, k_pe = dkv[..., :r], dkv[..., r:]
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(k_pe.reshape(b, s, 1, dr), positions,
+                      cfg.rope_theta).reshape(b, s, dr)
+
+    new_cache = None
+    if cache is not None and s == 1:
+        bidx = jnp.arange(b)
+        ckv_c = cache["c_kv"].at[bidx, cache_pos].set(c_kv[:, 0])
+        kpe_c = cache["k_pe"].at[bidx, cache_pos].set(k_pe[:, 0])
+        new_cache = {"c_kv": ckv_c, "k_pe": kpe_c}
+        # absorbed decode: q_c = q_nope @ w_uk -> latent space
+        q_c = jnp.einsum("bqhn,hrn->bqhr", q_nope,
+                         params["w_uk"].astype(dt))
+        s_lat = jnp.einsum("bqhr,bkr->bhqk", q_c, ckv_c,
+                           preferred_element_type=jnp.float32)
+        s_pe = jnp.einsum("bqhe,bke->bhqk", q_pe, kpe_c,
+                          preferred_element_type=jnp.float32)
+        att = (s_lat + s_pe) * scale
+        k_idx = jnp.arange(ckv_c.shape[1])
+        mask = k_idx[None, :] <= cache_pos[:, None]
+        att = jnp.where(mask[:, None, None, :], att, NEG_INF)
+        p = jax.nn.softmax(att, axis=-1)
+        ctx_c = jnp.einsum("bhqk,bkr->bqhr", p.astype(dt), ckv_c,
+                           preferred_element_type=jnp.float32).astype(dt)
+        ctx = jnp.einsum("bqhr,hrv->bqhv", ctx_c, params["w_uv"].astype(dt))
+    else:
+        # train/prefill: materialize per-head K/V from the latent
+        k_nope = jnp.einsum("bkr,hrn->bkhn", c_kv, params["w_uk"].astype(dt))
+        v = hints.bshd(
+            jnp.einsum("bkr,hrv->bkhv", c_kv, params["w_uv"].astype(dt)))
+        k_full = hints.bshd(jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, s, h, dr))],
+            axis=-1))
+        q_full = hints.bshd(jnp.concatenate([q_nope, q_pe], axis=-1))
+        ctx = flash_attention(q_full[:, :, :, None, :], k_full, v,
+                              scale=scale, causal=True,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk
+                              )[:, :, :, 0, :]
+        ctx = hints.bshd(ctx)
+        if cache is not None:
+            ckv_c = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0))
+            kpe_c = jax.lax.dynamic_update_slice(
+                cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, 0, 0))
+            new_cache = {"c_kv": ckv_c, "k_pe": kpe_c}
+
+    out = ctx.reshape(b, s, h * dv)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dt)), new_cache
+
+
+def init_mla_cache(cfg, batch: int, max_seq: int, dtype) -> Dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype),
+    }

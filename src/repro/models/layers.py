@@ -1,0 +1,109 @@
+"""Shared neural net layers: norms, rotary embeddings, MLPs, initializers.
+
+Parameters are plain dict pytrees; every forward is a pure function. Compute
+runs in cfg.dtype (bf16 on TPU), accumulations and norms in f32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def truncnorm(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+# ---- rotary -----------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Qwen2-VL multimodal rotary: positions (3, ..., S) for t/h/w streams;
+    sections split Dh/2 frequency slots among the three streams."""
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    # stream id per frequency slot
+    stream = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=dh // 2)    # (Dh/2,)
+    # pick positions per slot: (..., S, Dh/2)
+    pos = jnp.take_along_axis(
+        jnp.moveaxis(positions, 0, -1).astype(jnp.float32),  # (..., S, 3)
+        jnp.broadcast_to(stream, positions.shape[1:] + (dh // 2,)),
+        axis=-1)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---- MLP --------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "gate": truncnorm(k1, (d_model, d_ff), s_in, dtype),
+        "up": truncnorm(k2, (d_model, d_ff), s_in, dtype),
+        "down": truncnorm(k3, (d_ff, d_model), s_out, dtype),
+    }
+
+
+def mlp(params: Dict, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    """SwiGLU MLP."""
+    from repro.models import shard_hints as hints
+    xg = jnp.einsum("...d,df->...f", x, params["gate"].astype(compute_dtype))
+    xu = jnp.einsum("...d,df->...f", x, params["up"].astype(compute_dtype))
+    h = jax.nn.silu(xg.astype(jnp.float32)).astype(compute_dtype) * xu
+    h = hints.bsf(h)
+    return jnp.einsum("...f,fd->...d", h, params["down"].astype(compute_dtype))
+
+
+def init_embed(key, vocab: int, d_model: int, dtype) -> jnp.ndarray:
+    return truncnorm(key, (vocab, d_model), 1.0, dtype)
+
+
+def unembed(x: jnp.ndarray, embed_or_head: jnp.ndarray, compute_dtype
+            ) -> jnp.ndarray:
+    """Logits in f32 (loss numerics)."""
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype),
+                      embed_or_head.astype(compute_dtype)
+                      ).astype(jnp.float32)

@@ -1,0 +1,57 @@
+"""Model facade: config -> init / forward / cache across all families."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+
+
+def init_params(key, cfg) -> Dict:
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg)
+    return transformer.init_params(key, cfg)
+
+
+def init_cache(cfg, batch: int, max_seq: int) -> Dict:
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_seq)
+    return transformer.init_cache(cfg, batch, max_seq)
+
+
+def forward(params: Dict, cfg, batch: Dict[str, jnp.ndarray],
+            cache: Optional[Dict] = None,
+            cache_pos: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """batch keys by family:
+      decoder-only: tokens (B,S) [vlm: + inputs_embeds/positions optional]
+      encdec: frames (B,Se,D) + tokens (B,S)  (frames = stub frontend)
+    Returns (logits, new_cache, aux_loss)."""
+    if cfg.family == "encdec":
+        enc_out = batch.get("enc_out")
+        if enc_out is None:
+            enc_out = encdec.encode(params, cfg, batch["frames"])
+        logits, new_cache = encdec.decode_step(params, cfg, batch["tokens"],
+                                               enc_out, cache, cache_pos)
+        return logits, new_cache, jnp.float32(0.0)
+    return transformer.forward(
+        params, cfg, tokens=batch.get("tokens"),
+        inputs_embeds=batch.get("inputs_embeds"),
+        positions=batch.get("positions"), cache=cache, cache_pos=cache_pos)
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+
+
+def param_count_from_shapes(shapes) -> int:
+    import numpy as np
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+
+def abstract_params(cfg, seed: int = 0):
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))

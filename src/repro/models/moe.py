@@ -1,0 +1,143 @@
+"""Mixture-of-Experts blocks: top-k routing with capacity, scatter dispatch.
+
+Dispatch strategy (TPU): no (tokens, E, C) one-hot einsum — at DeepSeek/
+Arctic scale that tensor is TBs. Instead tokens are ranked within their
+chosen expert via an argsort over the (N*k) assignments (the same sort-
+group-by idiom as the causal engine), then scatter-added into a dense
+(E*C, d) buffer that is expert-sharded (EP over the "model" mesh axis);
+GSPMD lowers the token->expert movement to an all-to-all. Over-capacity
+tokens drop (classic Switch semantics, capacity_factor controls the rate).
+
+Variants covered: plain top-k (arctic), shared experts + normalized top-k
+(deepseek), dense-residual-parallel-MoE (arctic).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shard_hints as hints
+from repro.models.layers import init_mlp, mlp, truncnorm
+
+
+def init_moe(key, cfg) -> Dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    pd = cfg.param_dtype
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": truncnorm(ks[0], (d, e), s_in, jnp.float32),
+        "gate": truncnorm(ks[1], (e, d, f), s_in, pd),
+        "up": truncnorm(ks[2], (e, d, f), s_in, pd),
+        "down": truncnorm(ks[3], (e, f, d), s_out, pd),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, cfg.n_shared_experts * f, pd)
+    if cfg.dense_residual:
+        p["dense"] = init_mlp(ks[5], d, cfg.d_ff, pd)
+    return p
+
+
+def _rank_within_expert(expert_ids: jnp.ndarray, n_tokens_k: int
+                        ) -> jnp.ndarray:
+    """expert_ids: (N*k,) -> rank of each assignment within its expert
+    (0-based, ordered by flat assignment index). Sort-based, O(n log n)."""
+    order = jnp.argsort(expert_ids, stable=True)
+    sorted_e = expert_ids[order]
+    idx = jnp.arange(n_tokens_k, dtype=jnp.int32)
+    new = jnp.concatenate([jnp.ones((1,), bool),
+                           sorted_e[1:] != sorted_e[:-1]])
+    run_start = jax.lax.cummax(jnp.where(new, idx, 0))
+    rank_sorted = idx - run_start
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    return rank
+
+
+def moe_forward(params: Dict, x: jnp.ndarray, cfg
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss). Router math in f32."""
+    b, s, d = x.shape
+    e, k, f = cfg.n_experts, cfg.moe_top_k, cfg.moe_d_ff
+    dt = x.dtype
+    n = b * s
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                 # (N, E)
+    top_p, top_i = jax.lax.top_k(probs, k)                  # (N, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True),
+                                1e-9)                       # normalized
+
+    if s == 1:
+        # decode: dropless (capacity = all tokens) — dropping a live request's
+        # token at decode is a correctness bug, not a load-balance tweak.
+        capacity = n
+    else:
+        capacity = max(1, int(cfg.moe_capacity_factor * n * k / e))
+    flat_e = top_i.reshape(-1).astype(jnp.int32)            # (N*k,)
+    rank = _rank_within_expert(flat_e, n * k)
+    keep = rank < capacity
+    slot = jnp.clip(flat_e * capacity + rank, 0, e * capacity - 1)
+
+    token_of = jnp.arange(n * k, dtype=jnp.int32) // k
+    # Gather-based dispatch: scatter only the (N*k,) int32 slot->token map,
+    # then move activations with a gather. GSPMD lowers the naive data
+    # scatter (zeros.at[slot].add(x)) to full-buffer all-reduces — measured
+    # 1.8 TB/device/step on deepseek-v2-lite; the gather formulation moves
+    # activation-sized all-gathers instead (EXPERIMENTS.md §Perf).
+    overflow_slot = e * capacity
+    slot_or_drop = jnp.where(keep, slot, overflow_slot)
+    slot_token = jnp.full((e * capacity + 1,), n, jnp.int32
+                          ).at[slot_or_drop].set(token_of)[:e * capacity]
+    if getattr(cfg, "moe_dispatch", "gather") == "scatter":
+        # naive baseline (kept for the §Perf ablation)
+        contrib = jnp.where(keep[:, None], xf[token_of], 0)
+        dispatched = jnp.zeros((e * capacity, d), dt).at[slot].add(
+            contrib.astype(dt))
+    else:
+        xf_pad = jnp.concatenate([xf.astype(dt), jnp.zeros((1, d), dt)],
+                                 axis=0)
+        dispatched = xf_pad[slot_token]
+    de = hints.expert_dispatch(dispatched.reshape(e, capacity, d))
+
+    hg = jnp.einsum("ecd,edf->ecf", de, params["gate"].astype(dt))
+    hu = jnp.einsum("ecd,edf->ecf", de, params["up"].astype(dt))
+    h = jax.nn.silu(hg.astype(jnp.float32)).astype(dt) * hu
+    out_e = hints.expert_dispatch(
+        jnp.einsum("ecf,efd->ecd", h, params["down"].astype(dt)))
+    out_flat = out_e.reshape(e * capacity, d)
+
+    if getattr(cfg, "moe_dispatch", "gather") == "scatter":
+        gathered = out_flat[slot]                           # (N*k, d)
+        w = (top_p.reshape(-1) * keep).astype(dt)
+        combined = jnp.einsum("nkd,nk->nd", gathered.reshape(n, k, d),
+                              w.reshape(n, k))
+    else:
+        # Combine by scattering slots back to (token-sharded) rows: the
+        # naive gather-by-token has a scatter-add backward over the expert-
+        # sharded buffer (same TB-scale all-reduce pathology as dispatch);
+        # the slot->token scatter works on (n, d)-sized token-aligned
+        # buffers whose backward is a gather (§Perf iteration 3).
+        w_flat = (top_p.reshape(-1) * keep).astype(jnp.float32)
+        w_slot = jnp.zeros((e * capacity + 1,), jnp.float32
+                           ).at[slot_or_drop].set(w_flat)[:e * capacity]
+        contrib_out = out_flat * w_slot[:, None].astype(dt)
+        combined = jnp.zeros((n + 1, d), dt
+                             ).at[slot_token].add(contrib_out)[:n]
+
+    # Switch-style load-balance auxiliary loss.
+    me = jnp.mean(probs, axis=0)                            # (E,)
+    assign = jnp.zeros((e,), jnp.float32).at[flat_e].add(
+        keep.astype(jnp.float32))
+    fe = assign / jnp.maximum(jnp.sum(assign), 1.0)
+    aux = e * jnp.sum(me * fe)
+
+    out = combined.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        out = out + mlp(params["shared"], x, dt)
+    if cfg.dense_residual:
+        out = out + mlp(params["dense"], x, dt)
+    return out, aux

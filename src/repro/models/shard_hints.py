@@ -1,0 +1,180 @@
+"""Activation sharding hints for GSPMD.
+
+Parameter shardings alone under-constrain GSPMD at 256+ devices: it can
+pick replicated layouts for attention intermediates inside scanned layers
+(observed: 40 GB/device of "involuntarily rematerialized" f32 activation
+temporaries). These hints pin the canonical layouts at layer boundaries:
+
+  residual stream (B, S, D)        -> batch over dp axes
+  q/k/v            (B, S, H, Dh)   -> batch over dp, heads over "model"
+                                      when H divides (else batch only —
+                                      the roofline flags the replication)
+  mlp hidden       (B, S, F)       -> batch over dp, F over "model"
+  moe dispatch     (E, C, D)       -> experts over "model"
+  logits           (B, S, V)       -> batch over dp, vocab over "model"
+
+The hints are process-global and OFF by default (smoke tests and the CPU
+engine never see them); launch code activates them under a mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+ALL_FEATURES = frozenset({"head_pad", "seq_par"})
+_STATE = {"dp": None, "sizes": None, "features": ALL_FEATURES}
+
+
+def set_hints(dp_axes: Tuple[str, ...], axis_sizes: dict, features=None):
+    """features: subset of ALL_FEATURES; None = all on. The perf hillclimb
+    toggles individual optimizations off to measure their contribution."""
+    _STATE["dp"] = tuple(dp_axes)
+    _STATE["sizes"] = dict(axis_sizes)
+    _STATE["features"] = (ALL_FEATURES if features is None
+                          else frozenset(features))
+
+
+def clear_hints():
+    _STATE["dp"] = None
+    _STATE["sizes"] = None
+    _STATE["features"] = ALL_FEATURES
+
+
+def has_feature(name: str) -> bool:
+    return name in _STATE["features"]
+
+
+@contextlib.contextmanager
+def hints(dp_axes: Tuple[str, ...], axis_sizes: dict, features=None):
+    set_hints(dp_axes, axis_sizes, features)
+    try:
+        yield
+    finally:
+        clear_hints()
+
+
+def _on() -> bool:
+    return _STATE["dp"] is not None
+
+
+def _dp_n() -> int:
+    return 1 if not _on() else \
+        int(__import__("math").prod(_STATE["sizes"][a] for a in _STATE["dp"]))
+
+
+def _model_n() -> int:
+    return 1 if not _on() else int(_STATE["sizes"].get("model", 1))
+
+
+def _constrain(x, spec):
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _batch_axes(b: int):
+    dp = _STATE["dp"]
+    return dp if (b % _dp_n() == 0 and b > 1) else None
+
+
+def bsd(x):
+    """Residual stream (B, S, D): batch over dp + SEQUENCE over "model"
+    (Megatron-style sequence parallelism — row-parallel matmul all-reduces
+    become reduce-scatter/all-gather pairs at half the wire bytes, and
+    norms/elementwise run on 1/TP of the tokens; hillclimb iteration 2)."""
+    if not _on():
+        return x
+    s = x.shape[1] if x.ndim >= 3 else 1
+    seq_ax = "model" if (has_feature("seq_par") and x.ndim >= 3 and s > 1
+                         and s % _model_n() == 0
+                         and s >= _model_n()) else None
+    return _constrain(x, P(_batch_axes(x.shape[0]), seq_ax, None))
+
+
+def bshd(x):
+    """Attention heads (B, S, H, Dh) (or (B, S, H, G, Dh) pre-expansion)."""
+    if not _on():
+        return x
+    h = x.shape[2]
+    head_ax = "model" if h % _model_n() == 0 and h >= _model_n() else None
+    spec = [None] * x.ndim
+    spec[0] = _batch_axes(x.shape[0])
+    spec[2] = head_ax
+    return _constrain(x, P(*spec))
+
+
+def bsf(x):
+    """MLP hidden (..., F): F over model."""
+    if not _on():
+        return x
+    f = x.shape[-1]
+    spec = [None] * x.ndim
+    spec[0] = _batch_axes(x.shape[0])
+    spec[-1] = "model" if f % _model_n() == 0 else None
+    return _constrain(x, P(*spec))
+
+
+def logits(x):
+    """(B, S, V): vocab over model when divisible."""
+    if not _on():
+        return x
+    v = x.shape[-1]
+    spec = [None] * x.ndim
+    spec[0] = _batch_axes(x.shape[0])
+    spec[-1] = "model" if v % _model_n() == 0 else None
+    return _constrain(x, P(*spec))
+
+
+def padded_heads(h: int) -> int:
+    """Heads padded up to the TP degree so attention shards cleanly.
+
+    28 query heads on a 16-way "model" axis cannot head-shard: GSPMD
+    replicates the whole attention (16x the score traffic AND compute per
+    device — measured useful_ratio 0.25 on qwen2-7b). Padding q/k/v with
+    4 zero heads (worth +14% attention FLOPs) makes every shard hold 2
+    heads. Zero-padded heads contribute zero output (v rows are zero)."""
+    if not _on() or not has_feature("head_pad"):
+        return h
+    m = _model_n()
+    if h % m == 0 or h < m:
+        return h
+    return ((h + m - 1) // m) * m
+
+
+def attn_chunks(b: int, s: int, h: int, tile_budget: float = 2.68e8
+                ) -> int:
+    """Flash q/kv chunk size bounding the f32 score tile to ~256 MB/device.
+
+    tile = b_loc * h_loc * chunk^2 * 4 bytes; heads divide over "model" only
+    when h % model == 0 (else every model shard holds all heads and the
+    chunk must shrink accordingly — arctic's 56 heads, qwen2's 28)."""
+    if not _on():
+        c = 1024
+    else:
+        b_loc = max(1, b // _dp_n()) if b % _dp_n() == 0 else b
+        h_loc = h // _model_n() if h % _model_n() == 0 else h
+        c = int((tile_budget / (4 * b_loc * max(h_loc, 1))) ** 0.5)
+    for cand in (1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= c and s % cand == 0:
+            return cand
+    return 1
+
+
+def nd(x):
+    """Flattened token tables (N, D): tokens over dp."""
+    if not _on():
+        return x
+    spec = [None] * x.ndim
+    spec[0] = _batch_axes(x.shape[0])
+    return _constrain(x, P(*spec))
+
+
+def expert_dispatch(x):
+    """(E, C, D): experts over model."""
+    if not _on():
+        return x
+    e = x.shape[0]
+    spec = [None] * x.ndim
+    spec[0] = "model" if e % _model_n() == 0 else None
+    return _constrain(x, P(*spec))

@@ -1,0 +1,299 @@
+"""State-space blocks: Mamba1 (selective scan) and Mamba2 (SSD dual form).
+
+TPU adaptation notes (see DESIGN.md): the CUDA selective-scan kernel does
+not port; instead
+  * Mamba1 trains/prefills with a CHUNKED associative scan — outer
+    `lax.scan` over sequence chunks carries the (B, d_inner, state) SSM
+    state so the (B, chunk, d_inner, state) discretized tensors are
+    transient; inside a chunk `lax.associative_scan` gives log-depth.
+  * Mamba2 uses the SSD dual form: intra-chunk attention-like matmuls
+    (MXU-friendly) + inter-chunk state recurrence.
+Decode is the O(1) recurrent update for both.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shard_hints as hints
+from repro.models.layers import rms_norm, truncnorm
+
+
+# ================================ Mamba 1 ===================================
+def mamba1_dt_rank(d_model: int) -> int:
+    return max(1, math.ceil(d_model / 16))
+
+
+def init_mamba1(key, cfg) -> Dict:
+    d, di, st, ck = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dtr = mamba1_dt_rank(d)
+    ks = jax.random.split(key, 6)
+    pd = cfg.param_dtype
+    s = d ** -0.5
+    A = jnp.broadcast_to(jnp.arange(1, st + 1, dtype=jnp.float32), (di, st))
+    return {
+        "in_proj": truncnorm(ks[0], (d, 2 * di), s, pd),
+        "conv_w": truncnorm(ks[1], (di, ck), ck ** -0.5, pd),
+        "conv_b": jnp.zeros((di,), pd),
+        "x_proj": truncnorm(ks[2], (di, dtr + 2 * st), di ** -0.5, pd),
+        "dt_proj": truncnorm(ks[3], (dtr, di), dtr ** -0.5, pd),
+        "dt_bias": jnp.full((di,), -4.6, pd),     # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(pd),
+        "D": jnp.ones((di,), pd),
+        "out_proj": truncnorm(ks[4], (di, d), di ** -0.5, pd),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, S, di); w: (di, K)."""
+    k = w.shape[1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i:i + x.shape[1], :].astype(jnp.float32) \
+            * w[:, i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mamba1_ssm_chunked(xc: jnp.ndarray, dt: jnp.ndarray, B: jnp.ndarray,
+                        C: jnp.ndarray, A: jnp.ndarray, D: jnp.ndarray,
+                        h0: jnp.ndarray, chunk: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Selective scan. xc/dt: (B, S, di); B/C: (B, S, st); A: (di, st);
+    h0: (B, di, st). Returns (y: (B, S, di), h_final)."""
+    b, s, di = xc.shape
+    st = B.shape[-1]
+    ch = min(chunk, s)
+    assert s % ch == 0
+    nc = s // ch
+
+    def chunk_body(h, blk):
+        xb, dtb, Bb, Cb = blk                      # (B, ch, ...)
+        dA = jnp.exp(dtb[..., None] * A)           # (B, ch, di, st)
+        dBx = (dtb * xb)[..., None] * Bb[:, :, None, :]
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        aa, bb = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+        hs = aa * h[:, None] + bb                  # (B, ch, di, st)
+        y = jnp.einsum("bcds,bcs->bcd", hs, Cb)
+        return hs[:, -1], y
+
+    xr = xc.astype(jnp.float32).reshape(b, nc, ch, di)
+    dtr = dt.astype(jnp.float32).reshape(b, nc, ch, di)
+    Br = B.astype(jnp.float32).reshape(b, nc, ch, st)
+    Cr = C.astype(jnp.float32).reshape(b, nc, ch, st)
+    h, ys = jax.lax.scan(
+        chunk_body, h0.astype(jnp.float32),
+        (jnp.moveaxis(xr, 1, 0), jnp.moveaxis(dtr, 1, 0),
+         jnp.moveaxis(Br, 1, 0), jnp.moveaxis(Cr, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di)
+    y = y + xc.astype(jnp.float32) * D
+    return y, h
+
+
+def mamba1_forward(params: Dict, x: jnp.ndarray, cfg,
+                   cache: Optional[Dict] = None,
+                   cache_pos: Optional[jnp.ndarray] = None,
+                   chunk: int = 256) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B, S, D). Decode when S == 1 and cache is given."""
+    b, s, d = x.shape
+    di, st, ck = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dtr = mamba1_dt_rank(cfg.d_model)
+    dt_ = x.dtype
+    xz = hints.bsf(jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_)))
+    xi, z = xz[..., :di], xz[..., di:]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if cache is not None and s == 1:
+        # decode: roll conv state
+        conv = cache["conv"]                              # (B, di, K-1)
+        window = jnp.concatenate([conv, xi[:, 0, :, None]], axis=-1)
+        xc = jnp.sum(window * params["conv_w"].astype(window.dtype)[None],
+                     axis=-1) + params["conv_b"].astype(window.dtype)
+        xc = jax.nn.silu(xc.astype(jnp.float32))          # (B, di)
+        proj = jnp.einsum("bd,de->be", xc.astype(dt_),
+                          params["x_proj"].astype(dt_))
+        dt_raw, Bv, Cv = (proj[..., :dtr], proj[..., dtr:dtr + st],
+                          proj[..., dtr + st:])
+        dtv = jax.nn.softplus(
+            jnp.einsum("br,rd->bd", dt_raw, params["dt_proj"].astype(dt_)
+                       ).astype(jnp.float32)
+            + params["dt_bias"].astype(jnp.float32))
+        dA = jnp.exp(dtv[..., None] * A)                  # (B, di, st)
+        h = cache["h"].astype(jnp.float32)
+        h = dA * h + (dtv * xc)[..., None] * Bv.astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, Cv.astype(jnp.float32))
+        y = y + xc * params["D"].astype(jnp.float32)
+        y = y[:, None, :]
+        new_cache = {"conv": window[..., 1:], "h": h.astype(cache["h"].dtype)}
+    else:
+        xc = jax.nn.silu(
+            _causal_conv(xi, params["conv_w"], params["conv_b"]
+                         ).astype(jnp.float32)).astype(dt_)
+        proj = jnp.einsum("bsd,de->bse", xc, params["x_proj"].astype(dt_))
+        dt_raw, Bv, Cv = (proj[..., :dtr], proj[..., dtr:dtr + st],
+                          proj[..., dtr + st:])
+        dtv = jax.nn.softplus(
+            jnp.einsum("bsr,rd->bsd", dt_raw, params["dt_proj"].astype(dt_)
+                       ).astype(jnp.float32)
+            + params["dt_bias"].astype(jnp.float32))
+        h0 = jnp.zeros((b, di, st), jnp.float32)
+        y, h = _mamba1_ssm_chunked(xc, dtv, Bv, Cv, A,
+                                   params["D"].astype(jnp.float32), h0,
+                                   chunk)
+        new_cache = None
+        if cache is not None:
+            window = jnp.moveaxis(xi[:, -(ck - 1):, :], 1, 2)  # (B, di, K-1)
+            new_cache = {"conv": window.astype(cache["conv"].dtype),
+                         "h": h.astype(cache["h"].dtype)}
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    y = hints.bsf(y.astype(dt_))
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(dt_))
+    return out, new_cache
+
+
+def init_mamba1_cache(cfg, batch: int, dtype) -> Dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_inner, cfg.ssm_conv - 1), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+# ================================ Mamba 2 ===================================
+def init_mamba2(key, cfg) -> Dict:
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_heads
+    ck = cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    pd = cfg.param_dtype
+    s = d ** -0.5
+    # in_proj -> [x (di), z (di), B (st), C (st), dt (h)]
+    return {
+        "in_proj": truncnorm(ks[0], (d, 2 * di + 2 * st + h), s, pd),
+        "conv_w": truncnorm(ks[1], (di, ck), ck ** -0.5, pd),
+        "conv_b": jnp.zeros((di,), pd),
+        "A_log": jnp.zeros((h,), pd),
+        "dt_bias": jnp.full((h,), -4.6, pd),
+        "D": jnp.ones((h,), pd),
+        "gate_norm": jnp.ones((di,), pd),
+        "out_proj": truncnorm(ks[2], (di, d), di ** -0.5, pd),
+    }
+
+
+def _ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, B: jnp.ndarray,
+                 C: jnp.ndarray, A: jnp.ndarray, h0: jnp.ndarray,
+                 chunk: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba2 SSD. x: (B, S, H, P); dt: (B, S, H); B/C: (B, S, st);
+    A: (H,) negative; h0: (B, H, P, st). Returns (y, h_final)."""
+    b, s, h, p = x.shape
+    st = B.shape[-1]
+    ch = min(chunk, s)
+    assert s % ch == 0
+    nc = s // ch
+    loga_full = (dt * A).reshape(b, nc, ch, h)             # log decay per step
+
+    def chunk_body(hprev, blk):
+        xb, dtb, Bb, Cb, la = blk                          # (B, ch, ...)
+        cum = jnp.cumsum(la, axis=1)                       # (B, ch, H)
+        # intra-chunk: scores[i,j] = C_i.B_j * exp(cum_i - cum_j) * dt_j, j<=i
+        qk = jnp.einsum("bis,bjs->bij", Cb, Bb)            # (B, ch, ch)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]    # (B, i, j, H)
+        iota = jnp.arange(ch)
+        causal = iota[:, None] >= iota[None, :]
+        L = jnp.where(causal[None, :, :, None],
+                      jnp.exp(jnp.minimum(decay, 0.0)), 0.0)
+        w = qk[..., None] * L * dtb[:, None, :, :]         # (B, i, j, H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xb)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bis,bhps,bih->bihp", Cb, hprev,
+                             jnp.exp(cum))
+        # state update
+        rem = cum[:, -1:, :] - cum                         # decay to chunk end
+        contrib = jnp.einsum("bjs,bjhp,bjh->bhps", Bb, xb,
+                             dtb * jnp.exp(rem))
+        h_new = hprev * jnp.exp(cum[:, -1])[:, :, None, None] + contrib
+        return h_new, y_intra + y_inter
+
+    xr = jnp.moveaxis(x.astype(jnp.float32).reshape(b, nc, ch, h, p), 1, 0)
+    dtr = jnp.moveaxis(dt.astype(jnp.float32).reshape(b, nc, ch, h), 1, 0)
+    Br = jnp.moveaxis(B.astype(jnp.float32).reshape(b, nc, ch, st), 1, 0)
+    Cr = jnp.moveaxis(C.astype(jnp.float32).reshape(b, nc, ch, st), 1, 0)
+    lar = jnp.moveaxis(loga_full, 1, 0)
+    hf, ys = jax.lax.scan(chunk_body, h0.astype(jnp.float32),
+                          (xr, dtr, Br, Cr, lar))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, hf
+
+
+def mamba2_forward(params: Dict, x: jnp.ndarray, cfg,
+                   cache: Optional[Dict] = None,
+                   cache_pos: Optional[jnp.ndarray] = None,
+                   chunk: int = 256) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    b, s, d = x.shape
+    di, st, hh, ck = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    p = di // hh
+    dt_ = x.dtype
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    xi = proj[..., :di]
+    z = proj[..., di:2 * di]
+    Bv = proj[..., 2 * di:2 * di + st]
+    Cv = proj[..., 2 * di + st:2 * di + 2 * st]
+    dt_raw = proj[..., 2 * di + 2 * st:]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))      # (H,)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))
+
+    if cache is not None and s == 1:
+        conv = cache["conv"]
+        window = jnp.concatenate([conv, xi[:, 0, :, None]], axis=-1)
+        xc = jnp.sum(window * params["conv_w"].astype(window.dtype)[None],
+                     axis=-1) + params["conv_b"].astype(window.dtype)
+        xc = jax.nn.silu(xc.astype(jnp.float32)).reshape(b, hh, p)
+        dtb = dtv[:, 0]                                    # (B, H)
+        a = jnp.exp(dtb * A)                               # (B, H)
+        h = cache["h"].astype(jnp.float32)                 # (B, H, P, st)
+        contrib = jnp.einsum("bs,bhp,bh->bhps",
+                             Bv[:, 0].astype(jnp.float32), xc, dtb)
+        h = h * a[:, :, None, None] + contrib
+        y = jnp.einsum("bs,bhps->bhp", Cv[:, 0].astype(jnp.float32), h)
+        y = y + xc * params["D"].astype(jnp.float32)[None, :, None]
+        y = y.reshape(b, 1, di)
+        new_cache = {"conv": window[..., 1:],
+                     "h": h.astype(cache["h"].dtype)}
+    else:
+        xc = jax.nn.silu(
+            _causal_conv(xi, params["conv_w"], params["conv_b"]
+                         ).astype(jnp.float32)).astype(dt_)
+        xh = xc.reshape(b, s, hh, p)
+        h0 = jnp.zeros((b, hh, p, st), jnp.float32)
+        y, hf = _ssd_chunked(xh, dtv, Bv, Cv, A, h0, chunk)
+        y = y + xh.astype(jnp.float32) \
+            * params["D"].astype(jnp.float32)[None, None, :, None]
+        y = y.reshape(b, s, di)
+        new_cache = None
+        if cache is not None:
+            window = jnp.moveaxis(xi[:, -(ck - 1):, :], 1, 2)
+            new_cache = {"conv": window.astype(cache["conv"].dtype),
+                         "h": hf.astype(cache["h"].dtype)}
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(dt_), params["gate_norm"], cfg.norm_eps)
+    y = hints.bsf(y)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(dt_))
+    return out, new_cache
+
+
+def init_mamba2_cache(cfg, batch: int, dtype) -> Dict:
+    p = cfg.d_inner // cfg.ssm_heads
+    return {
+        "conv": jnp.zeros((batch, cfg.d_inner, cfg.ssm_conv - 1), dtype),
+        "h": jnp.zeros((batch, cfg.ssm_heads, p, cfg.ssm_state),
+                       jnp.float32),
+    }

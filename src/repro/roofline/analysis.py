@@ -1,0 +1,139 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs_per_device / PEAK_BF16_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = wire_bytes_per_device / ICI_LINK_BW
+
+All terms are per-device seconds for ONE step; the bottleneck is the max.
+MODEL_FLOPS (6ND analytic) / HLO_FLOPs measures how much compiled compute
+is "useful" (remat and dispatch overheads push it below 1; per-device
+MODEL_FLOPS = 6ND / n_chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.roofline import hw
+from repro.roofline.hlo_cost import HloCostModel
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float                  # per device
+    hbm_bytes: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_total: float      # analytic, whole step, all devices
+    useful_ratio: float           # model_flops/device / hlo flops/device
+    memory_per_device: float      # bytes (from memory_analysis)
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.collective_bytes,
+            "coll_breakdown": self.collective_breakdown,
+            "model_flops_total": self.model_flops_total,
+            "useful_ratio": self.useful_ratio,
+            "mem_per_dev_bytes": self.memory_per_device,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D analytic step FLOPs (N = active params, D = tokens processed).
+    decode: D = batch (one token per sequence); train adds backward (3x)."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_param_count(cfg) -> float:
+    """Active params per token (MoE counts top-k + shared, not all)."""
+    d = cfg.d_model
+    v = cfg.vocab_size
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    per_layer = 0.0
+    if cfg.attn_type == "gqa":
+        hd = cfg.head_dim
+        per_layer += d * cfg.n_heads * hd * 2          # wq, wo
+        per_layer += d * cfg.n_kv_heads * hd * 2       # wk, wv
+    elif cfg.attn_type == "mla":
+        r, dr, dn, dv = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                         cfg.v_head_dim)
+        per_layer += d * cfg.n_heads * (dn + dr)
+        per_layer += d * (r + dr)
+        per_layer += cfg.n_heads * r * (dn + dv)
+        per_layer += cfg.n_heads * dv * d
+    if cfg.family == "ssm":
+        di, st = cfg.d_inner, cfg.ssm_state
+        dtr = max(1, -(-d // 16))
+        per_layer = (d * 2 * di + di * (dtr + 2 * st) + dtr * di + di * d)
+    elif cfg.family == "hybrid":
+        di, st = cfg.d_inner, cfg.ssm_state
+        mamba = d * 2 * di + d * (2 * st + cfg.ssm_heads) + di * d
+        ng, gs = cfg.n_layers // cfg.hybrid_attn_every, cfg.hybrid_attn_every
+        attn = (d * cfg.n_heads * cfg.head_dim * 2
+                + d * cfg.n_kv_heads * cfg.head_dim * 2 + 3 * d * cfg.d_ff)
+        return emb + cfg.n_layers * mamba + ng * attn
+    if cfg.n_experts:
+        active_e = cfg.moe_top_k * 3 * d * cfg.moe_d_ff
+        shared = cfg.n_shared_experts * 3 * d * cfg.moe_d_ff
+        dense_res = 3 * d * cfg.d_ff if cfg.dense_residual else 0
+        moe_layers = cfg.n_layers - cfg.first_dense_layers
+        total = emb + moe_layers * (per_layer + active_e + shared + dense_res)
+        if cfg.first_dense_layers:
+            total += cfg.first_dense_layers * (
+                per_layer + 3 * d * cfg.first_dense_d_ff)
+        return total
+    if cfg.family == "encdec":
+        enc = cfg.n_encoder_layers * (per_layer + 3 * d * cfg.d_ff)
+        dec = cfg.n_layers * (2 * per_layer + 3 * d * cfg.d_ff)
+        return emb + enc + dec
+    per_layer += 3 * d * cfg.d_ff
+    return emb + cfg.n_layers * per_layer
+
+
+def analyze(arch: str, shape, mesh_name: str, cfg, hlo_text: str,
+            n_devices: int, memory_stats=None,
+            fallback_trip: int = 1) -> Roofline:
+    model = HloCostModel(hlo_text, default_group=n_devices,
+                         fallback_trip=fallback_trip)
+    cost = model.entry_cost()
+    t_c = cost.flops / hw.PEAK_BF16_FLOPS
+    t_m = cost.hbm_bytes / hw.HBM_BW
+    t_x = cost.collective_bytes / hw.ICI_LINK_BW
+    bn = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+             key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    mem = 0.0
+    if memory_stats is not None:
+        mem = (memory_stats.argument_size_in_bytes
+               + memory_stats.output_size_in_bytes
+               + memory_stats.temp_size_in_bytes
+               - memory_stats.alias_size_in_bytes)
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name,
+        flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+        collective_bytes=cost.collective_bytes,
+        collective_breakdown=cost.collective_breakdown,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x, bottleneck=bn,
+        model_flops_total=mf,
+        useful_ratio=(mf / n_devices) / max(cost.flops, 1.0),
+        memory_per_device=mem)

@@ -1,0 +1,415 @@
+"""HLO-text cost model: FLOPs, HBM bytes, collective wire bytes.
+
+Why not `compiled.cost_analysis()`? Two gaps (verified empirically, see
+DESIGN.md §7): (1) XLA counts a while-loop body ONCE — a 64-layer scanned
+transformer reports 1/64th of its FLOPs; (2) it reports no collective
+traffic at all. This parser walks the post-SPMD per-device HLO text:
+
+  * FLOPs: 2*M*N*K for every `dot` (output shape x contracting dims of the
+    lhs operand, resolved through a per-computation symbol table — operands
+    in scheduled HLO are name references); convolutions likewise;
+    elementwise flops are ignored (matmul-dominated models; the memory term
+    prices elementwise ops' real cost).
+  * HBM bytes: at fusion boundaries — every top-level op reads its operands
+    once and writes its output once (fusions internalize temporaries, which
+    is XLA's own memory model). Plumbing ops (tuple/gte/bitcast/parameter/
+    constant) are skipped.
+  * collective wire bytes per device, ring-model factors:
+      all-gather (n-1)/n * out,  reduce-scatter (n-1)/n * in,
+      all-reduce 2(n-1)/n * in,  all-to-all (n-1)/n * in,
+      collective-permute 1 * in.
+  * while bodies: cost multiplied by the trip count parsed from the loop
+    condition's comparison constant (scan lowers to a counted loop); nested
+    whiles compose; `call`/fusion computations are inlined at call sites.
+
+Cross-checked against cost_analysis() on unrolled graphs in
+tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_dims(text: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.match(text.strip())
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dtype = m.group(1)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d] \
+            if m.group(2) else []
+        total += _DTYPE_BYTES[dtype] * (math.prod(dims) if dims else 1)
+    return total
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    opcode: str
+    out_shape: str           # "f32[256,384]" (tuple shapes keep full text)
+    operands: List[str]      # referenced op names
+    body: str                # full rhs text
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpLine]
+    shapes: Dict[str, str]   # op name -> out_shape text
+
+
+def _split_operands(after_opcode: str) -> List[str]:
+    """Extract %operand names inside the first top-level (...) group."""
+    if "(" not in after_opcode:
+        return []
+    depth = 0
+    start = after_opcode.index("(")
+    for i in range(start, len(after_opcode)):
+        ch = after_opcode[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                seg = after_opcode[start + 1:i]
+                return _OPERAND_RE.findall(seg)
+    return _OPERAND_RE.findall(after_opcode[start:])
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        stripped = raw.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped.endswith("{") and "(" in stripped and "=" not in \
+                stripped.split("(")[0]:
+            header = stripped.split("(")[0].replace("ENTRY", "").strip()
+            name = header.lstrip("%").strip()
+            cur = Computation(name=name, ops=[], shapes={})
+            comps[name] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(stripped)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        if rest.startswith("("):
+            # tuple-shaped output (while/rng/sort): shape = (...) group
+            depth = 0
+            end = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i + 1
+                        break
+            shape_text = rest[:end]
+            tail = rest[end:].strip()
+            op_m = re.match(r"([\w\-]+)\(", tail)
+            opcode = op_m.group(1) if op_m else tail.split("(")[0].strip()
+            op = OpLine(name=name, opcode=opcode, out_shape=shape_text,
+                        operands=_split_operands(tail), body=rest)
+            cur.ops.append(op)
+            cur.shapes[name] = shape_text
+            continue
+        sm = _SHAPE_RE.match(rest)
+        if not sm:
+            continue
+        # tuple shapes: keep the whole prefix up to the opcode for bytes
+        after = rest[sm.end():]
+        # skip tuple tail `, f32[...])` and layout `{1,0}` prefixes
+        paren = 0
+        k = 0
+        while k < len(after) and (after[k] in ", ]}{0123456789()[" or
+                                  after[:k + 1].count("[") >
+                                  after[:k + 1].count("]")):
+            k += 1
+        shape_text = rest[:sm.end()] + after[:k]
+        tail = after[k:].strip()
+        op_m = re.match(r"([\w\-]+)\(", tail)
+        opcode = op_m.group(1) if op_m else tail.split("(")[0].strip()
+        operands = _split_operands(tail)
+        op = OpLine(name=name, opcode=opcode, out_shape=shape_text,
+                    operands=operands, body=rest)
+        cur.ops.append(op)
+        cur.shapes[name] = shape_text
+    return comps
+
+
+_SKIP = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "iota", "partition-id", "replica-id", "copy-start",
+         "copy-done", "bitcast-convert", "opt-barrier"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _group_size(body: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", body)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", body)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        self.collective_bytes += mult * other.collective_bytes
+        for k, v in other.collective_breakdown.items():
+            self.collective_breakdown[k] = \
+                self.collective_breakdown.get(k, 0.0) + mult * v
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Limit constant defined directly inside the loop condition."""
+    consts: Dict[str, int] = {}
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.body)
+            if m:
+                consts[op.name] = int(m.group(1))
+    for op in cond.ops:
+        if op.opcode == "compare" and "direction=LT" in op.body:
+            for oname in op.operands:
+                if oname in consts and consts[oname] > 0:
+                    return consts[oname]
+    return None
+
+
+def _limit_tuple_indices(cond: Computation) -> List[int]:
+    """Tuple indices the loop condition compares against: the limit is
+    carried in the while tuple (jax scan lowering), read via
+    get-tuple-element(param, index=K) inside the condition."""
+    gte_index: Dict[str, int] = {}
+    for op in cond.ops:
+        if op.opcode == "get-tuple-element":
+            m = re.search(r"index=(\d+)", op.body)
+            if m:
+                gte_index[op.name] = int(m.group(1))
+    out = []
+    for op in cond.ops:
+        if op.opcode == "compare" and "direction=LT" in op.body:
+            for oname in op.operands:
+                if oname in gte_index:
+                    out.append(gte_index[oname])
+    return out
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, default_group: int = 1,
+                 fallback_trip: int = 1):
+        self.comps = parse_hlo(hlo_text)
+        self.default_group = default_group
+        self.fallback_trip = fallback_trip
+        # global symbol table as a fallback for cross-computation refs
+        self.global_shapes: Dict[str, str] = {}
+        for comp in self.comps.values():
+            self.global_shapes.update(comp.shapes)
+
+    def _shape_of(self, comp: Computation, name: str) -> str:
+        return comp.shapes.get(name) or self.global_shapes.get(name, "")
+
+    def _dot_flops(self, comp: Computation, op: OpLine) -> int:
+        _, out_dims = _shape_dims(op.out_shape)
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.body)
+        if cm is None or not op.operands:
+            return 0
+        lhs_shape = self._shape_of(comp, op.operands[0])
+        _, lhs_dims = _shape_dims(lhs_shape)
+        if not lhs_dims:
+            return 0
+        contract = [int(i) for i in cm.group(1).split(",") if i]
+        k = math.prod(lhs_dims[i] for i in contract) if contract else 1
+        return 2 * math.prod(out_dims or [1]) * k
+
+    def _conv_flops(self, comp: Computation, op: OpLine) -> int:
+        _, out_dims = _shape_dims(op.out_shape)
+        if len(op.operands) < 2:
+            return 0
+        _, ker = _shape_dims(self._shape_of(comp, op.operands[1]))
+        return 2 * math.prod(out_dims or [1]) * math.prod(ker[:-1] or [1])
+
+    def _operand_bytes(self, comp: Computation, op: OpLine) -> int:
+        return sum(_shape_bytes(self._shape_of(comp, o))
+                   for o in op.operands)
+
+    def _find_called(self, op: OpLine, attr: str) -> Optional[str]:
+        m = re.search(attr + r"=%?([\w\.\-]+)", op.body)
+        return m.group(1) if m else None
+
+    def _trip_in_condition(self, cond_name: str) -> Optional[int]:
+        """Max positive constant in the condition region or computations it
+        calls (the compare is often inside a wrapped fusion). A counted-loop
+        condition computes only `counter < limit`, so any constant there is
+        the limit (or a harmless smaller literal)."""
+        seen = set()
+        best = None
+        stack = [cond_name]
+        while stack:
+            name = stack.pop()
+            if name in seen or name not in self.comps:
+                continue
+            seen.add(name)
+            for o in self.comps[name].ops:
+                if o.opcode == "constant":
+                    m = re.search(r"constant\((\d+)\)", o.body)
+                    if m and int(m.group(1)) > 0:
+                        v = int(m.group(1))
+                        best = v if best is None else max(best, v)
+                callee = self._find_called(o, "calls") \
+                    or self._find_called(o, "to_apply")
+                if callee:
+                    stack.append(callee)
+        return best
+
+    def _trip_from_init(self, comp: Computation, op: OpLine,
+                        cond_name: Optional[str]) -> Optional[int]:
+        """Resolve the loop limit through the init tuple: the condition
+        compares a carried element (index K) — look up element K of the
+        init tuple in the caller and read its constant."""
+        if not op.operands:
+            return None
+        consts: Dict[str, int] = {}
+        for o in comp.ops:
+            if o.opcode == "constant":
+                m = re.search(r"constant\((-?\d+)\)", o.body)
+                if m:
+                    consts[o.name] = int(m.group(1))
+        init_ops = op.operands
+        init_tuple = None
+        for o in comp.ops:
+            if o.name == init_ops[0] and o.opcode == "tuple":
+                init_tuple = o.operands
+                break
+        if init_tuple is None and len(init_ops) > 1:
+            init_tuple = init_ops  # operands inline on the while op
+        if init_tuple is None:
+            return None
+        indices = []
+        if cond_name and cond_name in self.comps:
+            indices = _limit_tuple_indices(self.comps[cond_name])
+        vals = []
+        for k in indices:
+            if k < len(init_tuple) and init_tuple[k] in consts \
+                    and consts[init_tuple[k]] > 0:
+                vals.append(consts[init_tuple[k]])
+        return max(vals) if vals else None
+
+    def computation_cost(self, name: str, _depth=0) -> CostTotals:
+        total = CostTotals()
+        comp = self.comps.get(name)
+        if comp is None or _depth > 12:
+            return total
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in _SKIP:
+                continue
+            if oc == "while":
+                body = self._find_called(op, "body")
+                cond = self._find_called(op, "condition")
+                trips = None
+                if cond and cond in self.comps:
+                    trips = self._trip_in_condition(cond)
+                if trips is None:
+                    trips = self._trip_from_init(comp, op, cond)
+                trips = trips or self.fallback_trip
+                if body:
+                    total.add(self.computation_cost(body, _depth + 1), trips)
+                continue
+            if oc == "fusion":
+                # fusion: HBM at the boundary; FLOPs/collectives from inside
+                total.hbm_bytes += self._operand_bytes(comp, op) \
+                    + _shape_bytes(op.out_shape)
+                callee = self._find_called(op, "calls")
+                if callee:
+                    inner = self.computation_cost(callee, _depth + 1)
+                    total.flops += inner.flops
+                    total.collective_bytes += inner.collective_bytes
+                    for k, v in inner.collective_breakdown.items():
+                        total.collective_breakdown[k] = \
+                            total.collective_breakdown.get(k, 0.0) + v
+                continue
+            if oc in ("call", "conditional", "async-start", "custom-call"):
+                callee = (self._find_called(op, "calls")
+                          or self._find_called(op, "to_apply"))
+                if callee:
+                    total.add(self.computation_cost(callee, _depth + 1))
+                continue
+            if any(oc.startswith(c) for c in _COLLECTIVES):
+                in_bytes = self._operand_bytes(comp, op)
+                out_bytes = _shape_bytes(op.out_shape)
+                payload = max(in_bytes, out_bytes)
+                n = _group_size(op.body, self.default_group)
+                if oc.startswith("all-gather"):
+                    wire = out_bytes * (n - 1) / max(n, 1)
+                elif oc.startswith("reduce-scatter"):
+                    wire = in_bytes * (n - 1) / max(n, 1)
+                elif oc.startswith("all-reduce"):
+                    wire = in_bytes * 2 * (n - 1) / max(n, 1)
+                elif oc.startswith("all-to-all"):
+                    wire = payload * (n - 1) / max(n, 1)
+                else:  # collective-permute
+                    wire = payload
+                total.collective_bytes += wire
+                key = oc.split("-start")[0].split(".")[0]
+                total.collective_breakdown[key] = \
+                    total.collective_breakdown.get(key, 0.0) + wire
+                total.hbm_bytes += in_bytes + out_bytes
+                continue
+            if oc == "dot":
+                total.flops += self._dot_flops(comp, op)
+            elif oc == "convolution":
+                total.flops += self._conv_flops(comp, op)
+            total.hbm_bytes += self._operand_bytes(comp, op) \
+                + _shape_bytes(op.out_shape)
+        return total
+
+    def entry_cost(self) -> CostTotals:
+        entry = None
+        for name in self.comps:
+            if name.startswith("main"):
+                entry = name
+                break
+        if entry is None:
+            entry = next(iter(self.comps))
+        return self.computation_cost(entry)

@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the dry-run TARGET; container runs CPU)."""
+
+PEAK_BF16_FLOPS = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per link; effective per-chip
+                              # collective bandwidth modeled as one link
+                              # (conservative; v5e has a 2D torus)
+HBM_BYTES = 16 * 2 ** 30      # 16 GiB per chip

@@ -1,0 +1,9 @@
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, RecoveryPlan,
+                                           Supervisor)
+from repro.runtime.straggler import StepTimeMonitor, StragglerPolicy
+from repro.runtime.elastic import (MeshPlan, build_mesh, plan_elastic_mesh,
+                                   shrink_after_failure)
+
+__all__ = ["HeartbeatMonitor", "RecoveryPlan", "Supervisor",
+           "StepTimeMonitor", "StragglerPolicy", "MeshPlan", "build_mesh",
+           "plan_elastic_mesh", "shrink_after_failure"]

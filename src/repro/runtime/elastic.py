@@ -1,0 +1,62 @@
+"""Elastic re-meshing: continue a run on fewer (or more) hosts.
+
+Given the current mesh layout and a survivor set, pick the largest valid
+mesh shape (data axis shrinks first — model parallelism degree is a
+property of the checkpointed layouts, data parallelism is free to change),
+and rebuild shardings so `checkpoint.restore(..., shardings=...)` lands
+arrays directly on the new topology.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    n_devices: int
+
+    def describe(self) -> str:
+        dims = "x".join(f"{n}({a})" for n, a in zip(self.shape, self.axes))
+        return f"{dims} = {self.n_devices} devices"
+
+
+def plan_elastic_mesh(n_available: int, model_parallel: int,
+                      axes: Tuple[str, ...] = ("data", "model"),
+                      pods: int = 1) -> MeshPlan:
+    """Largest mesh with fixed model-parallel degree that fits survivors.
+
+    data = floor(available / (model * pods)); refuses if data < 1.
+    """
+    per_pod = n_available // max(pods, 1)
+    data = per_pod // model_parallel
+    if data < 1:
+        raise ValueError(
+            f"cannot re-mesh: {n_available} devices < model_parallel="
+            f"{model_parallel} (x pods={pods})")
+    if pods > 1:
+        return MeshPlan((pods, data, model_parallel),
+                        ("pod",) + axes, pods * data * model_parallel)
+    return MeshPlan((data, model_parallel), axes, data * model_parallel)
+
+
+def build_mesh(plan: MeshPlan, devices: Optional[Sequence] = None):
+    devs = list(devices if devices is not None else jax.devices())
+    need = plan.n_devices
+    if len(devs) < need:
+        raise ValueError(f"need {need} devices, have {len(devs)}")
+    arr = np.array(devs[:need]).reshape(plan.shape)
+    return jax.sharding.Mesh(arr, plan.axes)
+
+
+def shrink_after_failure(old_plan: MeshPlan, n_dead: int) -> MeshPlan:
+    """Re-plan after losing n_dead devices' worth of hosts."""
+    model = old_plan.shape[-1]
+    pods = old_plan.shape[0] if len(old_plan.shape) == 3 else 1
+    return plan_elastic_mesh(old_plan.n_devices - n_dead, model,
+                             axes=old_plan.axes[-2:], pods=pods)

@@ -1,0 +1,70 @@
+"""Straggler detection & mitigation policy.
+
+Synchronous SPMD training runs at the speed of the slowest host. The
+monitor keeps a per-host EWMA of step times; hosts persistently slower
+than `threshold` x the fleet median are flagged. Mitigations emitted (in
+escalating order):
+  rebalance  shrink the flagged host's data shard (gradual, cheap)
+  evict      treat as failed -> elastic restart without it (decisive)
+
+The data loader consumes `shard_weights()`; the supervisor consumes
+`evictions()`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    threshold: float = 1.5        # x median EWMA to flag
+    ewma_alpha: float = 0.2
+    patience: int = 5             # consecutive flags before mitigation
+    rebalance_floor: float = 0.5  # min relative shard size
+    evict_threshold: float = 3.0  # x median -> immediate eviction candidate
+
+
+class StepTimeMonitor:
+    def __init__(self, n_hosts: int, policy: StragglerPolicy = StragglerPolicy()):
+        self.n = n_hosts
+        self.policy = policy
+        self.ewma = np.zeros(n_hosts)
+        self.flags = np.zeros(n_hosts, dtype=int)
+        self.seen = np.zeros(n_hosts, dtype=bool)
+
+    def record(self, host_times: Dict[int, float]):
+        a = self.policy.ewma_alpha
+        for h, t in host_times.items():
+            self.ewma[h] = t if not self.seen[h] else \
+                (1 - a) * self.ewma[h] + a * t
+            self.seen[h] = True
+        med = np.median(self.ewma[self.seen])
+        for h in range(self.n):
+            if not self.seen[h]:
+                continue
+            if self.ewma[h] > self.policy.threshold * med:
+                self.flags[h] += 1
+            else:
+                self.flags[h] = 0
+
+    def stragglers(self) -> List[int]:
+        return [h for h in range(self.n)
+                if self.flags[h] >= self.policy.patience]
+
+    def evictions(self) -> List[int]:
+        med = np.median(self.ewma[self.seen]) if self.seen.any() else 0
+        return [h for h in self.stragglers()
+                if self.ewma[h] > self.policy.evict_threshold * max(med, 1e-9)]
+
+    def shard_weights(self) -> np.ndarray:
+        """Relative data-shard sizes per host (1.0 = fair share). Slow hosts
+        get proportionally less data, floored by policy."""
+        med = np.median(self.ewma[self.seen]) if self.seen.any() else 1.0
+        w = np.ones(self.n)
+        for h in self.stragglers():
+            rel = med / max(self.ewma[h], 1e-9)
+            w[h] = max(self.policy.rebalance_floor, rel)
+        return w / w.mean()

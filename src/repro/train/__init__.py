@@ -1,0 +1,6 @@
+from repro.train.train_step import (cross_entropy, init_state, loss_fn,
+                                    make_train_step)
+from repro.train.serve_step import generate, make_decode, make_prefill
+
+__all__ = ["cross_entropy", "init_state", "loss_fn", "make_train_step",
+           "generate", "make_decode", "make_prefill"]

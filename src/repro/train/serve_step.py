@@ -1,0 +1,68 @@
+"""Serving steps: prefill + decode, and a host-side batched generate loop.
+
+`make_prefill`/`make_decode` return jit-able pure functions; `generate`
+drives them for the examples and tests (greedy or temperature sampling).
+decode_32k / long_500k dry-run cells lower `decode_step` — one new token
+against a seq_len-deep cache — per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward, init_cache
+
+
+def make_prefill(cfg, max_seq: int):
+    def prefill(params, batch: Dict[str, jnp.ndarray]) -> Tuple[Any, jnp.ndarray]:
+        b = (batch["tokens"].shape[0] if "tokens" in batch
+             else batch["inputs_embeds"].shape[0])
+        cache = init_cache(cfg, b, max_seq)
+        logits, cache, _ = forward(params, cfg, batch, cache=cache,
+                                   cache_pos=jnp.zeros((b,), jnp.int32))
+        return cache, logits[:, -1]
+    return prefill
+
+
+def make_decode(cfg):
+    def decode_step(params, cache, token: jnp.ndarray, pos: jnp.ndarray,
+                    extras: Optional[Dict[str, jnp.ndarray]] = None
+                    ) -> Tuple[jnp.ndarray, Any]:
+        batch = {"tokens": token[:, None]}
+        if extras:
+            batch.update(extras)
+        if cfg.rope_type == "mrope":
+            p = pos[None, :, None]
+            batch["positions"] = jnp.broadcast_to(p, (3,) + p.shape[1:])
+        logits, cache, _ = forward(params, cfg, batch, cache=cache,
+                                   cache_pos=pos)
+        return logits[:, 0], cache
+    return decode_step
+
+
+def generate(params, cfg, batch: Dict[str, jnp.ndarray], n_new: int,
+             max_seq: int, temperature: float = 0.0, seed: int = 0
+             ) -> jnp.ndarray:
+    """Host loop: prefill prompt, decode n_new tokens (greedy / sampled)."""
+    prompt = batch["tokens"]
+    b, s = prompt.shape
+    prefill = jax.jit(make_prefill(cfg, max_seq))
+    decode = jax.jit(make_decode(cfg))
+    extras = {k: v for k, v in batch.items() if k in ("enc_out", "frames")}
+    cache, last = prefill(params, batch)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    tok = (jnp.argmax(last, -1) if temperature == 0.0 else
+           jax.random.categorical(key, last / temperature, -1)
+           ).astype(jnp.int32)
+    for i in range(n_new):
+        out.append(tok)
+        pos = jnp.full((b,), s + i, jnp.int32)
+        logits, cache = decode(params, cache, tok, pos, extras or None)
+        key, sub = jax.random.split(key)
+        tok = (jnp.argmax(logits, -1) if temperature == 0.0 else
+               jax.random.categorical(sub, logits / temperature, -1)
+               ).astype(jnp.int32)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,114 @@
+"""Training step: next-token CE (+ MoE aux), remat, microbatch accumulation.
+
+`make_train_step(cfg)` returns a pure (state, batch) -> (state, metrics)
+function suitable for jit/pjit with shardings from launch/sharding.py.
+Microbatching splits the per-call batch and accumulates grads in a scan
+(constant memory in microbatch count).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.optim import AdamWConfig, get_optimizer
+from repro.optim.schedule import warmup_cosine
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def loss_fn(params, cfg, batch: Dict[str, jnp.ndarray], aux_weight: float
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, _, aux = forward(params, cfg, batch)
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.roll(batch["tokens"], -1, axis=1)
+    ce = cross_entropy(logits, labels, batch.get("loss_mask"))
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def init_state(params, cfg) -> Dict[str, Any]:
+    opt_init, _ = get_optimizer(cfg.optimizer)
+    return {"params": params, "opt": opt_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig = AdamWConfig(),
+                    microbatches: int = 1, aux_weight: float = 0.01,
+                    warmup: int = 100, total_steps: int = 10000,
+                    grad_shardings=None):
+    """grad_shardings: optional pytree of NamedSharding matching params.
+    REQUIRED at scale with microbatch accumulation: the f32 grad
+    accumulator lives in the scan carry, which GSPMD otherwise happily
+    replicates (observed: 3.5 TiB/device on arctic-480b)."""
+    _, opt_update = get_optimizer(cfg.optimizer)
+
+    def constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def grads_of(params, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch, aux_weight)
+        return loss, parts, constrain(grads)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[-2] if x.ndim >= 2 and x.shape[0] == 3 else \
+                    x.shape[0]
+                # split along batch dim (handles (B, ...) and (3, B, S))
+                if x.ndim >= 2 and x.shape[0] == 3:
+                    return x.reshape(x.shape[0], microbatches,
+                                     b // microbatches, *x.shape[2:]
+                                     ).swapaxes(0, 1)
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_a, grads_a = carry
+                loss, parts, grads = grads_of(params, mb)
+                grads_a = constrain(jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), grads_a, grads))
+                return (loss_a + loss, grads_a), parts["ce"]
+
+            acc_dt = (jnp.bfloat16 if getattr(cfg, "grad_accum_dtype", "")
+                      == "bfloat16" else jnp.float32)
+            zeros = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params))
+            (loss_sum, grads), ces = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), zeros), micro)
+            loss = loss_sum / microbatches
+            ce = jnp.mean(ces)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, parts, grads = grads_of(params, batch)
+            ce = parts["ce"]
+
+        lr_scale = warmup_cosine(state["step"], warmup=warmup,
+                                 total=total_steps)
+        new_params, new_opt, om = opt_update(grads, state["opt"], params,
+                                             opt_cfg, lr_scale)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, "ce": ce, "grad_norm": om["grad_norm"],
+                   "lr_scale": lr_scale}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,146 @@
+"""Unit tests: Table, coarsening, key codec, group-by engine."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CoarsenSpec, KeyCodec, coarsen, groupby
+from repro.core.keys import INVALID_HI, INVALID_LO
+from repro.core import oracle
+from repro.data.columnar import Table, concat
+
+
+def test_table_filter_and_count():
+    t = Table.from_dict({"a": jnp.arange(10), "b": jnp.ones(10)})
+    assert t.nrows == 10
+    t2 = t.filter(t["a"] < 5)
+    assert int(t2.count()) == 5
+    t3 = t2.filter(t2["a"] >= 3)  # masks AND together
+    assert int(t3.count()) == 2
+    np.testing.assert_allclose(float(t3.mean("a")), 3.5)
+
+
+def test_table_concat_and_numpy_roundtrip():
+    t1 = Table.from_numpy({"a": np.arange(3)})
+    t2 = Table.from_numpy({"a": np.arange(3, 6)})
+    t = concat([t1, t2])
+    out = t.to_numpy(compact=True)
+    np.testing.assert_array_equal(out["a"], np.arange(6))
+
+
+def test_coarsen_matches_oracle():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 10, 257).astype(np.float32)
+    cp = [-5.0, 0.0, 2.5, 9.0]
+    spec = CoarsenSpec.from_cutpoints(cp)
+    got = np.asarray(coarsen(jnp.asarray(x), spec))
+    want = oracle.coarsen_oracle(x, cp)
+    np.testing.assert_array_equal(got, want)
+    assert spec.n_buckets == 5
+
+
+def test_coarsen_equal_width_and_quantile():
+    spec = CoarsenSpec.equal_width(0.0, 10.0, 5)
+    assert spec.n_buckets == 5
+    assert np.allclose(spec.cutpoints, [2, 4, 6, 8])
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=1000)
+    q = CoarsenSpec.quantile(x, 4)
+    b = np.asarray(coarsen(jnp.asarray(x), q))
+    counts = np.bincount(b, minlength=4)
+    assert counts.min() > 200  # roughly equal mass
+
+
+def test_keycodec_roundtrip():
+    codec = KeyCodec.from_cardinalities({"a": 7, "b": 300, "c": 2, "d": 100000})
+    rng = np.random.default_rng(2)
+    n = 500
+    vals = {"a": rng.integers(0, 7, n), "b": rng.integers(0, 300, n),
+            "c": rng.integers(0, 2, n), "d": rng.integers(0, 100000, n)}
+    valid = rng.random(n) > 0.1
+    hi, lo = codec.pack({k: jnp.asarray(v) for k, v in vals.items()},
+                        jnp.asarray(valid))
+    for name in vals:
+        got = np.asarray(codec.extract(hi, lo, name))
+        np.testing.assert_array_equal(got[valid], vals[name][valid])
+    # invalid rows carry the all-ones marker
+    assert np.all(np.asarray(hi)[~valid] == 0xFFFFFFFF)
+    assert np.all(np.asarray(lo)[~valid] == 0xFFFFFFFF)
+
+
+def test_keycodec_distinct_keys_distinct_tuples():
+    codec = KeyCodec.from_cardinalities({"x": 5, "y": 11})
+    xs, ys = np.meshgrid(np.arange(5), np.arange(11))
+    hi, lo = codec.pack({"x": jnp.asarray(xs.ravel()),
+                         "y": jnp.asarray(ys.ravel())},
+                        jnp.ones(55, bool))
+    keys = set(zip(np.asarray(hi).tolist(), np.asarray(lo).tolist()))
+    assert len(keys) == 55
+
+
+def test_keycodec_rejects_wide_keys():
+    with pytest.raises(ValueError):
+        KeyCodec.from_cardinalities({"a": 2 ** 32, "b": 2 ** 32})
+
+
+def test_keycodec_rollup():
+    codec = KeyCodec.from_cardinalities({"a": 4, "b": 8, "c": 16})
+    rng = np.random.default_rng(3)
+    n = 200
+    vals = {k: rng.integers(0, c, n) for k, c in
+            (("a", 4), ("b", 8), ("c", 16))}
+    valid = np.ones(n, bool)
+    hi, lo = codec.pack({k: jnp.asarray(v) for k, v in vals.items()},
+                        jnp.asarray(valid))
+    sub, shi, slo = codec.rollup(hi, lo, ["a", "c"], jnp.asarray(valid))
+    want_hi, want_lo = sub.pack({"a": jnp.asarray(vals["a"]),
+                                 "c": jnp.asarray(vals["c"])},
+                                jnp.asarray(valid))
+    np.testing.assert_array_equal(np.asarray(shi), np.asarray(want_hi))
+    np.testing.assert_array_equal(np.asarray(slo), np.asarray(want_lo))
+
+
+def test_group_by_key_counts():
+    codec = KeyCodec.from_cardinalities({"g": 10})
+    rng = np.random.default_rng(4)
+    g_vals = rng.integers(0, 10, 300)
+    valid = rng.random(300) > 0.2
+    hi, lo = codec.pack({"g": jnp.asarray(g_vals)}, jnp.asarray(valid))
+    g = groupby.group_by_key(hi, lo)
+    n_distinct = len(set(g_vals[valid].tolist()))
+    assert int(g.n_groups) == n_distinct
+    # per-group counts match numpy
+    sums = groupby.segment_sums(g, {"one": jnp.asarray(valid, jnp.float32)})
+    counts = np.asarray(sums["one"])
+    want = np.bincount(g_vals[valid], minlength=10)
+    got = sorted(c for c in counts[:int(g.n_groups) + 1].tolist() if c > 0)
+    assert got == sorted(c for c in want.tolist() if c > 0)
+
+
+def test_group_minmax_and_broadcast():
+    codec = KeyCodec.from_cardinalities({"g": 4})
+    g_vals = np.array([0, 0, 1, 1, 2, 3, 3, 3])
+    t = np.array([0, 1, 1, 1, 0, 0, 0, 1])
+    hi, lo = codec.pack({"g": jnp.asarray(g_vals)}, jnp.ones(8, bool))
+    g = groupby.group_by_key(hi, lo)
+    mn, mx = groupby.group_minmax(g, jnp.asarray(t))
+    per_row_min = np.asarray(groupby.broadcast_to_rows(g, mn))
+    per_row_max = np.asarray(groupby.broadcast_to_rows(g, mx))
+    want_min = np.array([0, 0, 1, 1, 0, 0, 0, 0])
+    want_max = np.array([1, 1, 1, 1, 0, 1, 1, 1])
+    np.testing.assert_array_equal(per_row_min, want_min)
+    np.testing.assert_array_equal(per_row_max, want_max)
+
+
+def test_lookup_rows_in_table():
+    codec = KeyCodec.from_cardinalities({"g": 50})
+    table_keys = np.arange(0, 50, 2)  # even keys present
+    thi, tlo = codec.pack({"g": jnp.asarray(table_keys)},
+                          jnp.ones(25, bool))
+    # table from group_by_key is sorted already; these are sorted by design
+    query = np.array([0, 1, 2, 3, 48, 49, 24])
+    qhi, qlo = codec.pack({"g": jnp.asarray(query)}, jnp.ones(7, bool))
+    pos, found = groupby.lookup_rows_in_table(qhi, qlo, thi, tlo)
+    np.testing.assert_array_equal(np.asarray(found),
+                                  [True, False, True, False, True, False, True])
+    np.testing.assert_array_equal(np.asarray(pos)[np.asarray(found)],
+                                  [0, 1, 24, 12])

@@ -1,0 +1,158 @@
+"""NNM (WR/NR), subclassification, propensity vs oracles."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (fit_logistic, knn_quadratic, knn_sorted_1d,
+                        mahalanobis_transform, nnmnr, nnmwr, nnmwr_att, ntile,
+                        predict_ps, subclassify, estimate_ate)
+from repro.core import oracle
+from repro.core.matching import BIG, greedy_nnmnr
+from repro.data.columnar import Table
+
+
+def _matching_data(n=400, d=2, seed=0):
+    rng = np.random.default_rng(seed)
+    U = rng.normal(0, 1, (n, d)).astype(np.float32)
+    t = (rng.random(n) < 0.3).astype(np.int32)
+    valid = rng.random(n) > 0.05
+    return U, t, valid
+
+
+def test_knn_quadratic_matches_bruteforce():
+    U, t, valid = _matching_data()
+    control_valid = (t == 0) & valid
+    for k in (1, 3):
+        dist, idx = knn_quadratic(jnp.asarray(U), jnp.asarray(U),
+                                  jnp.asarray(control_valid), k, caliper=2.0,
+                                  block=64)
+        wd, wi = oracle.knn_oracle(U, U, control_valid, k, caliper=2.0)
+        got_d = np.asarray(dist)
+        # f32 matmul distance has ~sqrt(eps)*|x| cancellation error near 0;
+        # exclude a fuzz band around the caliper boundary.
+        interior = np.isfinite(wd) & (wd < 2.0 - 1e-2)
+        np.testing.assert_allclose(got_d[interior], wd[interior],
+                                   rtol=1e-3, atol=3e-3)
+        clearly_out = ~np.isfinite(wd)
+        assert np.all(got_d[clearly_out] >= float(BIG) * 0.9)
+        # indices agree where the distance gap to the next candidate is clear
+        both = interior & (np.abs(got_d - wd) < 1e-4)
+        agree = (np.asarray(idx)[both] == wi[both])
+        assert agree.mean() > 0.98
+
+
+def test_knn_sorted_1d_matches_bruteforce():
+    rng = np.random.default_rng(3)
+    n = 500
+    x = rng.random(n).astype(np.float32)
+    t = (rng.random(n) < 0.4).astype(np.int32)
+    cv = (t == 0)
+    for k in (1, 5):
+        dist, idx = knn_sorted_1d(jnp.asarray(x), jnp.asarray(x),
+                                  jnp.asarray(cv), k, caliper=0.1)
+        wd, wi = oracle.knn_oracle(x[:, None], x[:, None], cv, k, caliper=0.1)
+        got = np.asarray(dist)
+        ok = np.isfinite(wd)
+        np.testing.assert_allclose(got[ok], wd[ok], rtol=1e-4, atol=1e-6)
+        assert np.all(got[~ok] >= float(BIG) * 0.9)
+
+
+def test_nnmwr_att_direction():
+    """Planted constant effect is recovered by 1:1 WR matching on x."""
+    rng = np.random.default_rng(5)
+    n = 3000
+    x = rng.normal(0, 1, (n, 1)).astype(np.float32)
+    p = 1 / (1 + np.exp(-1.2 * x[:, 0]))
+    t = (rng.random(n) < p).astype(np.int32)
+    y = (2.5 * t + 2.0 * x[:, 0] + rng.normal(0, 0.2, n)).astype(np.float32)
+    res = nnmwr(jnp.asarray(x), jnp.asarray(t), jnp.ones(n, bool), k=1,
+                caliper=0.05)
+    att = float(nnmwr_att(jnp.asarray(y), res))
+    assert abs(att - 2.5) < 0.15
+
+
+def test_nnmnr_no_control_reuse():
+    U, t, valid = _matching_data(n=300, d=1, seed=7)
+    res = nnmnr(jnp.asarray(U), jnp.asarray(t), jnp.asarray(valid), k=2,
+                caliper=1.0)
+    ok = np.asarray(res.ok)
+    idx = np.asarray(res.idx)
+    used = idx[ok]
+    assert len(used) == len(np.unique(used))  # each control used at most once
+    # every used control really is a valid control
+    assert np.all((t[used] == 0) & valid[used])
+    # per-treated count <= k
+    assert np.asarray(ok.sum(axis=1)).max() <= 2
+
+
+def test_greedy_matches_oracle_sweep():
+    rng = np.random.default_rng(11)
+    nt, m, n_rows = 20, 4, 100
+    dist = rng.random((nt, m)).astype(np.float32)
+    dist = np.where(rng.random((nt, m)) < 0.2, np.float32(BIG), dist)
+    idx = rng.integers(0, n_rows, (nt, m)).astype(np.int32)
+    treated_rows = np.arange(nt, dtype=np.int32)
+    take, _ = greedy_nnmnr(jnp.asarray(dist), jnp.asarray(idx),
+                           jnp.asarray(treated_rows), n_rows, k=1)
+    edges = [(float(dist[i, j]) if dist[i, j] < BIG else np.inf,
+              int(idx[i, j]), int(treated_rows[i]))
+             for i in range(nt) for j in range(m)]
+    want = oracle.greedy_match_oracle(edges, n_rows, k=1)
+    got = np.asarray(take)
+    got_edges = sorted((float(dist[i, j]), int(idx[i, j]), i)
+                       for i, j in zip(*np.nonzero(got)))
+    # same multiset of matched controls and total distance
+    assert len(got_edges) == len(want)
+    np.testing.assert_allclose(sum(e[0] for e in got_edges),
+                               sum(e[0] for e in want), rtol=1e-5)
+
+
+def test_ntile_matches_oracle():
+    rng = np.random.default_rng(13)
+    ps = rng.random(157).astype(np.float32)
+    valid = rng.random(157) > 0.15
+    got = np.asarray(ntile(jnp.asarray(ps), jnp.asarray(valid), 5))
+    want = oracle.ntile_oracle(ps, valid, 5)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_logistic_matches_oracle_and_separates():
+    rng = np.random.default_rng(17)
+    n = 1000
+    X = rng.normal(0, 1, (n, 3)).astype(np.float32)
+    logits = 1.5 * X[:, 0] - 0.7 * X[:, 1] + 0.3
+    t = (rng.random(n) < 1 / (1 + np.exp(-logits))).astype(np.int32)
+    valid = np.ones(n, bool)
+    model = fit_logistic(jnp.asarray(X), jnp.asarray(t), jnp.asarray(valid))
+    ps = np.asarray(predict_ps(model, jnp.asarray(X)))
+    want = oracle.logistic_oracle(X.astype(np.float64), t, valid)
+    np.testing.assert_allclose(ps, want, atol=2e-3)
+    assert ps[t == 1].mean() > ps[t == 0].mean() + 0.1
+
+
+def test_subclassification_recovers_effect():
+    rng = np.random.default_rng(19)
+    n = 8000
+    x = rng.normal(0, 1, (n, 2)).astype(np.float32)
+    logits = 1.3 * x[:, 0] + 0.5 * x[:, 1]
+    t = (rng.random(n) < 1 / (1 + np.exp(-logits))).astype(np.int32)
+    y = (4.0 * t + 2.0 * x[:, 0] + x[:, 1]
+         + rng.normal(0, 0.3, n)).astype(np.float32)
+    table = Table.from_numpy({"x0": x[:, 0], "x1": x[:, 1], "t": t, "y": y})
+    model = fit_logistic(jnp.asarray(x), table["t"], table.valid)
+    ps = predict_ps(model, jnp.asarray(x))
+    res = subclassify(table, "t", "y", ps, n_subclasses=20)
+    est = estimate_ate(res.groups)
+    # subclassification reduces the (large) confounding bias substantially
+    naive = float(np.mean(y[t == 1]) - np.mean(y[t == 0]))
+    assert abs(naive - 4.0) > 1.0
+    assert abs(float(est.ate) - 4.0) < 0.35
+
+
+def test_mahalanobis_transform_whitens():
+    rng = np.random.default_rng(23)
+    A = rng.normal(0, 1, (3, 3))
+    X = (rng.normal(0, 1, (5000, 3)) @ A).astype(np.float32)
+    U = np.asarray(mahalanobis_transform(jnp.asarray(X),
+                                         jnp.ones(5000, bool)))
+    cov = np.cov(U.T)
+    np.testing.assert_allclose(cov, np.eye(3), atol=0.15)

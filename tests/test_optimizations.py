@@ -1,0 +1,174 @@
+"""Paper §4 optimizations: factoring (Prop. 3), cube, pushdown (Prop. 2),
+offline preparation (Alg. 2) — equivalence against direct CEM."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (CoarsenSpec, cem, cem_join_pushdown, covariate_factoring,
+                        cube, estimate_ate, mcem, partition_treatments,
+                        phi_matrix, prepare)
+from repro.data.columnar import Table, compact
+from repro.data.join import fk_join
+
+
+def _multi_treatment_frame(n=3000, seed=0):
+    rng = np.random.default_rng(seed)
+    x0 = rng.integers(0, 4, n).astype(np.int32)      # shared
+    x1 = rng.integers(0, 3, n).astype(np.int32)      # shared
+    x2 = rng.integers(0, 5, n).astype(np.int32)      # t_a only
+    x3 = rng.integers(0, 5, n).astype(np.int32)      # t_b only
+    latent = rng.normal(0, 1, n)
+    t_a = ((x0 + latent) > 2.2).astype(np.int32)
+    t_b = ((x0 + latent + 0.3 * rng.normal(0, 1, n)) > 2.4).astype(np.int32)
+    t_c = (rng.random(n) < 0.5).astype(np.int32)     # independent
+    y = (3 * t_a + 1 * t_b + x0 + rng.normal(0, .3, n)).astype(np.float32)
+    valid = rng.random(n) > 0.05
+    table = Table.from_numpy(dict(x0=x0, x1=x1, x2=x2, x3=x3, t_a=t_a,
+                                  t_b=t_b, t_c=t_c, y=y), valid)
+    specs = {f"x{i}": CoarsenSpec.categorical(c)
+             for i, c in enumerate((4, 3, 5, 5))}
+    covsets = {"t_a": ["x0", "x1", "x2"], "t_b": ["x0", "x1", "x3"],
+               "t_c": ["x1", "x3"]}
+    return table, specs, covsets
+
+
+def test_prop3_factoring_equivalence():
+    """MCEM_Ti(P_S) == CEM(R_Ti) — matched masks identical (Prop. 3)."""
+    table, specs, covsets = _multi_treatment_frame()
+    group = ["t_a", "t_b"]
+    shared = sorted(set(covsets["t_a"]) & set(covsets["t_b"]))
+    view = covariate_factoring(table, group, specs, shared)
+    for tname in group:
+        tspecs = {n: specs[n] for n in covsets[tname]}
+        direct = cem(table, tname, "y", tspecs)
+        via = mcem(view, tname, "y", tspecs)
+        np.testing.assert_array_equal(np.asarray(via.table.valid),
+                                      np.asarray(direct.table.valid))
+        d = estimate_ate(direct.groups)
+        v = estimate_ate(via.groups)
+        np.testing.assert_allclose(float(v.ate), float(d.ate), rtol=1e-5)
+
+
+def test_factoring_prunes():
+    table, specs, covsets = _multi_treatment_frame()
+    view = covariate_factoring(table, ["t_a", "t_b"], specs, ["x0", "x1"])
+    assert int(view.table.count()) <= int(table.count())
+
+
+def test_alg1_partitions_correlated_treatments_together():
+    table, specs, covsets = _multi_treatment_frame()
+    covsets = {k: set(v) for k, v in covsets.items()}
+    names, M = phi_matrix({t: table[t] for t in ("t_a", "t_b", "t_c")},
+                          table.valid)
+    # t_a and t_b are strongly correlated by construction
+    ia, ib = names.index("t_a"), names.index("t_b")
+    assert M[ia, ib] > 0.4
+    groups = partition_treatments(names, M, covsets, max_group=2)
+    gmap = {t: i for i, g in enumerate(groups) for t in g}
+    assert gmap["t_a"] == gmap["t_b"]
+
+
+def test_cuboid_rollup_equals_direct_cem():
+    table, specs, covsets = _multi_treatment_frame()
+    cub = cube.build_cuboid(table, specs, ["t_a", "t_b", "t_c"], "y")
+    for tname, dims in covsets.items():
+        rolled = cube.rollup(cub, sorted(dims))
+        got = estimate_ate(cube.cem_groups_from_cuboid(rolled, tname))
+        want = estimate_ate(
+            cem(table, tname, "y", {n: specs[n] for n in dims}).groups)
+        np.testing.assert_allclose(float(got.ate), float(want.ate), rtol=1e-4)
+        assert int(got.n_groups) == int(want.n_groups)
+        np.testing.assert_allclose(float(got.n_matched_treated),
+                                   float(want.n_matched_treated))
+
+
+def test_cuboid_compact_preserves_stats():
+    table, specs, _ = _multi_treatment_frame()
+    cub = cube.build_cuboid(table, specs, ["t_a"], "y")
+    small = cube.compact_cuboid(cub)
+    assert small.capacity < cub.capacity
+    rolled_a = cube.rollup(cub, ["x0", "x1"])
+    rolled_b = cube.rollup(small, ["x0", "x1"])
+    ga = estimate_ate(cube.cem_groups_from_cuboid(rolled_a, "t_a"))
+    gb = estimate_ate(cube.cem_groups_from_cuboid(rolled_b, "t_a"))
+    np.testing.assert_allclose(float(ga.ate), float(gb.ate), rtol=1e-5)
+
+
+def _fk_frame(seed=0, n_dim=300, n_fact=2000):
+    rng = np.random.default_rng(seed)
+    # dimension: holds treatment + its covariates
+    d_x = rng.integers(0, 4, n_dim).astype(np.int32)
+    d_t = ((d_x + rng.normal(0, 1, n_dim)) > 2.0).astype(np.int32)
+    dim = Table.from_numpy(dict(key=np.arange(n_dim, dtype=np.int32),
+                                d_x=d_x, t=d_t),
+                           rng.random(n_dim) > 0.05)
+    # fact: outcome + extra covariates, FK to dim
+    f_key = rng.integers(0, n_dim, n_fact).astype(np.int32)
+    f_x = rng.integers(0, 3, n_fact).astype(np.int32)
+    y = (2.0 * d_t[f_key] + d_x[f_key] + 0.5 * f_x
+         + rng.normal(0, .2, n_fact)).astype(np.float32)
+    fact = Table.from_numpy(dict(key=f_key, f_x=f_x, y=y),
+                            rng.random(n_fact) > 0.05)
+    dim_specs = {"d_x": CoarsenSpec.categorical(4)}
+    fact_specs = {"f_x": CoarsenSpec.categorical(3)}
+    return dim, fact, dim_specs, fact_specs, n_dim
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_prop2_pushdown_equivalence(seed):
+    """CEM(CEM(dim) |><| fact) == CEM(dim |><| fact): same matched units,
+    same ATE (Prop. 2)."""
+    dim, fact, dim_specs, fact_specs, n_dim = _fk_frame(seed)
+    on = {"key": n_dim}
+    # direct: integrate first, then CEM on all covariates
+    joined = fk_join(fact, dim, on=on)
+    all_specs = {**fact_specs, **dim_specs}
+    direct = cem(joined, "t", "y", all_specs)
+    d_est = estimate_ate(direct.groups)
+    # pushdown (without compaction so row alignment is preserved)
+    pd = cem_join_pushdown(dim, dim_specs, fact, fact_specs, on=on,
+                           treatment="t", outcome="y", do_compact=False)
+    p_est = estimate_ate(pd.result.groups)
+    np.testing.assert_array_equal(np.asarray(pd.result.table.valid),
+                                  np.asarray(direct.table.valid))
+    np.testing.assert_allclose(float(p_est.ate), float(d_est.ate), rtol=1e-5)
+    # and with compaction: same estimates (row order differs)
+    pd2 = cem_join_pushdown(dim, dim_specs, fact, fact_specs, on=on,
+                            treatment="t", outcome="y", do_compact=True)
+    p2 = estimate_ate(pd2.result.groups)
+    np.testing.assert_allclose(float(p2.ate), float(d_est.ate), rtol=1e-5)
+    np.testing.assert_allclose(float(p2.n_matched_treated),
+                               float(d_est.n_matched_treated))
+    assert pd2.dim_rows_after <= pd2.dim_rows_before
+
+
+def test_prepared_database_answers_online_queries():
+    table, specs, covsets = _multi_treatment_frame(n=5000, seed=3)
+    db = prepare(table, covsets, specs, outcome="y", query_dims=("x1",))
+    for tname in covsets:
+        dims = covsets[tname]
+        want = estimate_ate(
+            cem(table, tname, "y", {n: specs[n] for n in dims}).groups)
+        got = db.ate(tname)
+        np.testing.assert_allclose(float(got.ate), float(want.ate), rtol=1e-4)
+    # sub-population query: restrict to x1 == 0
+    sub = db.ate("t_a", subpopulation={"x1": [0]})
+    table0 = table.filter(table["x1"] == 0)
+    want0 = estimate_ate(
+        cem(table0, "t_a", "y",
+            {n: specs[n] for n in covsets["t_a"]}).groups)
+    np.testing.assert_allclose(float(sub.ate), float(want0.ate), rtol=1e-4)
+
+
+def test_compact_preserves_estimates():
+    table, specs, covsets = _multi_treatment_frame(seed=9)
+    small = compact(table, granule=256)
+    assert int(small.count()) == int(table.count())
+    assert small.nrows - int(small.count()) < 256  # tight padding
+    for tname in ("t_a",):
+        dims = covsets[tname]
+        a = estimate_ate(cem(table, tname, "y",
+                             {n: specs[n] for n in dims}).groups)
+        b = estimate_ate(cem(small, tname, "y",
+                             {n: specs[n] for n in dims}).groups)
+        np.testing.assert_allclose(float(a.ate), float(b.ate), rtol=1e-5)

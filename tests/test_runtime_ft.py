@@ -1,0 +1,185 @@
+"""Fault tolerance, checkpointing, elasticity, stragglers, optimizers."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import AsyncSaver, latest_step, restore, save
+from repro.optim import AdamWConfig, adamw, grad_compress, quantized
+from repro.runtime import (HeartbeatMonitor, StepTimeMonitor, Supervisor,
+                           plan_elastic_mesh, shrink_after_failure)
+
+
+# ------------------------------- checkpoint --------------------------------
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(k, (16, 8)),
+              "b": jnp.zeros((8,)),
+              "nested": {"e": jax.random.normal(k, (4, 4),
+                                                dtype=jnp.float32)}}
+    return {"params": params, "opt": adamw.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def test_checkpoint_roundtrip_bitexact(tmp_path):
+    state = _state()
+    save(state, 7, str(tmp_path))
+    assert latest_step(str(tmp_path)) == 7
+    _, restored = restore(str(tmp_path), template=state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_last_gc(tmp_path):
+    state = _state()
+    for s in (1, 2, 3, 4, 5):
+        save(state, s, str(tmp_path), keep_last=2)
+    steps = sorted(os.listdir(str(tmp_path)))
+    assert steps == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    state = _state()
+    path = save(state, 1, str(tmp_path))
+    # flip bytes in the shard
+    shard = os.path.join(path, "shard_0.npz")
+    data = bytearray(open(shard, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(shard, "wb").write(bytes(data))
+    with pytest.raises(Exception):
+        restore(str(tmp_path), template=state)
+
+
+def test_async_saver(tmp_path):
+    state = _state()
+    saver = AsyncSaver()
+    saver.save(state, 3, str(tmp_path))
+    saver.wait()
+    assert latest_step(str(tmp_path)) == 3
+    _, restored = restore(str(tmp_path), template=state)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+# ---------------------------- supervisor resume -----------------------------
+def _toy_step():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+
+    def step_fn(state, batch):
+        def loss(p):
+            return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+        l, g = jax.value_and_grad(loss)(state["params"])
+        new_p, new_opt, _ = adamw.update(g, state["opt"], state["params"],
+                                         cfg)
+        return ({"params": new_p, "opt": new_opt,
+                 "step": state["step"] + 1}, {"loss": l})
+    return jax.jit(step_fn)
+
+
+def _batches():
+    def batch_for_step(i):
+        k = jax.random.PRNGKey(i)
+        x = jax.random.normal(k, (8, 4))
+        return {"x": x, "y": x @ jnp.ones((4, 2))}
+    return batch_for_step
+
+
+def test_supervisor_bitexact_resume(tmp_path):
+    """A crash + restore must reproduce the exact no-crash trajectory."""
+    params = {"w": jnp.zeros((4, 2))}
+    mk = lambda: {"params": params, "opt": adamw.init(params),
+                  "step": jnp.zeros((), jnp.int32)}
+    step_fn = _toy_step()
+    batches = _batches()
+
+    sup_a = Supervisor(step_fn, str(tmp_path / "a"), ckpt_every=5)
+    state_a, _ = sup_a.run(mk(), batches, n_steps=20)
+
+    crashed = {17}
+    sup_b = Supervisor(step_fn, str(tmp_path / "b"), ckpt_every=5)
+    state_b, _ = sup_b.run(mk(), batches, n_steps=20,
+                           fail_at=lambda s: s in crashed and not
+                           crashed.discard(s))
+    assert sup_b.restarts == 1
+    np.testing.assert_array_equal(np.asarray(state_a["params"]["w"]),
+                                  np.asarray(state_b["params"]["w"]))
+
+
+# ------------------------------- heartbeats --------------------------------
+def test_heartbeat_detects_dead_host(tmp_path):
+    t = [0.0]
+    mon = HeartbeatMonitor(4, timeout_s=10.0, clock=lambda: t[0])
+    for h in range(4):
+        mon.beat(h, step=1)
+    t[0] = 5.0
+    for h in (0, 1, 3):
+        mon.beat(h, step=2)
+    t[0] = 14.0
+    assert mon.dead_hosts() == [2]
+    plan = mon.plan(ckpt_dir=None, min_hosts=2)
+    assert plan.action == "elastic_restart"
+    assert plan.survivor_hosts == [0, 1, 3]
+
+
+# -------------------------------- stragglers -------------------------------
+def test_straggler_flag_and_rebalance():
+    mon = StepTimeMonitor(4)
+    for _ in range(10):
+        mon.record({0: 1.0, 1: 1.05, 2: 2.4, 3: 0.95})
+    assert mon.stragglers() == [2]
+    w = mon.shard_weights()
+    assert w[2] < w[0]
+    assert abs(w.mean() - 1.0) < 1e-9
+    # 10x slow host -> eviction candidate
+    mon2 = StepTimeMonitor(4)
+    for _ in range(10):
+        mon2.record({0: 1.0, 1: 1.0, 2: 10.0, 3: 1.0})
+    assert mon2.evictions() == [2]
+
+
+# --------------------------------- elastic ---------------------------------
+def test_elastic_plan_shrinks_data_axis():
+    plan = plan_elastic_mesh(512, model_parallel=16, pods=2)
+    assert plan.shape == (2, 16, 16)
+    smaller = shrink_after_failure(plan, n_dead=40)
+    assert smaller.shape[-1] == 16          # model degree preserved
+    assert smaller.n_devices <= 512 - 40
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(8, model_parallel=16)
+
+
+# ------------------------------ int8 optimizer -----------------------------
+def test_int8_adam_tracks_f32_adam():
+    k = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(k, (64, 32)) * 0.1}
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.0)
+    s32 = adamw.init(params)
+    s8 = quantized.init(params)
+    p32 = p8 = params
+    for i in range(10):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(i), (64, 32)) * 0.01}
+        p32, s32, _ = adamw.update(g, s32, p32, cfg)
+        p8, s8, _ = quantized.update(g, s8, p8, cfg)
+    diff = float(jnp.linalg.norm(p32["w"] - p8["w"])
+                 / jnp.linalg.norm(p32["w"]))
+    assert diff < 0.05  # int8 states track f32 closely
+
+
+def test_int8_state_memory_is_small():
+    params = {"w": jnp.zeros((1024, 1024))}
+    s8 = quantized.init(params)
+    q_bytes = sum(a.size * a.dtype.itemsize
+                  for a in jax.tree.leaves(s8["m"])) + \
+        sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(s8["v"]))
+    f32_bytes = 2 * 1024 * 1024 * 4
+    assert q_bytes < 0.40 * f32_bytes
+
+
+# ----------------------------- grad compression ----------------------------
+def test_grad_compress_roundtrip_error_small():
+    k = jax.random.PRNGKey(1)
+    g = jax.random.normal(k, (1000, 37)) * 0.02
+    err = float(grad_compress.roundtrip_error(g))
+    assert err < 0.01

@@ -1,0 +1,159 @@
+"""Serving stack + optimization-variant equivalence tests.
+
+These pin down the beyond-paper optimizations numerically:
+  * MoE gather dispatch == naive scatter dispatch (same outputs);
+  * head padding is a no-op mathematically (single-device check of the
+    padded attention math);
+  * greedy generate(prefill+decode) == argmax over the full forward;
+  * the slot batcher serves every request the right number of tokens;
+  * single-word group-by == lexicographic group-by for narrow keys.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REGISTRY
+from repro.launch.serve import Batcher, Request
+from repro.launch.train import PRESETS
+from repro.models import forward, init_params
+from repro.train import generate
+
+
+def test_moe_gather_equals_scatter_dispatch():
+    cfg = REGISTRY["deepseek-v2-lite-16b"].reduced()
+    cfg_s = dataclasses.replace(cfg, moe_dispatch="scatter")
+    cfg_g = dataclasses.replace(cfg, moe_dispatch="gather")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg_s)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size)}
+    ls, _, auxs = forward(params, cfg_s, batch)
+    lg, _, auxg = forward(params, cfg_g, batch)
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(lg), rtol=2e-5,
+                               atol=2e-5)
+    np.testing.assert_allclose(float(auxs), float(auxg), rtol=1e-5)
+
+
+def test_padded_heads_attention_is_noop():
+    """Zero-padded attention heads must not change the real heads' output."""
+    from repro.models import attention as A
+    from repro.models import shard_hints
+    cfg = REGISTRY["qwen2-7b"].reduced()  # 4 heads after reduce
+    key = jax.random.PRNGKey(1)
+    p = A.init_gqa(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32)[None], (2, 16))
+    out_plain, _ = A.gqa_forward(p, x, pos, cfg, q_chunk=8, kv_chunk=8)
+    # emulate padding by hand: extend q/k/v with zero heads via the public
+    # path (padded_heads only activates under hints; check the math by
+    # comparing a manually padded flash call)
+    b, s = 2, 16
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hkv
+    dt = x.dtype
+    q = (jnp.einsum("bsd,de->bse", x, p["wq"]) + p.get("bq", 0)
+         ).reshape(b, s, hkv, g, dh)
+    k = (jnp.einsum("bsd,de->bse", x, p["wk"]) + p.get("bk", 0)
+         ).reshape(b, s, hkv, dh)
+    v = (jnp.einsum("bsd,de->bse", x, p["wv"]) + p.get("bv", 0)
+         ).reshape(b, s, hkv, dh)
+    from repro.models.layers import apply_rope
+    q = apply_rope(q.reshape(b, s, h, dh), pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    ke = jnp.repeat(k, g, axis=2)
+    ve = jnp.repeat(v, g, axis=2)
+    pad = 2
+    z = jnp.zeros((b, s, pad, dh), dt)
+    qp = jnp.concatenate([q, z], 2)[:, :, :, None, :]
+    kp = jnp.concatenate([ke, z], 2)
+    vp = jnp.concatenate([ve, z], 2)
+    outp = A.flash_attention(qp, kp, vp, scale=dh ** -0.5, causal=True,
+                             q_chunk=8, kv_chunk=8)[:, :, :h, 0, :]
+    out_pad = jnp.einsum("bse,ed->bsd", outp.reshape(b, s, h * dh), p["wo"])
+    np.testing.assert_allclose(np.asarray(out_plain), np.asarray(out_pad),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_generate_greedy_matches_full_forward():
+    cfg = PRESETS["lm-tiny"]
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    prompt = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    out = generate(params, cfg, {"tokens": prompt}, n_new=1, max_seq=16)
+    logits, _, _ = forward(params, cfg, {"tokens": prompt})
+    want = jnp.argmax(logits[:, -1], -1)
+    np.testing.assert_array_equal(np.asarray(out[:, 0]), np.asarray(want))
+
+
+def test_batcher_serves_all_requests():
+    cfg = PRESETS["lm-tiny"]
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6,
+                                               dtype=np.int32), max_new=5)
+            for i in range(6)]
+    b = Batcher(cfg, params, n_slots=4, max_seq=16)
+    results = b.serve(reqs)
+    assert sorted(results) == list(range(6))
+    assert all(len(v) == 5 for v in results.values())
+
+
+def test_single_word_groupby_matches_lexicographic():
+    from repro.core import groupby
+    from repro.core.keys import KeyCodec
+    rng = np.random.default_rng(4)
+    codec = KeyCodec.from_cardinalities({"a": 16, "b": 11})  # 8 bits
+    vals = {"a": jnp.asarray(rng.integers(0, 16, 500)),
+            "b": jnp.asarray(rng.integers(0, 11, 500))}
+    valid = jnp.asarray(rng.random(500) > 0.2)
+    hi, lo = codec.pack(vals, valid)
+    g2 = groupby.group_by_key(hi, lo)
+    g1 = groupby.group_by_key(hi, lo, single_word=True)
+    assert int(g1.n_groups) == int(g2.n_groups)
+    s2 = groupby.segment_sums(g2, {"one": valid.astype(jnp.float32)})
+    s1 = groupby.segment_sums(g1, {"one": valid.astype(jnp.float32)})
+    np.testing.assert_allclose(
+        np.sort(np.asarray(s1["one"])), np.sort(np.asarray(s2["one"])))
+    # per-row group assignment identical up to relabeling
+    r1 = np.asarray(g1.row_group())
+    r2 = np.asarray(g2.row_group())
+    v = np.asarray(valid)
+    import collections
+    m = {}
+    for a, b in zip(r1[v], r2[v]):
+        assert m.setdefault(a, b) == b
+
+
+def test_distributed_cem_single_word_matches():
+    import subprocess, sys, os, textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import CoarsenSpec, cem, estimate_ate
+        from repro.core.cem import pack_keys
+        from repro.core.distributed import make_distributed_cem
+        from repro.data.columnar import Table
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(7)
+        n = 2048
+        x0 = rng.integers(0, 6, n).astype(np.int32)
+        t = (rng.random(n) < 0.4).astype(np.int32)
+        y = (1.5 * t + x0 + rng.normal(0, .3, n)).astype(np.float32)
+        table = Table.from_numpy(dict(x0=x0, t=t, y=y))
+        specs = {"x0": CoarsenSpec.categorical(6)}   # 3-bit keys
+        want = estimate_ate(cem(table, "t", "y", specs).groups)
+        codec, hi, lo = pack_keys(table, specs)
+        f = make_distributed_cem(mesh, capacity=64, key_bits=codec.total_bits)
+        ate, *_ = f(hi, lo, table["t"], table["y"], table.valid)
+        np.testing.assert_allclose(float(ate), float(want.ate), rtol=1e-4)
+        print("SINGLEWORD_OK")
+    """)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=600,
+                          env={**os.environ, "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stderr
+    assert "SINGLEWORD_OK" in proc.stdout

@@ -1,0 +1,66 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/*.json."""
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def main(path="results/dryrun.json", zpath="results/dryrun_zaliql.json"):
+    with open(path) as f:
+        rows = json.load(f)
+    try:
+        with open(zpath) as f:
+            rows += json.load(f)
+    except FileNotFoundError:
+        pass
+    ok = [r for r in rows if r.get("ok")]
+    fail = [r for r in rows if not r.get("ok")]
+    print(f"## §Dry-run — {len(ok)}/{len(rows)} cells compile\n")
+    print("| arch | shape | mesh | kind | compile s | mem/dev GiB | fits 16G |"
+          " µbatch |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        mem = r.get("memory", {})
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{r.get('kind','-')} | {r.get('compile_s','-')} | "
+              f"{fmt_bytes(mem.get('total_nonaliased', 0)) if mem else '-'} |"
+              f" {'Y' if mem.get('fits_16g_hbm') else 'n' if mem else '-'} | "
+              f"{r.get('microbatches', '-')} |")
+    if fail:
+        print("\nFailures:")
+        for r in fail:
+            print(f"- {r['arch']} {r['shape']} {r['mesh']}: {r['error']}")
+
+    print("\n## §Roofline (single-pod 16x16; per-device per-step seconds)\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | bottleneck"
+          " | useful 6ND/HLO | coll. mix |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in ok:
+        if r["mesh"] != "16x16" or "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        mix = ",".join(f"{k}:{v/2**30:.2f}G"
+                       for k, v in sorted(
+                           rl.get("coll_breakdown", {}).items(),
+                           key=lambda kv: -kv[1])[:3])
+        print(f"| {r['arch']} | {r['shape']} | {rl['t_compute_s']:.4f} | "
+              f"{rl['t_memory_s']:.4f} | {rl['t_collective_s']:.4f} | "
+              f"**{rl['bottleneck']}** | "
+              f"{rl.get('useful_ratio', 0):.3f} | {mix} |")
+
+    print("\n### Multi-pod (2x16x16) deltas\n")
+    print("| arch | shape | bottleneck | t_dominant s | mem/dev GiB |")
+    print("|---|---|---|---|---|")
+    for r in ok:
+        if r["mesh"] != "2x16x16" or "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        dom = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+        print(f"| {r['arch']} | {r['shape']} | {rl['bottleneck']} | "
+              f"{dom:.4f} | {fmt_bytes(r['memory']['total_nonaliased'])} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])
