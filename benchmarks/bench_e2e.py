@@ -1,10 +1,9 @@
 """Paper Fig. 8: end-to-end FLIGHTDELAY — CEM runtime per treatment (8a),
 AWMD before/after (8b), ATE per treatment scored against planted truth
 (8c's analogue; our generator materializes true counterfactuals)."""
-import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, smoke, timeit
 from repro.core import (CoarsenSpec, awmd, cem, difference_in_means,
                         estimate_ate, raw_imbalance)
 from repro.data import flightgen
@@ -28,7 +27,9 @@ def specs_for(t):
     return s
 
 
-def main(n_flights=200_000):
+def main(n_flights=None):
+    if n_flights is None:
+        n_flights = 50_000 if smoke() else 200_000
     data = flightgen.generate(n_flights=n_flights, n_airports=8, seed=0)
     joined = data.integrated
     for tname in CO:

@@ -7,7 +7,6 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
-from repro.core import oracle
 from repro.kernels import (cem_keys_op, knn_topk_op,
                            logistic_newton_terms_op, segment_sums_op)
 from repro.kernels import ref

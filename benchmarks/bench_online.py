@@ -1,0 +1,92 @@
+"""Online engine: per-batch delta maintenance vs full offline recompute.
+
+The claim under measurement (paper's online setting): once a base table is
+materialized, folding a small streamed batch in and re-answering the causal
+query costs O(batch + stat-table capacity) — asymptotically below the
+offline path, which re-coarsens/re-groups ALL rows per refresh.
+
+Emits, per batch size B:
+  online_ingest_bB        fold one B-row batch into every view
+  online_query_bB         uncached ATE from materialized state
+  online_cached_query_bB  repeat ATE (estimate cache hit)
+  offline_recompute_bB    full CEM + ATE over the N+B-row table
+with derived = offline/online speedup of the ingest+query path.
+
+REPRO_BENCH_SMOKE=1 shrinks N for CI smoke runs (full mode: N = 2^20).
+"""
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, smoke, timeit
+from repro.core import CoarsenSpec, OnlineEngine, cem, estimate_ate
+from repro.data.columnar import Table
+
+SPECS = {"x0": CoarsenSpec.categorical(8), "x1": CoarsenSpec.categorical(6),
+         "x2": CoarsenSpec.categorical(5)}
+TREATMENTS = {"t": ["x0", "x1", "x2"]}
+
+
+def _gen(n, seed):
+    rng = np.random.default_rng(seed)
+    cols = {
+        "x0": rng.integers(0, 8, n).astype(np.int32),
+        "x1": rng.integers(0, 6, n).astype(np.int32),
+        "x2": rng.integers(0, 5, n).astype(np.int32),
+    }
+    p = 0.15 + 0.6 * cols["x0"] / 7
+    cols["t"] = (rng.random(n) < p).astype(np.int32)
+    cols["y"] = (2.0 * cols["t"] + 1.5 * cols["x0"]
+                 + rng.normal(0, 0.5, n)).astype(np.float32)
+    return cols
+
+
+def main() -> None:
+    n = 1 << 16 if smoke() else 1 << 20
+    batch_sizes = [256, 4096] if smoke() else [256, 4096, 65536]
+    warmup, iters = 1, 3
+    base_cols = _gen(n, seed=0)
+    base = Table.from_numpy(base_cols)
+
+    eng = OnlineEngine.from_table(base, SPECS, TREATMENTS, "y")
+    ingested = [base_cols]
+    for bs in batch_sizes:
+        # one DISTINCT batch per timed call: re-ingesting the same rows
+        # would mutate the engine away from the offline baseline and let
+        # every repeat hit the warm fast path
+        feed = [_gen(bs, seed=bs + i) for i in range(warmup + iters)]
+        batches = iter([Table.from_numpy(c) for c in feed])
+        t_ing, _ = timeit(lambda: eng.ingest(next(batches)),
+                          warmup=warmup, iters=iters)
+        ingested += feed
+        emit(f"online_ingest_b{bs}", t_ing,
+             f"n={n} views={len(eng.views) + 1}")
+
+        def query():
+            eng._cache.clear()
+            return eng.ate("t")
+        t_q, _ = timeit(query)
+        emit(f"online_query_b{bs}", t_q,
+             f"groups={int(eng.views['t'].cuboid.n_groups())}")
+
+        t_cq, _ = timeit(lambda: eng.ate("t"))
+        emit(f"online_cached_query_b{bs}", t_cq, "")
+
+        # offline recompute over the SAME rows the engine now holds
+        full = Table.from_numpy(
+            {k: np.concatenate([c[k] for c in ingested])
+             for k in base_cols})
+
+        def offline():
+            return estimate_ate(cem(full, "t", "y", SPECS).groups)
+        t_off, _ = timeit(offline)
+        speedup = t_off / max(t_ing + t_q, 1e-12)
+        emit(f"offline_recompute_b{bs}", t_off,
+             f"online_speedup={speedup:.1f}x")
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    main()

@@ -7,14 +7,12 @@
 """
 import time
 
-import numpy as np
-import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.core import (CoarsenSpec, cem, cem_join_pushdown, covariate_factoring,
                         cube, estimate_ate, mcem, prepare)
 from repro.data import flightgen
-from repro.data.columnar import Table, compact
+from repro.data.columnar import compact
 from repro.data.join import fk_join
 
 RANGES = {"w_precipm": (0, 3), "w_wspdm": (0, 80), "w_hum": (0, 100),

@@ -15,7 +15,6 @@ from repro.data.columnar import Table
 
 def _awmd_match(table, result, covs):
     """AWMD over a k-NN matched sample (treated + their matched controls)."""
-    t = np.asarray(table["snow"])
     ok = np.asarray(result.ok)
     idx = np.asarray(result.idx)
     tmask = np.asarray(result.treated_mask) & ok.any(1)

@@ -32,8 +32,6 @@ def main():
         if not rl:
             continue
         dom = rl["bottleneck"]
-        t_dom = rl[f"t_{dom}_s"] if f"t_{dom}_s" in rl else \
-            rl.get("t_" + dom + "_s", 0)
         emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
              max(rl.get("t_compute_s", 0), rl.get("t_memory_s", 0),
                  rl.get("t_collective_s", 0)),

@@ -2,11 +2,10 @@
 with data size. Also shows the beyond-paper 1-D sorted NNM fast path
 (the paper's NNM is 'by necessity quadratic'; on PS distance it is not)."""
 import numpy as np
-import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.core import (CoarsenSpec, cem, estimate_ate, exact_matching,
-                        knn_quadratic, knn_sorted_1d, ntile, subclassify)
+                        knn_quadratic, knn_sorted_1d, subclassify)
 from repro.data.columnar import Table
 
 

@@ -1,7 +1,16 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission (rows also collect in
+``RESULTS`` so run.py can publish a JSON artifact per CI run)."""
+import os
 import time
 
 import numpy as np
+
+RESULTS = []
+
+
+def smoke() -> bool:
+    """CI smoke mode: shrink problem sizes (set REPRO_BENCH_SMOKE=1)."""
+    return bool(os.environ.get("REPRO_BENCH_SMOKE"))
 
 
 def timeit(fn, *args, warmup=1, iters=3, block=None):
@@ -25,4 +34,6 @@ def _block(out):
 
 
 def emit(name: str, seconds: float, derived: str = ""):
+    RESULTS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                    "derived": derived})
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -24,7 +24,6 @@ from repro.core import (CoarsenSpec, cem, difference_in_means, estimate_ate)
 from repro.data.columnar import Table
 from repro.launch.train import PRESETS
 from repro.models import forward, init_params
-from repro.train import cross_entropy
 
 TRUE_EFFECT = -0.30
 

@@ -15,7 +15,6 @@ Run:  PYTHONPATH=src python examples/flight_delay_analysis.py [--flights N]
 import argparse
 import time
 
-import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (CoarsenSpec, awmd, cem, cem_join_pushdown,

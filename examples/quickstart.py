@@ -7,7 +7,6 @@ diagnostics — the paper's core loop (CEM -> overlap filter -> Eq. 4 ATE).
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core import (CoarsenSpec, awmd, cem, difference_in_means,
                         estimate_ate, raw_imbalance)

@@ -8,7 +8,7 @@ from repro.core import groupby
 from repro.core.cem import (CEMGroups, CEMResult, cem, cem_from_keys,
                             exact_matching, make_codec, pack_keys)
 from repro.core.ate import (ATEEstimate, cem_weights, difference_in_means,
-                            estimate_ate)
+                            estimate_ate, estimate_ate_from_stats)
 from repro.core.balance import awmd, raw_imbalance
 from repro.core.propensity import (LogisticModel, fit_logistic, predict_ps,
                                    propensity_scores)
@@ -25,15 +25,17 @@ from repro.core import cube
 from repro.core.pushdown import (PushdownResult, cem_join_pushdown,
                                  cem_overlap_filter)
 from repro.core.prepare import PreparedDatabase, prepare
+from repro.core.online import DeltaReport, OnlineEngine
 
 __all__ = [
     "CoarsenSpec", "coarsen", "coarsen_columns", "KeyCodec", "groupby",
     "CEMGroups", "CEMResult", "cem", "cem_from_keys", "exact_matching",
     "make_codec", "pack_keys", "ATEEstimate", "cem_weights",
-    "difference_in_means", "estimate_ate", "awmd", "raw_imbalance",
+    "difference_in_means", "estimate_ate", "estimate_ate_from_stats",
+    "awmd", "raw_imbalance",
     "LogisticModel", "fit_logistic", "predict_ps", "propensity_scores",
     "SubclassResult", "ntile", "subclassify", "MatchResult", "greedy_nnmnr",
     "knn_quadratic", "knn_sorted_1d", "nnmnr", "nnmwr", "nnmwr_att",
     "features", "mahalanobis_transform", "masked_covariance",
-    "pairwise_sqdist", "ps_distance_features",
+    "pairwise_sqdist", "ps_distance_features", "DeltaReport", "OnlineEngine",
 ]

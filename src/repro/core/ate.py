@@ -12,7 +12,6 @@ estimator (e.g. weighted least squares) can consume the match.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax.numpy as jnp
 
@@ -38,39 +37,57 @@ def _group_means(groups: CEMGroups):
     return nt, nc, mean_t, mean_c
 
 
+def estimate_ate_from_stats(keep: jnp.ndarray, n_treated: jnp.ndarray,
+                            n_control: jnp.ndarray, sum_y_t: jnp.ndarray,
+                            sum_y_c: jnp.ndarray) -> ATEEstimate:
+    """ATE/ATT straight from decomposable group stats (no row access).
+
+    This is the estimator the online engine runs over materialized cuboid
+    stat tables: O(#groups), independent of data size. Variance is 0 (it
+    needs row-level second moments; use :func:`estimate_ate` with rows)."""
+    nt = jnp.where(keep, n_treated, 0.0)
+    nc = jnp.where(keep, n_control, 0.0)
+    mean_t = jnp.where(nt > 0, sum_y_t / jnp.maximum(nt, 1e-9), 0.0)
+    mean_c = jnp.where(nc > 0, sum_y_c / jnp.maximum(nc, 1e-9), 0.0)
+    diff = mean_t - mean_c
+    n_b = nt + nc
+    n_tot = jnp.maximum(jnp.sum(n_b), 1e-9)
+    ate = jnp.sum(jnp.where(keep, n_b * diff, 0.0)) / n_tot
+    t_tot = jnp.maximum(jnp.sum(nt), 1e-9)
+    att = jnp.sum(jnp.where(keep, nt * diff, 0.0)) / t_tot
+    return ATEEstimate(ate=ate, att=att,
+                       n_matched_treated=jnp.sum(nt),
+                       n_matched_control=jnp.sum(nc),
+                       n_groups=jnp.sum(keep.astype(jnp.int32)),
+                       variance=jnp.float32(0.0))
+
+
 def estimate_ate(groups: CEMGroups,
                  y: jnp.ndarray = None, treatment: jnp.ndarray = None,
                  matched_valid: jnp.ndarray = None) -> ATEEstimate:
     """ATE/ATT from group stats. If (y, treatment, matched_valid) are given,
     a within-group variance estimate is included (else 0)."""
+    est = estimate_ate_from_stats(groups.keep, groups.n_treated,
+                                  groups.n_control, groups.sum_y_t,
+                                  groups.sum_y_c)
+    if y is None:
+        return est
     nt, nc, mean_t, mean_c = _group_means(groups)
-    diff = mean_t - mean_c
     n_b = nt + nc
     n_tot = jnp.maximum(jnp.sum(n_b), 1e-9)
-    ate = jnp.sum(jnp.where(groups.keep, n_b * diff, 0.0)) / n_tot
-    t_tot = jnp.maximum(jnp.sum(nt), 1e-9)
-    att = jnp.sum(jnp.where(groups.keep, nt * diff, 0.0)) / t_tot
-
-    var = jnp.float32(0.0)
-    if y is not None:
-        g = groups.grouping
-        w = matched_valid.astype(jnp.float32)
-        t = treatment.astype(jnp.float32) * w
-        c = (1.0 - treatment.astype(jnp.float32)) * w
-        yf = y.astype(jnp.float32)
-        sums = groupby.segment_sums(g, {"yy_t": t * yf * yf,
-                                        "yy_c": c * yf * yf})
-        # within-arm variance per group, Neyman-style
-        var_t = sums["yy_t"] / jnp.maximum(nt, 1e-9) - mean_t ** 2
-        var_c = sums["yy_c"] / jnp.maximum(nc, 1e-9) - mean_c ** 2
-        se2_b = (var_t / jnp.maximum(nt, 1.0) + var_c / jnp.maximum(nc, 1.0))
-        var = jnp.sum(jnp.where(groups.keep, (n_b / n_tot) ** 2 * se2_b, 0.0))
-
-    return ATEEstimate(ate=ate, att=att,
-                       n_matched_treated=jnp.sum(nt),
-                       n_matched_control=jnp.sum(nc),
-                       n_groups=jnp.sum(groups.keep.astype(jnp.int32)),
-                       variance=var)
+    g = groups.grouping
+    w = matched_valid.astype(jnp.float32)
+    t = treatment.astype(jnp.float32) * w
+    c = (1.0 - treatment.astype(jnp.float32)) * w
+    yf = y.astype(jnp.float32)
+    sums = groupby.segment_sums(g, {"yy_t": t * yf * yf,
+                                    "yy_c": c * yf * yf})
+    # within-arm variance per group, Neyman-style
+    var_t = sums["yy_t"] / jnp.maximum(nt, 1e-9) - mean_t ** 2
+    var_c = sums["yy_c"] / jnp.maximum(nc, 1e-9) - mean_c ** 2
+    se2_b = (var_t / jnp.maximum(nt, 1.0) + var_c / jnp.maximum(nc, 1.0))
+    var = jnp.sum(jnp.where(groups.keep, (n_b / n_tot) ** 2 * se2_b, 0.0))
+    return dataclasses.replace(est, variance=var)
 
 
 def cem_weights(groups: CEMGroups, treatment: jnp.ndarray,

@@ -11,9 +11,8 @@ factoring optimizer reuse. :func:`cem` is the user-facing Table API.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Mapping, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import groupby
@@ -55,6 +54,24 @@ class CEMResult:
     key_lo: jnp.ndarray
 
 
+def overlap_keep(group_valid: jnp.ndarray, n_treated: jnp.ndarray,
+                 n_control: jnp.ndarray) -> jnp.ndarray:
+    """The paper's overlap filter ``max(T) != min(T)`` on group stats: a
+    group is matched iff it has >=1 treated and >=1 control valid unit."""
+    return group_valid & (n_treated > 0) & (n_control > 0)
+
+
+def update_overlap(keep: jnp.ndarray, group_valid: jnp.ndarray,
+                   n_treated: jnp.ndarray, n_control: jnp.ndarray,
+                   positions: jnp.ndarray) -> jnp.ndarray:
+    """Incremental CEM: re-evaluate overlap only at ``positions`` (the group
+    ids a delta batch touched), flipping groups in and out of the matched
+    set in O(|positions|) instead of re-filtering every group."""
+    new = (group_valid[positions] & (n_treated[positions] > 0)
+           & (n_control[positions] > 0))
+    return keep.at[positions].set(new)
+
+
 def cem_from_keys(key_hi: jnp.ndarray, key_lo: jnp.ndarray,
                   treatment: jnp.ndarray, outcome: jnp.ndarray,
                   valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, CEMGroups]:
@@ -71,7 +88,7 @@ def cem_from_keys(key_hi: jnp.ndarray, key_lo: jnp.ndarray,
     sums = groupby.segment_sums(g, {
         "n_t": t, "n_c": c, "y_t": t * y, "y_c": c * y,
     })
-    keep = g.group_valid & (sums["n_t"] > 0) & (sums["n_c"] > 0)
+    keep = overlap_keep(g.group_valid, sums["n_t"], sums["n_c"])
     row_keep = groupby.broadcast_to_rows(g, keep)
     matched_valid = valid & row_keep
     row_subclass = g.row_group()

@@ -15,16 +15,17 @@ and the distributed combine are literally one mechanism.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+import functools
+from typing import Dict, Mapping, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import groupby
-from repro.core.ate import ATEEstimate
-from repro.core.cem import CEMGroups, make_codec
+from repro.core.cem import CEMGroups, make_codec, overlap_keep
 from repro.core.coarsen import CoarsenSpec, coarsen_columns
-from repro.core.keys import KeyCodec
+from repro.core.keys import INVALID_HI, INVALID_LO, KeyCodec
 from repro.data.columnar import Table, _round_capacity
 
 
@@ -56,24 +57,80 @@ class Cuboid:
         return jnp.sum(self.group_valid.astype(jnp.int32))
 
 
+def stat_names(treatments: Sequence[str]) -> Tuple[str, ...]:
+    """The decomposable stat columns a cuboid carries for ``treatments``."""
+    names = ["one", "y"]
+    for t in treatments:
+        names += [f"t_{t}", f"yt_{t}"]
+    return tuple(names)
+
+
+def empty_cuboid(codec: KeyCodec, treatments: Sequence[str],
+                 capacity: int = 1024) -> Cuboid:
+    """All-invalid cuboid of ``capacity`` slots — the seed state of online
+    delta maintenance (first ingest takes the re-sort merge path)."""
+    return Cuboid(
+        codec=codec,
+        key_hi=jnp.full((capacity,), INVALID_HI, dtype=jnp.uint32),
+        key_lo=jnp.full((capacity,), INVALID_LO, dtype=jnp.uint32),
+        stats={k: jnp.zeros((capacity,), jnp.float32)
+               for k in stat_names(treatments)},
+        group_valid=jnp.zeros((capacity,), bool),
+        treatments=tuple(treatments))
+
+
+@functools.lru_cache(maxsize=256)
+def _build_fn(codec: KeyCodec, specs_items: Tuple, treatments: Tuple[str, ...],
+              outcome: str):
+    """Jitted group+aggregate body of build_cuboid, cached per schema.
+
+    Online ingest builds a delta cuboid per batch; eagerly that is dozens
+    of small dispatches (~15ms) dominating the per-batch cost. Schema and
+    shapes are stable across a stream, so one trace amortizes away."""
+    specs = dict(specs_items)
+
+    @jax.jit
+    def fn(columns, valid):
+        buckets = coarsen_columns(columns, specs)
+        hi, lo = codec.pack(buckets, valid)
+        g = groupby.group_by_key(hi, lo)
+        w = valid.astype(jnp.float32)
+        y = columns[outcome].astype(jnp.float32)
+        cols = {"one": w, "y": w * y}
+        for t in treatments:
+            tv = columns[t].astype(jnp.float32) * w
+            cols[f"t_{t}"] = tv
+            cols[f"yt_{t}"] = tv * y
+        sums = groupby.segment_sums(g, cols)
+        return g.group_hi, g.group_lo, sums, g.group_valid
+    return fn
+
+
 def build_cuboid(table: Table, specs: Mapping[str, CoarsenSpec],
                  treatments: Sequence[str], outcome: str) -> Cuboid:
     """Base cuboid: group the relation by ALL dims, store decomposable stats."""
     codec = make_codec(specs)
-    buckets = coarsen_columns(table.columns, specs)
-    hi, lo = codec.pack(buckets, table.valid)
-    g = groupby.group_by_key(hi, lo)
-    w = table.valid.astype(jnp.float32)
-    y = table[outcome].astype(jnp.float32)
-    cols = {"one": w, "y": w * y}
-    for t in treatments:
-        tv = table[t].astype(jnp.float32) * w
-        cols[f"t_{t}"] = tv
-        cols[f"yt_{t}"] = tv * y
-    sums = groupby.segment_sums(g, cols)
-    return Cuboid(codec=codec, key_hi=g.group_hi, key_lo=g.group_lo,
-                  stats=sums, group_valid=g.group_valid,
-                  treatments=tuple(treatments))
+    fn = _build_fn(codec, tuple(sorted(specs.items())), tuple(treatments),
+                   outcome)
+    hi, lo, sums, gv = fn(dict(table.columns), table.valid)
+    return Cuboid(codec=codec, key_hi=hi, key_lo=lo, stats=sums,
+                  group_valid=gv, treatments=tuple(treatments))
+
+
+@functools.lru_cache(maxsize=256)
+def _rollup_fn(codec: KeyCodec, dims: Tuple[str, ...]):
+    """Jitted re-key + re-aggregate body of rollup, cached per (codec, dims)
+    — same rationale as :func:`_build_fn`."""
+    sub = codec.subcodec(dims)
+
+    @jax.jit
+    def fn(key_hi, key_lo, group_valid, stats):
+        buckets = {n: codec.extract(key_hi, key_lo, n) for n in sub.names}
+        shi, slo = sub.pack(buckets, group_valid)
+        g = groupby.group_by_key(shi, slo)
+        sums = groupby.segment_sums(g, stats)
+        return g.group_hi, g.group_lo, sums, g.group_valid
+    return fn
 
 
 def rollup(cuboid: Cuboid, dims: Sequence[str]) -> Cuboid:
@@ -82,13 +139,11 @@ def rollup(cuboid: Cuboid, dims: Sequence[str]) -> Cuboid:
     missing = set(dims) - set(cuboid.dims)
     if missing:
         raise ValueError(f"dims {missing} not in cuboid {cuboid.dims}")
-    sub, shi, slo = cuboid.codec.rollup(cuboid.key_hi, cuboid.key_lo, dims,
-                                        cuboid.group_valid)
-    g = groupby.group_by_key(shi, slo)
-    sums = groupby.segment_sums(g, cuboid.stats)
-    return Cuboid(codec=sub, key_hi=g.group_hi, key_lo=g.group_lo,
-                  stats=sums, group_valid=g.group_valid,
-                  treatments=cuboid.treatments)
+    fn = _rollup_fn(cuboid.codec, tuple(dims))
+    shi, slo, sums, gv = fn(cuboid.key_hi, cuboid.key_lo,
+                            cuboid.group_valid, dict(cuboid.stats))
+    return Cuboid(codec=cuboid.codec.subcodec(dims), key_hi=shi, key_lo=slo,
+                  stats=sums, group_valid=gv, treatments=cuboid.treatments)
 
 
 def compact_cuboid(cuboid: Cuboid, granule: int = 1024) -> Cuboid:
@@ -112,6 +167,66 @@ def compact_cuboid(cuboid: Cuboid, granule: int = 1024) -> Cuboid:
         treatments=cuboid.treatments)
 
 
+def delta_cuboid(batch: Table, specs: Mapping[str, CoarsenSpec],
+                 treatments: Sequence[str], outcome: str,
+                 granule: int = 256) -> Cuboid:
+    """Stat table of ONE streamed batch, compacted small: the unit of online
+    delta maintenance. Cost is O(batch), never O(total data)."""
+    return compact_cuboid(build_cuboid(batch, specs, treatments, outcome),
+                          granule=granule)
+
+
+def merge_delta(base: Cuboid, delta: Cuboid, granule: int = 1024,
+                use_pallas: bool = False
+                ) -> Tuple[Cuboid, jnp.ndarray, bool]:
+    """Fold a delta stat table into a materialized cuboid.
+
+    Fast path (every valid delta key already exists in ``base``): scatter-add
+    the delta stats at the looked-up positions — O(|delta groups|) work and
+    the merged cuboid keeps ``base``'s row layout, so incrementally
+    maintained per-group state (e.g. CEM keep masks) stays aligned.
+
+    Slow path (new group keys, including the first merge into an empty
+    cuboid): re-sort merge — the same combine ``repro.core.distributed``
+    uses to fold per-chip stat tables — with geometric capacity growth.
+
+    Returns (merged, positions of delta groups in merged, fast_path).
+    """
+    if base.codec.fields != delta.codec.fields:
+        raise ValueError("codec mismatch in merge_delta")
+    if set(base.stats) != set(delta.stats):
+        raise ValueError("stat-column mismatch in merge_delta")
+    pos, found = groupby.lookup_rows_in_table(
+        delta.key_hi, delta.key_lo, base.key_hi, base.key_lo)
+    ok = np.asarray(found) | ~np.asarray(delta.group_valid)
+    if ok.all():
+        if use_pallas:
+            from repro.kernels.ops import scatter_merge_op
+            names = sorted(base.stats)
+            table = jnp.stack([base.stats[k] for k in names], axis=1)
+            vals = jnp.stack([delta.stats[k] for k in names], axis=1)
+            merged = scatter_merge_op(table, pos, vals)
+            stats = {k: merged[:, j] for j, k in enumerate(names)}
+        else:
+            stats = groupby.scatter_add_stats(base.stats, pos, delta.stats)
+        return dataclasses.replace(base, stats=stats), pos, True
+    cat_hi = jnp.concatenate([base.key_hi, delta.key_hi])
+    cat_lo = jnp.concatenate([base.key_lo, delta.key_lo])
+    cat_stats = {k: jnp.concatenate([base.stats[k], delta.stats[k]])
+                 for k in base.stats}
+    g = groupby.group_by_key(cat_hi, cat_lo)
+    sums = groupby.segment_sums(g, cat_stats)
+    merged_full = Cuboid(codec=base.codec, key_hi=g.group_hi,
+                         key_lo=g.group_lo, stats=sums,
+                         group_valid=g.group_valid,
+                         treatments=base.treatments)
+    # never shrink: growth is geometric in multiples of the old capacity
+    out = compact_cuboid(merged_full, granule=max(granule, base.capacity))
+    pos2, _ = groupby.lookup_rows_in_table(
+        delta.key_hi, delta.key_lo, out.key_hi, out.key_lo)
+    return out, pos2, False
+
+
 def cem_groups_from_cuboid(cuboid: Cuboid, treatment: str) -> CEMGroups:
     """CEM group stats for one treatment straight from a cuboid whose dims
     are exactly that treatment's covariates (use :func:`rollup` first)."""
@@ -120,7 +235,7 @@ def cem_groups_from_cuboid(cuboid: Cuboid, treatment: str) -> CEMGroups:
     nc = n - nt
     yt = cuboid.stats[f"yt_{treatment}"]
     yc = cuboid.stats["y"] - yt
-    keep = cuboid.group_valid & (nt > 0) & (nc > 0)
+    keep = overlap_keep(cuboid.group_valid, nt, nc)
     # CEMGroups wants a Grouping; cuboid-level estimation never touches the
     # row-level fields, so install an inert one.
     dummy = groupby.Grouping(

@@ -12,7 +12,7 @@ into squared Euclidean distance and the matching kernel only ever computes
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax.numpy as jnp
 

@@ -27,15 +27,13 @@ Both are shard_map programs over a 1-D "data" axis (the flattened
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Mapping, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import groupby
-from repro.core.cem import CEMGroups
 from repro.core.matching import BIG, _topk_merge
 
 

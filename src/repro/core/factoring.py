@@ -16,13 +16,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Mapping, Sequence, Set, Tuple
+from typing import List, Mapping, Sequence, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import groupby
-from repro.core.cem import cem_from_keys, make_codec, pack_keys
+from repro.core.cem import cem_from_keys, pack_keys
 from repro.core.coarsen import CoarsenSpec
 from repro.data.columnar import Table
 

@@ -135,6 +135,18 @@ def combine_stat_tables(hi: jnp.ndarray, lo: jnp.ndarray,
     return ghi, glo, out, overflow
 
 
+def scatter_add_stats(stats: Mapping[str, jnp.ndarray], pos: jnp.ndarray,
+                      delta: Mapping[str, jnp.ndarray]
+                      ) -> Dict[str, jnp.ndarray]:
+    """Merge a delta stat table into ``stats`` at known row positions —
+    the O(|delta|) fast path of online cuboid maintenance (positions come
+    from :func:`lookup_rows_in_table`). Pure-jnp reference; the MXU one-hot
+    path is ``repro.kernels.scatter_merge_op``."""
+    return {k: v.at[pos].add(delta[k].astype(v.dtype))
+            for k, v in stats.items()}
+
+
+@jax.jit
 def lookup_rows_in_table(hi: jnp.ndarray, lo: jnp.ndarray,
                          table_hi: jnp.ndarray, table_lo: jnp.ndarray
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -142,7 +154,9 @@ def lookup_rows_in_table(hi: jnp.ndarray, lo: jnp.ndarray,
 
     Returns (pos, found). Rows whose key is absent get found=False.
     Table must be sorted lexicographically by (hi, lo) — group tables from
-    :func:`group_by_key` already are.
+    :func:`group_by_key` already are. Jitted: the eager vmap-of-scan search
+    costs ~100ms/call, which would dominate online delta maintenance;
+    shapes are stable across a stream, so the trace amortizes to one.
     """
     # Vectorized binary search over the composite (hi, lo) key.
     n_table = table_hi.shape[0]

@@ -15,9 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Set, Tuple
 
-import jax.numpy as jnp
 
 from repro.core import cube as cube_mod
 from repro.core.ate import ATEEstimate, estimate_ate

@@ -9,7 +9,7 @@ and pure-jnp reference.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,12 +41,21 @@ def _standardize(X: jnp.ndarray, valid: jnp.ndarray):
 
 def fit_logistic(X: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
                  n_iter: int = 32, ridge: float = 1e-4,
+                 init: Optional[LogisticModel] = None,
                  ) -> LogisticModel:
     """Newton-Raphson logistic regression on valid rows.
 
     X: (N, d) raw features; t: (N,) binary treatment; valid: (N,) mask.
+    ``init`` warm-starts from a previous model: its coefficients seed the
+    iteration and its standardization is FROZEN (so coefficients stay
+    comparable across online refreshes); ``n_iter`` is then the step budget
+    of the refresh, typically far below a cold fit's.
     """
-    Xs, mean, std = _standardize(X, valid)
+    if init is not None:
+        mean, std = init.mean, init.std
+        Xs = (X - mean) / std
+    else:
+        Xs, mean, std = _standardize(X, valid)
     n, d = Xs.shape
     Xb = jnp.concatenate([Xs, jnp.ones((n, 1), jnp.float32)], axis=1)
     m = valid.astype(jnp.float32)
@@ -61,10 +70,20 @@ def fit_logistic(X: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
         dw = jnp.linalg.solve(H, g)
         return w - dw, jnp.linalg.norm(g)
 
-    w0 = jnp.zeros((d + 1,), jnp.float32)
+    w0 = (init.w if init is not None
+          else jnp.zeros((d + 1,), jnp.float32))
     w, gnorms = jax.lax.scan(step, w0, None, length=n_iter)
     return LogisticModel(w=w, mean=mean, std=std,
                          converged=gnorms[-1] < 1e-3 * (1 + jnp.sum(m)) ** 0.5)
+
+
+def warm_refit(model: LogisticModel, X: jnp.ndarray, t: jnp.ndarray,
+               valid: jnp.ndarray, n_iter: int = 4, ridge: float = 1e-4
+               ) -> LogisticModel:
+    """Online propensity refresh: resume Newton from ``model`` with a small
+    step budget (Newton contracts quadratically near the optimum, so a
+    handful of steps re-converges after a small data delta)."""
+    return fit_logistic(X, t, valid, n_iter=n_iter, ridge=ridge, init=model)
 
 
 def predict_ps(model: LogisticModel, X: jnp.ndarray) -> jnp.ndarray:

@@ -13,7 +13,7 @@ groups before any flight row is touched.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Tuple
+from typing import Mapping
 
 import jax.numpy as jnp
 

@@ -8,7 +8,7 @@ everything stays jit/pjit-compatible. Aggregates are mask-weighted.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterator, Mapping
+from typing import Dict, Iterator, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -150,6 +150,64 @@ def compact(table: Table, granule: int = 4096) -> Table:
     valid = np.zeros(n_out, dtype=bool)
     valid[:len(idx)] = True
     return Table.from_numpy(cols, valid)
+
+
+@dataclasses.dataclass(frozen=True)
+class GrowableTable:
+    """Append-only table for the online engine (INSERT INTO ... VALUES).
+
+    ``table`` holds ``capacity`` slots; slots at index >= ``used`` are dead
+    padding (valid=False) awaiting future appends. Appends that fit in the
+    current capacity are a device-side ``dynamic_update_slice`` (shape
+    unchanged, so jitted consumers don't recompile); appends that overflow
+    grow the capacity geometrically past :func:`_round_capacity` on the host.
+    """
+
+    table: Table
+    used: int
+
+    @classmethod
+    def from_table(cls, table: Table, granule: int = 4096) -> "GrowableTable":
+        cap = _round_capacity(table.nrows, granule)
+        if cap == table.nrows:
+            return cls(table=table, used=table.nrows)
+        pad = cap - table.nrows
+        cols = {}
+        for name, col in table.columns.items():
+            a = np.asarray(col)
+            cols[name] = np.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+        valid = np.pad(np.asarray(table.valid), (0, pad))
+        return cls(table=Table.from_numpy(cols, valid), used=table.nrows)
+
+    @property
+    def capacity(self) -> int:
+        return self.table.nrows
+
+    def append(self, batch: Table, granule: int = 4096) -> "GrowableTable":
+        """Append ``batch`` rows (with their validity) after slot ``used``."""
+        if set(batch.columns) != set(self.table.columns):
+            raise ValueError("schema mismatch in append")
+        new_used = self.used + batch.nrows
+        base = self.table
+        if new_used > base.nrows:
+            # host-side geometric growth: at least double, rounded to granule
+            cap = _round_capacity(max(new_used, 2 * base.nrows), granule)
+            pad = cap - base.nrows
+            cols = {}
+            for name, col in base.columns.items():
+                a = np.asarray(col)
+                cols[name] = jnp.asarray(
+                    np.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)))
+            valid = jnp.asarray(np.pad(np.asarray(base.valid), (0, pad)))
+            base = Table(cols, valid)
+        cols = {}
+        for name, col in base.columns.items():
+            update = batch.columns[name].astype(col.dtype)
+            cols[name] = jax.lax.dynamic_update_slice_in_dim(
+                col, update, self.used, axis=0)
+        valid = jax.lax.dynamic_update_slice_in_dim(
+            base.valid, batch.valid, self.used, axis=0)
+        return GrowableTable(table=Table(cols, valid), used=new_used)
 
 
 def concat(tables: list) -> Table:

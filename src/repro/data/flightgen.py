@@ -21,7 +21,7 @@ hour, traffic, delay, cancelled).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 

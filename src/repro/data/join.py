@@ -7,7 +7,7 @@ each fact key, gather. Output shape == fact shape (static).
 """
 from __future__ import annotations
 
-from typing import Dict, Mapping, Sequence, Tuple
+from typing import Dict, Mapping, Tuple
 
 import jax
 import jax.numpy as jnp

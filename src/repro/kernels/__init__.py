@@ -4,12 +4,14 @@ Kernels (each <name>.py has the pl.pallas_call + BlockSpec tiling; ops.py
 holds the jit'd wrappers; ref.py the pure-jnp oracles):
 
   cem_keys       fused coarsen + 63-bit key pack (memory-bound, 1 pass)
-  segment_stats  MXU one-hot-matmul segmented reduction (GROUP BY core)
+  segment_stats  MXU one-hot-matmul segmented reduction (GROUP BY core),
+                 plus the scatter-merge of online delta stat tables
   knn_topk       tiled all-pairs distance + running top-k (NNM core)
   logistic_grad  fused Newton gradient+Hessian (propensity core)
 """
 from repro.kernels.ops import (cem_keys_op, knn_topk_op,
-                               logistic_newton_terms_op, segment_sums_op)
+                               logistic_newton_terms_op, scatter_merge_op,
+                               segment_sums_op)
 
 __all__ = ["cem_keys_op", "knn_topk_op", "logistic_newton_terms_op",
-           "segment_sums_op"]
+           "scatter_merge_op", "segment_sums_op"]

@@ -7,20 +7,19 @@ slice padding back off. `repro.core` calls these; `ref.py` holds oracles.
 """
 from __future__ import annotations
 
-import functools
-from typing import Mapping, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.coarsen import CoarsenSpec
 from repro.core.keys import KeyCodec
 from repro.kernels import ref
 from repro.kernels.cem_keys import cem_keys_pallas
 from repro.kernels.knn_topk import knn_topk_pallas
 from repro.kernels.logistic_grad import logistic_newton_terms_pallas
 from repro.kernels.segment_stats import (combine_partials,
+                                         scatter_merge_pallas,
                                          segment_partials_pallas)
 
 
@@ -77,6 +76,19 @@ def segment_sums_op(values: jnp.ndarray, seg_ids: jnp.ndarray,
     partials = segment_partials_pallas(vp, local, block=block,
                                        interpret=_interpret())
     return combine_partials(partials, base, num_segments + 1)[:num_segments]
+
+
+def scatter_merge_op(table: jnp.ndarray, pos: jnp.ndarray,
+                     vals: jnp.ndarray, block: int = 256) -> jnp.ndarray:
+    """Merge delta stat rows into a (C, S) stat table at known positions
+    (the online engine's fast-path cuboid update). Pads the delta to a
+    block multiple; padding rows contribute zeros."""
+    if pos.shape[0] == 0:  # empty delta: at[].add semantics -> no-op
+        return table.astype(jnp.float32)
+    vp, _ = _pad_rows(vals.astype(jnp.float32), block)
+    pp, _ = _pad_rows(pos.astype(jnp.int32), block, fill=0)  # pad adds 0s
+    return scatter_merge_pallas(table.astype(jnp.float32), pp, vp,
+                                block=block, interpret=_interpret())
 
 
 def knn_topk_op(Q: jnp.ndarray, C: jnp.ndarray, c_valid: jnp.ndarray,

@@ -54,6 +54,16 @@ def segment_partials_ref(values: jnp.ndarray, local_ids: jnp.ndarray,
     return jnp.einsum("bij,bjs->bis", onehot.astype(values.dtype), v)
 
 
+def scatter_merge_ref(table: jnp.ndarray, pos: jnp.ndarray,
+                      vals: jnp.ndarray) -> jnp.ndarray:
+    """Delta stat-table merge: out[pos[j]] += vals[j] (duplicates sum).
+
+    table: (C, S) materialized stats; pos: (B,) destination rows;
+    vals: (B, S) delta stats.
+    """
+    return table.at[pos].add(vals.astype(table.dtype))
+
+
 def knn_topk_ref(Q: jnp.ndarray, C: jnp.ndarray, c_valid: jnp.ndarray,
                  k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """k smallest squared-Euclidean distances (and indices) per query row.

@@ -48,6 +48,51 @@ def segment_partials_pallas(values: jnp.ndarray, local_ids: jnp.ndarray,
     )(local_ids, values)
 
 
+def _scatter_kernel(pos_ref, table_ref, vals_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = table_ref[...]
+
+    pos = pos_ref[...]                 # (B,) int32, in [0, C)
+    vals = vals_ref[...]               # (B, S) f32
+    c = out_ref.shape[0]
+    b = pos.shape[0]
+    onehot = (pos[None, :] == jax.lax.broadcasted_iota(jnp.int32, (c, b), 0)
+              ).astype(vals.dtype)     # (C, B): rows = destination slot
+    out_ref[...] += jnp.dot(onehot, vals,
+                            preferred_element_type=jnp.float32)
+
+
+def scatter_merge_pallas(table: jnp.ndarray, pos: jnp.ndarray,
+                         vals: jnp.ndarray, block: int = 256,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Online delta merge: out[pos[j], s] = table[pos[j], s] + vals[j, s].
+
+    table: (C, S) materialized stat table; pos: (B,) destination rows
+    (B % block == 0); vals: (B, S) delta stats. TPUs have no fast scatter;
+    like the GROUP-BY hot loop this routes the scatter through a one-hot
+    (C, B) @ (B, S) matmul per delta block, accumulating into the output
+    ref across the sequential grid — duplicate positions sum, matching
+    ``jnp.ndarray.at[].add`` semantics.
+    """
+    c, s = table.shape
+    nb = pos.shape[0] // block
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((c, s), lambda i: (0, 0)),
+            pl.BlockSpec((block, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((c, s), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, s), jnp.float32),
+        interpret=interpret,
+    )(pos, table, vals)
+
+
 def combine_partials(partials: jnp.ndarray, block_base: jnp.ndarray,
                      num_segments: int) -> jnp.ndarray:
     """Merge per-block partials into global per-segment sums.

@@ -27,13 +27,12 @@ def main(argv=None):
             f"--xla_force_host_platform_device_count={args.devices}")
 
     import jax
-    import jax.numpy as jnp
     import numpy as np
     from repro.core import CoarsenSpec, difference_in_means
-    from repro.core.cem import make_codec, pack_keys
+    from repro.core.cem import pack_keys
     from repro.core.distributed import make_distributed_cem
     from repro.data import flightgen
-    from repro.data.columnar import Table, compact
+    from repro.data.columnar import compact
 
     n_dev = jax.device_count()
     mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))

@@ -145,7 +145,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec.update(info)
         compiled = lowered.compile()
         ms = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+            ca = ca[0] if ca else {}
+        ca = ca or {}
         rec["ok"] = True
         rec["compile_s"] = round(time.time() - t0, 1)
         total = int(ms.argument_size_in_bytes + ms.output_size_in_bytes
@@ -202,8 +205,6 @@ def zaliql_cell(multi_pod: bool, n_rows_per_dev: int = 1 << 20,
         rec["memory"] = {"total_nonaliased": int(
             ms.argument_size_in_bytes + ms.output_size_in_bytes
             + ms.temp_size_in_bytes - ms.alias_size_in_bytes)}
-        from repro.configs.base import ShapeSpec as SS
-        from repro.roofline import analyze as rl_analyze
         from repro.configs import REGISTRY as R
         hlo = compiled.as_text()
         from repro.roofline.hlo_cost import HloCostModel

@@ -15,11 +15,20 @@ from typing import Tuple
 import jax
 
 
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """`jax.make_mesh` across jax versions: `axis_types` (and
+    `jax.sharding.AxisType`) only exist in newer releases."""
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def dp_axes(mesh) -> Tuple[str, ...]:

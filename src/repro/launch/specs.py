@@ -7,7 +7,6 @@ ride through `tokens` + positions for shape purposes).
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict
 
 import jax

@@ -12,10 +12,8 @@ production meshes unchanged.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import math
 import time
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

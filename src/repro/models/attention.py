@@ -8,7 +8,6 @@ attends over the cache directly (Sq = 1).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

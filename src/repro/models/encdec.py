@@ -8,7 +8,7 @@ from the (fixed) encoder output once at prefill and carried in the cache.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

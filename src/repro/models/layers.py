@@ -5,7 +5,7 @@ runs in cfg.dtype (bf16 on TPU), accumulations and norms in f32.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,7 @@
 """Model facade: config -> init / forward / cache across all families."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

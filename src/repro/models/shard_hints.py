@@ -19,7 +19,7 @@ engine never see them); launch code activates them under a mesh.
 from __future__ import annotations
 
 import contextlib
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

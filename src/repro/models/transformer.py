@@ -15,8 +15,6 @@ train/prefill (full-sequence) vs decode (single token + cache).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -207,7 +205,6 @@ def forward(params: Dict, cfg, tokens: Optional[jnp.ndarray] = None,
         new_cache["blocks"] = nc
     elif fam == "moe":
         if "dense_blocks" in params:
-            nd = cfg.first_dense_layers
             x, a0, nc = _scan_blocks(
                 params["dense_blocks"], x, positions, cfg, "dense",
                 None if cache is None else cache["dense_blocks"], cache_pos,

@@ -17,7 +17,6 @@ m (signed, symmetric absmax); v >= 0 (unsigned [0, 255] codes in uint8).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Tuple
 
 import jax

@@ -12,7 +12,7 @@ MODEL_FLOPS = 6ND / n_chips).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.roofline import hw
 from repro.roofline.hlo_cost import HloCostModel

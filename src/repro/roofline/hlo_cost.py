@@ -147,7 +147,6 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
         # tuple shapes: keep the whole prefix up to the opcode for bytes
         after = rest[sm.end():]
         # skip tuple tail `, f32[...])` and layout `{1,0}` prefixes
-        paren = 0
         k = 0
         while k < len(after) and (after[k] in ", ]}{0123456789()[" or
                                   after[:k + 1].count("[") >

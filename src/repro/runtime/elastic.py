@@ -9,7 +9,7 @@ arrays directly on the new topology.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np

@@ -7,7 +7,6 @@ Microbatching splits the per-call batch and accumulates grads in a scan
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -85,7 +85,6 @@ def test_cem_weights_sum():
     res = cem(table, "t", "y", {k: CoarsenSpec.categorical(4) for k in cols})
     w = np.asarray(cem_weights(res.groups, table["t"], res.table.valid))
     mask = np.asarray(res.table.valid)
-    nt = int((t[mask] == 1).sum())
     nc = int((t[mask] == 0).sum())
     np.testing.assert_allclose(w[mask & (t == 1)], 1.0)
     np.testing.assert_allclose(w[mask & (t == 0)].sum(), nc, rtol=1e-4)

@@ -4,7 +4,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import CoarsenSpec, KeyCodec, coarsen, groupby
-from repro.core.keys import INVALID_HI, INVALID_LO
 from repro.core import oracle
 from repro.data.columnar import Table, concat
 

@@ -17,8 +17,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np
 import jax, jax.numpy as jnp
 assert jax.device_count() == 8, jax.devices()
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("data",))
 """
 
 

@@ -1,0 +1,358 @@
+"""Online incremental engine: exactness of delta maintenance.
+
+The contract under test: after ANY interleaving of ingested (and retracted)
+batches, every materialized cuboid stat, CEM matched set and ATE equals the
+offline computation over the concatenated table — bit-identically when the
+outcome sums are exact (integer-valued outcomes), and to float tolerance
+otherwise (summation order is the only difference).
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (CoarsenSpec, OnlineEngine, cem, estimate_ate,
+                        estimate_ate_from_stats)
+from repro.core import cube
+from repro.core.cem import overlap_keep, update_overlap
+from repro.core.propensity import fit_logistic, predict_ps, warm_refit
+from repro.data.columnar import GrowableTable, Table
+
+
+def _frame(n, seed=0, card=(5, 4, 3), int_outcome=False, x0_lo=0, x0_hi=None):
+    """Confounded frame; x0 range restrictable to control key novelty."""
+    rng = np.random.default_rng(seed)
+    x0_hi = card[0] if x0_hi is None else x0_hi
+    cols = {
+        "x0": rng.integers(x0_lo, x0_hi, n).astype(np.int32),
+        "x1": rng.integers(0, card[1], n).astype(np.int32),
+        "x2": rng.integers(0, card[2], n).astype(np.int32),
+    }
+    p = 0.15 + 0.6 * cols["x0"] / (card[0] - 1)
+    cols["ta"] = (rng.random(n) < p).astype(np.int32)
+    cols["tb"] = (rng.random(n) < 0.4).astype(np.int32)
+    y = 2.0 * cols["ta"] + 1.5 * cols["x0"] + rng.normal(0, 0.5, n)
+    cols["y"] = (np.round(y) if int_outcome else y).astype(np.float32)
+    valid = rng.random(n) > 0.08
+    return cols, valid
+
+
+SPECS = {"x0": CoarsenSpec.categorical(5), "x1": CoarsenSpec.categorical(4),
+         "x2": CoarsenSpec.categorical(3)}
+TREATMENTS = {"ta": ["x0", "x1"], "tb": ["x0", "x2"]}
+
+
+def _batches(cols, valid, sizes):
+    out, s = [], 0
+    for sz in sizes:
+        out.append(Table.from_numpy(
+            {k: v[s:s + sz] for k, v in cols.items()}, valid[s:s + sz]))
+        s += sz
+    assert s == len(valid)
+    return out
+
+
+def _stat_map(cuboid):
+    """{group key: stat tuple} over groups with mass, for exact compares."""
+    gv = np.asarray(cuboid.group_valid) & (np.asarray(cuboid.stats["one"]) > 0)
+    hi = np.asarray(cuboid.key_hi)[gv]
+    lo = np.asarray(cuboid.key_lo)[gv]
+    cols = {k: np.asarray(v)[gv] for k, v in sorted(cuboid.stats.items())}
+    return {(int(h), int(l)): tuple(float(cols[k][i]) for k in cols)
+            for i, (h, l) in enumerate(zip(hi, lo))}
+
+
+def test_delta_batches_bit_identical_to_offline_cuboid():
+    # later batches widen the x0 range -> new group keys mid-stream, so the
+    # merge exercises BOTH the scatter fast path and the re-sort grow path
+    c1, v1 = _frame(3000, seed=1, int_outcome=True, x0_hi=2)
+    c2, v2 = _frame(2000, seed=2, int_outcome=True)
+    cols = {k: np.concatenate([c1[k], c2[k]]) for k in c1}
+    valid = np.concatenate([v1, v2])
+
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    saw_slow_after_seed = False
+    for i, b in enumerate(_batches(cols, valid, [1000] * 5)):
+        rep = eng.ingest(b)
+        if i > 0 and not all(rep.fast_path.values()):
+            saw_slow_after_seed = True
+    assert saw_slow_after_seed, "stream never exercised the grow path"
+
+    full = Table.from_numpy(cols, valid)
+    offline_base = cube.build_cuboid(full, eng.specs, sorted(TREATMENTS), "y")
+    assert _stat_map(eng.base) == _stat_map(offline_base)  # bit-identical
+    for t, view in eng.views.items():
+        off = cube.build_cuboid(
+            full, {d: SPECS[d] for d in view.dims}, sorted(TREATMENTS), "y")
+        assert _stat_map(view.cuboid) == _stat_map(off)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_online_ate_and_matched_set_equal_offline(use_pallas):
+    cols, valid = _frame(4000, seed=3)
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                       use_pallas=use_pallas)
+    for b in _batches(cols, valid, [500] * 8):
+        eng.ingest(b)
+    full = Table.from_numpy(cols, valid)
+    for t, cov in TREATMENTS.items():
+        res = cem(full, t, "y", {c: SPECS[c] for c in cov})
+        want = estimate_ate(res.groups)
+        got = eng.ate(t)
+        np.testing.assert_allclose(float(got.ate), float(want.ate),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(got.att), float(want.att),
+                                   rtol=1e-5, atol=1e-6)
+        assert int(got.n_groups) == int(want.n_groups)
+        assert float(got.n_matched_treated) == float(want.n_matched_treated)
+        assert float(got.n_matched_control) == float(want.n_matched_control)
+        # row-level matched set identical
+        np.testing.assert_array_equal(
+            np.asarray(eng.matched_rows(t, full)),
+            np.asarray(res.table.valid))
+        # maintained group stats identical to offline CEMGroups
+        want_est = estimate_ate(eng.cem_groups(t))
+        np.testing.assert_allclose(float(want_est.ate), float(want.ate),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_groups_gain_overlap_mid_stream():
+    # group (x0=0, x1=0) gets ONLY treated units first -> not matched;
+    # a later batch delivers its first control -> flips into the matched set
+    n = 400
+    x0 = np.zeros(n, np.int32)
+    x1 = np.zeros(n, np.int32)
+    x2 = np.zeros(n, np.int32)
+    ta = np.ones(n, np.int32)
+    ta[300:] = 0                       # controls only in the last quarter
+    cols = dict(x0=x0, x1=x1, x2=x2, ta=ta,
+                tb=np.zeros(n, np.int32),
+                y=np.arange(n, dtype=np.float32))
+    valid = np.ones(n, bool)
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    b1, b2 = _batches(cols, valid, [300, 100])
+    eng.ingest(b1)
+    assert int(eng.ate("ta").n_groups) == 0
+    eng.ingest(b2)
+    est = eng.ate("ta")
+    assert int(est.n_groups) == 1
+    full = Table.from_numpy(cols, valid)
+    want = estimate_ate(cem(full, "ta", "y",
+                            {c: SPECS[c] for c in TREATMENTS["ta"]}).groups)
+    np.testing.assert_allclose(float(est.ate), float(want.ate), rtol=1e-5)
+
+
+def test_groups_lose_overlap_on_retraction():
+    cols, valid = _frame(2000, seed=4, int_outcome=True)
+    batches = _batches(cols, valid, [500] * 4)
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    for b in batches:
+        eng.ingest(b)
+    before = eng.ate("ta")
+    # retract batch 1 entirely: exact sign-flipped delta maintenance
+    eng.ingest(batches[1], retract=True)
+    after = eng.ate("ta")
+    # offline truth over the surviving rows
+    keep_rows = np.ones(len(valid), bool)
+    keep_rows[500:1000] = False
+    full = Table.from_numpy(cols, valid & keep_rows)
+    want = estimate_ate(cem(full, "ta", "y",
+                            {c: SPECS[c] for c in TREATMENTS["ta"]}).groups)
+    np.testing.assert_allclose(float(after.ate), float(want.ate),
+                               rtol=1e-5, atol=1e-6)
+    assert int(after.n_groups) == int(want.n_groups)
+    assert float(after.n_matched_treated) == float(want.n_matched_treated)
+    assert (float(before.n_matched_treated)
+            != float(after.n_matched_treated))
+    # matched row set also matches offline over survivors
+    np.testing.assert_array_equal(
+        np.asarray(eng.matched_rows("ta", full)),
+        np.asarray(cem(full, "ta", "y",
+                       {c: SPECS[c] for c in TREATMENTS["ta"]}).table.valid))
+
+
+def test_subpopulation_query_and_cache_invalidation():
+    cols, valid = _frame(3000, seed=5)
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", query_dims=("x2",),
+                       granule=256)
+    for b in _batches(cols, valid, [1000] * 3):
+        eng.ingest(b)
+
+    # subpopulation estimate == offline CEM over the row-filtered table
+    # (grouping on covset | query_dims, as the prepared/offline path does)
+    full = Table.from_numpy(cols, valid)
+    sub = full.filter(jnp.asarray(cols["x2"] == 0))
+    dims = sorted(set(TREATMENTS["ta"]) | {"x2"})
+    want = estimate_ate(cem(sub, "ta", "y",
+                            {c: SPECS[c] for c in dims}).groups)
+    got = eng.ate("ta", subpopulation={"x2": [0]})
+    np.testing.assert_allclose(float(got.ate), float(want.ate),
+                               rtol=1e-5, atol=1e-6)
+    assert int(got.n_groups) == int(want.n_groups)
+
+    # cache: repeat query is a hit
+    h0 = eng.cache_hits
+    eng.ate("ta", subpopulation={"x2": [0]})
+    assert eng.cache_hits == h0 + 1
+
+    # a delta touching ONLY x2=1 groups leaves the x2=0 entry cached ...
+    c2, v2 = _frame(500, seed=6)
+    c2["x2"][:] = 1
+    rep = eng.ingest(Table.from_numpy(c2, v2))
+    assert ("ta", (("x2", (0,)),)) not in rep.invalidated
+    assert ("ta", (("x2", (1,)),)) not in eng._cache  # never cached
+    h0 = eng.cache_hits
+    eng.ate("ta", subpopulation={"x2": [0]})
+    assert eng.cache_hits == h0 + 1
+    # ... and the cached value is still correct (x2=0 stats untouched)
+    np.testing.assert_allclose(
+        float(eng.ate("ta", subpopulation={"x2": [0]}).ate),
+        float(want.ate), rtol=1e-5, atol=1e-6)
+
+    # a delta touching x2=0 invalidates it (and the unrestricted entry)
+    eng.ate("ta")
+    c3, v3 = _frame(500, seed=7)
+    c3["x2"][:] = 0
+    rep = eng.ingest(Table.from_numpy(c3, v3))
+    assert ("ta", (("x2", (0,)),)) in rep.invalidated
+    assert ("ta", None) in rep.invalidated
+    # post-invalidation estimate equals offline over everything ingested
+    allc = {k: np.concatenate([cols[k], c2[k], c3[k]]) for k in cols}
+    allv = np.concatenate([valid, v2, v3])
+    sub = Table.from_numpy(allc, allv).filter(jnp.asarray(allc["x2"] == 0))
+    want = estimate_ate(cem(sub, "ta", "y",
+                            {c: SPECS[c] for c in dims}).groups)
+    got = eng.ate("ta", subpopulation={"x2": [0]})
+    np.testing.assert_allclose(float(got.ate), float(want.ate),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_update_overlap_flips_only_touched_positions():
+    gv = jnp.asarray([True, True, True, False])
+    nt = jnp.asarray([1.0, 0.0, 2.0, 0.0])
+    nc = jnp.asarray([1.0, 3.0, 0.0, 0.0])
+    keep = overlap_keep(gv, nt, nc)
+    np.testing.assert_array_equal(np.asarray(keep),
+                                  [True, False, False, False])
+    # group 2 gains a control; group 1 unchanged but re-evaluated
+    nc = nc.at[2].add(1.0)
+    keep = update_overlap(keep, gv, nt, nc, jnp.asarray([1, 2]))
+    np.testing.assert_array_equal(np.asarray(keep),
+                                  [True, False, True, False])
+
+
+@pytest.mark.parametrize("c,s,b,block", [(512, 3, 256, 128),
+                                         (1024, 6, 300, 256),
+                                         (256, 1, 64, 64)])
+def test_scatter_merge_kernel_matches_ref(c, s, b, block):
+    from repro.kernels import scatter_merge_op
+    from repro.kernels import ref
+    rng = np.random.default_rng(c + s + b)
+    table = rng.normal(0, 1, (c, s)).astype(np.float32)
+    pos = rng.integers(0, c, b).astype(np.int32)       # duplicates likely
+    vals = rng.normal(0, 1, (b, s)).astype(np.float32)
+    got = scatter_merge_op(jnp.asarray(table), jnp.asarray(pos),
+                           jnp.asarray(vals), block=block)
+    want = ref.scatter_merge_ref(jnp.asarray(table), jnp.asarray(pos),
+                                 jnp.asarray(vals))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # empty delta: at[].add semantics, a no-op
+    out = scatter_merge_op(jnp.asarray(table),
+                           jnp.zeros((0,), jnp.int32),
+                           jnp.zeros((0, s), jnp.float32), block=block)
+    np.testing.assert_array_equal(np.asarray(out), table)
+
+
+def test_growable_table_append_and_growth():
+    cols, valid = _frame(700, seed=8)
+    t0 = Table.from_numpy({k: v[:100] for k, v in cols.items()}, valid[:100])
+    gt = GrowableTable.from_table(t0, granule=128)
+    assert gt.capacity == 128 and gt.used == 100
+    cap_before = gt.capacity
+    gt = gt.append(Table.from_numpy(
+        {k: v[100:120] for k, v in cols.items()}, valid[100:120]),
+        granule=128)
+    assert gt.capacity == cap_before        # fits: no reallocation
+    gt = gt.append(Table.from_numpy(
+        {k: v[120:700] for k, v in cols.items()}, valid[120:700]),
+        granule=128)
+    assert gt.used == 700
+    assert gt.capacity >= 700 and gt.capacity % 128 == 0
+    out = gt.table.to_numpy()
+    for k in cols:
+        np.testing.assert_array_equal(out[k][:700], cols[k][:700])
+    np.testing.assert_array_equal(out["_valid"][:700], valid[:700])
+    assert not out["_valid"][700:].any()    # dead slots stay invalid
+    with pytest.raises(ValueError):
+        gt.append(Table.from_numpy({"zz": np.zeros(3, np.float32)}))
+
+
+def test_warm_started_propensity_refresh():
+    rng = np.random.default_rng(9)
+    n, d = 4096, 3
+    X = rng.normal(0, 1, (n, d)).astype(np.float32)
+    logits = 1.1 * X[:, 0] - 0.7 * X[:, 2]
+    t = (rng.random(n) < 1 / (1 + np.exp(-logits))).astype(np.float32)
+    m = rng.random(n) > 0.1
+    half = n // 2
+    cold = fit_logistic(jnp.asarray(X[:half]), jnp.asarray(t[:half]),
+                        jnp.asarray(m[:half]))
+    # warm refresh on the grown data with a small step budget ~= cold refit
+    warm = warm_refit(cold, jnp.asarray(X), jnp.asarray(t), jnp.asarray(m),
+                      n_iter=4)
+    full = fit_logistic(jnp.asarray(X), jnp.asarray(t), jnp.asarray(m))
+    ps_w = np.asarray(predict_ps(warm, jnp.asarray(X)))
+    ps_f = np.asarray(predict_ps(full, jnp.asarray(X)))
+    np.testing.assert_allclose(ps_w, ps_f, atol=5e-3)
+    # standardization is frozen across the refresh
+    np.testing.assert_array_equal(np.asarray(warm.mean),
+                                  np.asarray(cold.mean))
+
+
+def test_engine_propensity_warm_path():
+    cols, valid = _frame(2000, seed=10)
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", keep_rows=True, granule=256)
+    batches = _batches(cols, valid, [1000, 1000])
+    eng.ingest(batches[0])
+    m1 = eng.refresh_propensity("ta", ["x0", "x1"])
+    eng.ingest(batches[1])
+    m2 = eng.refresh_propensity("ta", ["x0", "x1"], step_budget=4)
+    full = Table.from_numpy(cols, valid)
+    from repro.core.propensity import design_matrix
+    X = design_matrix(full, ["x0", "x1"])
+    ref_model = fit_logistic(X, full["ta"], full.valid, init=m1)
+    np.testing.assert_allclose(np.asarray(predict_ps(m2, X)),
+                               np.asarray(predict_ps(ref_model, X)),
+                               atol=5e-3)
+    with pytest.raises(ValueError):
+        eng.ingest(batches[0], retract=True)   # row log is append-only
+
+
+def test_estimate_ate_from_stats_matches_estimate_ate():
+    cols, valid = _frame(1500, seed=11)
+    full = Table.from_numpy(cols, valid)
+    res = cem(full, "ta", "y", {c: SPECS[c] for c in TREATMENTS["ta"]})
+    want = estimate_ate(res.groups)
+    g = res.groups
+    got = estimate_ate_from_stats(g.keep, g.n_treated, g.n_control,
+                                  g.sum_y_t, g.sum_y_c)
+    np.testing.assert_allclose(float(got.ate), float(want.ate), rtol=1e-6)
+    np.testing.assert_allclose(float(got.att), float(want.att), rtol=1e-6)
+    assert int(got.n_groups) == int(want.n_groups)
+
+
+def test_merge_delta_empty_and_codec_mismatch():
+    codec_specs = {"x0": SPECS["x0"], "x1": SPECS["x1"]}
+    base = cube.empty_cuboid(cube.make_codec(codec_specs), ["ta"],
+                             capacity=64)
+    other = cube.empty_cuboid(cube.make_codec({"x0": SPECS["x0"]}), ["ta"],
+                              capacity=64)
+    with pytest.raises(ValueError):
+        cube.merge_delta(base, other)
+    # merging an all-invalid delta is a no-op fast path
+    merged, _, fast = cube.merge_delta(
+        base, dataclasses.replace(base), granule=64)
+    assert fast
+    assert int(merged.n_groups()) == 0

@@ -1,7 +1,6 @@
 """Paper §4 optimizations: factoring (Prop. 3), cube, pushdown (Prop. 2),
 offline preparation (Alg. 2) — equivalence against direct CEM."""
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
 from repro.core import (CoarsenSpec, cem, cem_join_pushdown, covariate_factoring,

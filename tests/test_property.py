@@ -9,6 +9,12 @@
 """
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (pip install -e .[dev]) — skipped, "
+           "not an error, where it is absent")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (CoarsenSpec, KeyCodec, cem, cem_join_pushdown,

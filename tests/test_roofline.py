@@ -14,7 +14,10 @@ from repro.configs import REGISTRY, SHAPES
 def _cost(fn, *args, fallback_trip=1):
     compiled = jax.jit(fn).lower(*args).compile()
     model = HloCostModel(compiled.as_text(), fallback_trip=fallback_trip)
-    return model.entry_cost(), compiled.cost_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
+    return model.entry_cost(), ca or {}
 
 
 def test_dot_flops_match_xla_unrolled():
@@ -89,8 +92,8 @@ def test_collective_bytes_counted():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.roofline.hlo_cost import HloCostModel
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("data",))
         x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
         def f(x):
             return jnp.sum(x @ jnp.ones((1024, 512)))

@@ -13,7 +13,6 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import REGISTRY
 from repro.launch.serve import Batcher, Request
@@ -39,7 +38,6 @@ def test_moe_gather_equals_scatter_dispatch():
 def test_padded_heads_attention_is_noop():
     """Zero-padded attention heads must not change the real heads' output."""
     from repro.models import attention as A
-    from repro.models import shard_hints
     cfg = REGISTRY["qwen2-7b"].reduced()  # 4 heads after reduce
     key = jax.random.PRNGKey(1)
     p = A.init_gqa(key, cfg)
@@ -120,7 +118,6 @@ def test_single_word_groupby_matches_lexicographic():
     r1 = np.asarray(g1.row_group())
     r2 = np.asarray(g2.row_group())
     v = np.asarray(valid)
-    import collections
     m = {}
     for a, b in zip(r1[v], r2[v]):
         assert m.setdefault(a, b) == b
@@ -136,8 +133,8 @@ def test_distributed_cem_single_word_matches():
         from repro.core.cem import pack_keys
         from repro.core.distributed import make_distributed_cem
         from repro.data.columnar import Table
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(7)
         n = 2048
         x0 = rng.integers(0, 6, n).astype(np.int32)
