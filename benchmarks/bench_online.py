@@ -6,15 +6,24 @@ query costs O(batch + stat-table capacity) — asymptotically below the
 offline path, which re-coarsens/re-groups ALL rows per refresh.
 
 Emits, per batch size B:
-  online_ingest_bB        fold one B-row batch into every view
-  online_query_bB         uncached ATE from materialized state
-  online_cached_query_bB  repeat ATE (estimate cache hit)
-  offline_recompute_bB    full CEM + ATE over the N+B-row table
-with derived = offline/online speedup of the ingest+query path.
+  online_ingest_bB          fold one B-row batch into every view (fused
+                            single-host-sync planner)
+  online_ingest_unfused_bB  same, legacy one-blocking-sync-per-merge loop
+                            (derived: latency the fused path saves)
+  online_query_bB           uncached ATE from materialized state
+  online_cached_query_bB    repeat ATE (estimate cache hit)
+  offline_recompute_bB      full CEM + ATE over the N+B-row table
+and, per device count D (subprocess with host-platform device forcing):
+  online_ingest_dD          per-batch sharded ingest latency on a D-device
+                            data mesh (delta built per shard + all-gather
+                            combine)
 
 REPRO_BENCH_SMOKE=1 shrinks N for CI smoke runs (full mode: N = 2^20).
 """
 import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 
@@ -41,6 +50,61 @@ def _gen(n, seed):
     return cols
 
 
+_SWEEP_SCRIPT = """
+import os, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+import numpy as np
+from benchmarks.bench_online import SPECS, TREATMENTS, _gen
+from repro.core import OnlineEngine
+from repro.data.columnar import Table
+from repro.launch.mesh import make_data_mesh
+
+mesh = make_data_mesh({ndev}) if {ndev} > 1 else None
+eng = OnlineEngine.from_table(Table.from_numpy(_gen({n}, seed=0)),
+                              SPECS, TREATMENTS, "y", mesh=mesh)
+feed = [Table.from_numpy(_gen({bs}, seed=1 + i))
+        for i in range({warmup} + {iters})]
+for b in feed[:{warmup}]:
+    eng.ingest(b)
+ts = []
+for b in feed[{warmup}:]:
+    t0 = time.perf_counter()
+    eng.ingest(b)
+    ts.append(time.perf_counter() - t0)
+print("SWEEP_RESULT", float(np.median(ts)))
+"""
+
+
+def sharded_sweep(n: int, bs: int, device_counts, warmup=2, iters=5):
+    """Per-batch ingest latency per data-mesh size. Host-platform device
+    forcing needs a fresh process per count (XLA_FLAGS is read once)."""
+    for ndev in device_counts:
+        code = textwrap.dedent(_SWEEP_SCRIPT.format(
+            ndev=ndev, n=n, bs=bs, warmup=warmup, iters=iters))
+        proc = None
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-c", code], capture_output=True,
+                text=True, timeout=900,
+                env={**os.environ, "PYTHONPATH": "src:."})
+            marker = [ln for ln in proc.stdout.splitlines()
+                      if ln.startswith("SWEEP_RESULT")]
+            if proc.returncode != 0 or not marker:
+                raise RuntimeError(f"rc={proc.returncode}, "
+                                   f"marker={'yes' if marker else 'no'}")
+            secs = float(marker[-1].split()[1])
+        except (subprocess.TimeoutExpired, RuntimeError,
+                ValueError, IndexError) as e:
+            # warn-and-continue; no emit — a 0.0 datapoint would read as
+            # infinitely fast ingest in the benchmark artifact
+            print(f"online_ingest_d{ndev} sweep FAILED: {e}",
+                  file=sys.stderr)
+            if proc is not None:
+                print(proc.stderr[-2000:], file=sys.stderr)
+            continue
+        emit(f"online_ingest_d{ndev}", secs, f"n={n} batch={bs}")
+
+
 def main() -> None:
     n = 1 << 16 if smoke() else 1 << 20
     batch_sizes = [256, 4096] if smoke() else [256, 4096, 65536]
@@ -49,6 +113,8 @@ def main() -> None:
     base = Table.from_numpy(base_cols)
 
     eng = OnlineEngine.from_table(base, SPECS, TREATMENTS, "y")
+    legacy = OnlineEngine.from_table(base, SPECS, TREATMENTS, "y",
+                                     fused_host_sync=False)
     ingested = [base_cols]
     for bs in batch_sizes:
         # one DISTINCT batch per timed call: re-ingesting the same rows
@@ -61,6 +127,17 @@ def main() -> None:
         ingested += feed
         emit(f"online_ingest_b{bs}", t_ing,
              f"n={n} views={len(eng.views) + 1}")
+
+        # the same stream through the legacy per-merge-host-sync loop:
+        # the delta vs the fused planner is dispatch serialization cost
+        feed_l = [_gen(bs, seed=1_000_000 + bs + i)
+                  for i in range(warmup + iters)]
+        batches_l = iter([Table.from_numpy(c) for c in feed_l])
+        t_unf, _ = timeit(lambda: legacy.ingest(next(batches_l)),
+                          warmup=warmup, iters=iters)
+        emit(f"online_ingest_unfused_b{bs}", t_unf,
+             f"fused_saves={(t_unf - t_ing) * 1e3:.2f}ms "
+             f"({(1 - t_ing / max(t_unf, 1e-12)) * 100:.0f}%)")
 
         def query():
             eng._cache.clear()
@@ -84,9 +161,13 @@ def main() -> None:
         emit(f"offline_recompute_b{bs}", t_off,
              f"online_speedup={speedup:.1f}x")
 
+    # sharded ingest: per-batch latency per device-mesh size
+    sweep_n = 1 << 15 if smoke() else 1 << 18
+    device_counts = (1, 2) if smoke() else (1, 2, 4, 8)
+    sharded_sweep(sweep_n, 4096, device_counts)
+
 
 if __name__ == "__main__":
     import pathlib
-    import sys
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
     main()

@@ -8,15 +8,30 @@ delta cuboid maintenance — per batch it touches O(batch + stat table), never
 the full history.
 
 Per batch it prints the evolving ATE per weather treatment (vs the planted
-ground truth) and the ingest latency; at the end it re-runs the offline
-pipeline over everything ingested to show the estimates agree and what each
-refresh would have cost offline.
+ground truth) and the ingest latency; at the end it refreshes a propensity
+model from the engine's bounded streaming reservoir (no row log), then
+re-runs the offline pipeline over everything ingested to show the
+estimates agree and what each refresh would have cost offline.
+
+With ``--devices D`` the stream is row-sharded over a D-device data mesh:
+each device aggregates its shard of every batch and the tiny per-device
+delta stat tables are all-gathered and combined (off-TPU this forces D
+host-platform devices, so it demonstrates the mechanism, not a speedup).
 
 Run:  PYTHONPATH=src python examples/online_flight_delay.py \
-          [--flights N] [--batches K]
+          [--flights N] [--batches K] [--devices D]
 """
 import argparse
+import os
 import time
+
+_pre = argparse.ArgumentParser(add_help=False)
+_pre.add_argument("--devices", type=int, default=1)
+_n_dev = _pre.parse_known_args()[0].devices
+if _n_dev > 1:  # must precede any jax import; preserve existing flags
+    os.environ["XLA_FLAGS"] = (
+        f"{os.environ.get('XLA_FLAGS', '')} "
+        f"--xla_force_host_platform_device_count={_n_dev}").strip()
 
 import numpy as np
 
@@ -24,6 +39,7 @@ from repro.core import CoarsenSpec, OnlineEngine, cem, estimate_ate
 from repro.data import flightgen
 from repro.data.columnar import Table
 from repro.data.join import fk_join
+from repro.launch.mesh import make_data_mesh
 
 SPEC_RANGES = {"w_precipm": (0, 3), "w_wspdm": (0, 80), "w_tempm": (-20, 40)}
 COVARIATES = {
@@ -50,6 +66,8 @@ def main():
     ap.add_argument("--flights", type=int, default=200_000)
     ap.add_argument("--airports", type=int, default=8)
     ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard ingest over a data mesh of this many devices")
     args = ap.parse_args()
 
     print(f"== generating {args.flights:,} flights, joining weather ==")
@@ -64,8 +82,11 @@ def main():
     specs = build_specs()
     shared = ["airport", "carrier", "traffic", "w_season"]
     treatments = {t: shared + c for t, c in COVARIATES.items()}
+    mesh = make_data_mesh(args.devices) if args.devices > 1 else None
+    if mesh is not None:
+        print(f"== sharding ingest over {args.devices}-device data mesh ==")
     engine = OnlineEngine(specs, treatments, outcome="dep_delay",
-                          query_dims=("airport",))
+                          query_dims=("airport",), mesh=mesh)
 
     # seed with the first half, stream the rest
     seed_n = n // 2
@@ -101,6 +122,15 @@ def main():
     engine.ate("thunder", subpopulation={"airport": [0]})
     print(f"   repeat query: {(time.perf_counter() - t0) * 1e6:.0f}us "
           f"(cache hits={engine.cache_hits})")
+
+    print("\n== streaming propensity (bounded reservoir, no row log) ==")
+    t0 = time.perf_counter()
+    model = engine.refresh_propensity("thunder",
+                                      ["traffic", "w_precipm", "w_wspdm"])
+    dt = time.perf_counter() - t0
+    print(f"   fit over {int(engine.stream.n):,} streamed rows via "
+          f"{engine.stream.capacity:,}-row reservoir in {dt:.2f}s "
+          f"(converged={bool(model.converged)})")
 
     print("\n== offline recompute over everything ingested (the "
           "per-refresh cost this engine avoids) ==")

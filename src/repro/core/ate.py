@@ -37,14 +37,28 @@ def _group_means(groups: CEMGroups):
     return nt, nc, mean_t, mean_c
 
 
+def _neyman_variance(keep, nt, nc, mean_t, mean_c, sum_yy_t, sum_yy_c):
+    """Conservative within-group (Neyman) variance of the ATE from
+    decomposable per-arm first and second moments."""
+    var_t = sum_yy_t / jnp.maximum(nt, 1e-9) - mean_t ** 2
+    var_c = sum_yy_c / jnp.maximum(nc, 1e-9) - mean_c ** 2
+    n_b = nt + nc
+    n_tot = jnp.maximum(jnp.sum(n_b), 1e-9)
+    se2_b = (var_t / jnp.maximum(nt, 1.0) + var_c / jnp.maximum(nc, 1.0))
+    return jnp.sum(jnp.where(keep, (n_b / n_tot) ** 2 * se2_b, 0.0))
+
+
 def estimate_ate_from_stats(keep: jnp.ndarray, n_treated: jnp.ndarray,
                             n_control: jnp.ndarray, sum_y_t: jnp.ndarray,
-                            sum_y_c: jnp.ndarray) -> ATEEstimate:
+                            sum_y_c: jnp.ndarray,
+                            sum_yy_t: jnp.ndarray = None,
+                            sum_yy_c: jnp.ndarray = None) -> ATEEstimate:
     """ATE/ATT straight from decomposable group stats (no row access).
 
     This is the estimator the online engine runs over materialized cuboid
-    stat tables: O(#groups), independent of data size. Variance is 0 (it
-    needs row-level second moments; use :func:`estimate_ate` with rows)."""
+    stat tables: O(#groups), independent of data size. With per-arm second
+    moments (``sum_yy_t``/``sum_yy_c`` — the cuboid's ``yy``-family columns)
+    the Neyman within-group variance is included; without them it is 0."""
     nt = jnp.where(keep, n_treated, 0.0)
     nc = jnp.where(keep, n_control, 0.0)
     mean_t = jnp.where(nt > 0, sum_y_t / jnp.maximum(nt, 1e-9), 0.0)
@@ -55,11 +69,16 @@ def estimate_ate_from_stats(keep: jnp.ndarray, n_treated: jnp.ndarray,
     ate = jnp.sum(jnp.where(keep, n_b * diff, 0.0)) / n_tot
     t_tot = jnp.maximum(jnp.sum(nt), 1e-9)
     att = jnp.sum(jnp.where(keep, nt * diff, 0.0)) / t_tot
+    if sum_yy_t is None or sum_yy_c is None:
+        var = jnp.float32(0.0)
+    else:
+        var = _neyman_variance(keep, nt, nc, mean_t, mean_c,
+                               sum_yy_t, sum_yy_c)
     return ATEEstimate(ate=ate, att=att,
                        n_matched_treated=jnp.sum(nt),
                        n_matched_control=jnp.sum(nc),
                        n_groups=jnp.sum(keep.astype(jnp.int32)),
-                       variance=jnp.float32(0.0))
+                       variance=var)
 
 
 def estimate_ate(groups: CEMGroups,
@@ -73,8 +92,6 @@ def estimate_ate(groups: CEMGroups,
     if y is None:
         return est
     nt, nc, mean_t, mean_c = _group_means(groups)
-    n_b = nt + nc
-    n_tot = jnp.maximum(jnp.sum(n_b), 1e-9)
     g = groups.grouping
     w = matched_valid.astype(jnp.float32)
     t = treatment.astype(jnp.float32) * w
@@ -82,11 +99,8 @@ def estimate_ate(groups: CEMGroups,
     yf = y.astype(jnp.float32)
     sums = groupby.segment_sums(g, {"yy_t": t * yf * yf,
                                     "yy_c": c * yf * yf})
-    # within-arm variance per group, Neyman-style
-    var_t = sums["yy_t"] / jnp.maximum(nt, 1e-9) - mean_t ** 2
-    var_c = sums["yy_c"] / jnp.maximum(nc, 1e-9) - mean_c ** 2
-    se2_b = (var_t / jnp.maximum(nt, 1.0) + var_c / jnp.maximum(nc, 1.0))
-    var = jnp.sum(jnp.where(groups.keep, (n_b / n_tot) ** 2 * se2_b, 0.0))
+    var = _neyman_variance(groups.keep, nt, nc, mean_t, mean_c,
+                           sums["yy_t"], sums["yy_c"])
     return dataclasses.replace(est, variance=var)
 
 

@@ -34,8 +34,10 @@ class Cuboid:
     """Group-stat table over a set of dims (coarsened covariates).
 
     stats: per-group decomposable sums:
-      "one"  -> n rows, "y" -> sum outcome, and per treatment t:
-      f"t_{t}" -> n treated, f"yt_{t}" -> sum outcome over treated.
+      "one"  -> n rows, "y" -> sum outcome, "yy" -> sum outcome^2, and per
+      treatment t: f"t_{t}" -> n treated, f"yt_{t}" -> sum outcome over
+      treated, f"yyt_{t}" -> sum outcome^2 over treated. The second moments
+      make the Neyman within-group variance computable from stats alone.
     """
 
     codec: KeyCodec
@@ -59,10 +61,29 @@ class Cuboid:
 
 def stat_names(treatments: Sequence[str]) -> Tuple[str, ...]:
     """The decomposable stat columns a cuboid carries for ``treatments``."""
-    names = ["one", "y"]
+    names = ["one", "y", "yy"]
     for t in treatments:
-        names += [f"t_{t}", f"yt_{t}"]
+        names += [f"t_{t}", f"yt_{t}", f"yyt_{t}"]
     return tuple(names)
+
+
+def delta_stat_columns(columns: Mapping[str, jnp.ndarray], valid: jnp.ndarray,
+                       treatments: Sequence[str], outcome: str
+                       ) -> Dict[str, jnp.ndarray]:
+    """Per-row contributions to every cuboid stat (masked by validity).
+
+    Shared between the single-device cuboid build and the per-device shard
+    body of the distributed delta build — one definition of the stat schema.
+    """
+    w = valid.astype(jnp.float32)
+    y = columns[outcome].astype(jnp.float32)
+    cols = {"one": w, "y": w * y, "yy": w * y * y}
+    for t in treatments:
+        tv = columns[t].astype(jnp.float32) * w
+        cols[f"t_{t}"] = tv
+        cols[f"yt_{t}"] = tv * y
+        cols[f"yyt_{t}"] = tv * y * y
+    return cols
 
 
 def empty_cuboid(codec: KeyCodec, treatments: Sequence[str],
@@ -94,13 +115,7 @@ def _build_fn(codec: KeyCodec, specs_items: Tuple, treatments: Tuple[str, ...],
         buckets = coarsen_columns(columns, specs)
         hi, lo = codec.pack(buckets, valid)
         g = groupby.group_by_key(hi, lo)
-        w = valid.astype(jnp.float32)
-        y = columns[outcome].astype(jnp.float32)
-        cols = {"one": w, "y": w * y}
-        for t in treatments:
-            tv = columns[t].astype(jnp.float32) * w
-            cols[f"t_{t}"] = tv
-            cols[f"yt_{t}"] = tv * y
+        cols = delta_stat_columns(columns, valid, treatments, outcome)
         sums = groupby.segment_sums(g, cols)
         return g.group_hi, g.group_lo, sums, g.group_valid
     return fn
@@ -146,9 +161,17 @@ def rollup(cuboid: Cuboid, dims: Sequence[str]) -> Cuboid:
                   stats=sums, group_valid=gv, treatments=cuboid.treatments)
 
 
-def compact_cuboid(cuboid: Cuboid, granule: int = 1024) -> Cuboid:
-    """Host-side shrink to ~n_groups rows (materialization for reuse)."""
+def compact_cuboid(cuboid: Cuboid, granule: int = 1024,
+                   keep_mask: np.ndarray = None) -> Cuboid:
+    """Host-side shrink to ~n_groups rows (materialization for reuse).
+
+    ``keep_mask`` (host bool, per group) additionally drops groups — the
+    online engine's eviction path. Padding uses the canonical invalid-key
+    marker so binary-search lookups keep treating dead slots as absent.
+    """
     gv = np.asarray(cuboid.group_valid)
+    if keep_mask is not None:
+        gv = gv & np.asarray(keep_mask)
     idx = np.nonzero(gv)[0]
     cap = _round_capacity(len(idx), granule)
     pad = cap - len(idx)
@@ -160,8 +183,8 @@ def compact_cuboid(cuboid: Cuboid, granule: int = 1024) -> Cuboid:
 
     return Cuboid(
         codec=cuboid.codec,
-        key_hi=jnp.asarray(take(cuboid.key_hi, fill=np.uint32(0xFFFFFFFF))),
-        key_lo=jnp.asarray(take(cuboid.key_lo, fill=np.uint32(0xFFFFFFFF))),
+        key_hi=jnp.asarray(take(cuboid.key_hi, fill=np.uint32(INVALID_HI))),
+        key_lo=jnp.asarray(take(cuboid.key_lo, fill=np.uint32(INVALID_LO))),
         stats={k: jnp.asarray(take(v)) for k, v in cuboid.stats.items()},
         group_valid=jnp.asarray(np.pad(np.ones(len(idx), bool), (0, pad))),
         treatments=cuboid.treatments)
@@ -176,8 +199,24 @@ def delta_cuboid(batch: Table, specs: Mapping[str, CoarsenSpec],
                           granule=granule)
 
 
+def scatter_merge_stats(base_stats: Mapping[str, jnp.ndarray],
+                        pos: jnp.ndarray,
+                        delta_stats: Mapping[str, jnp.ndarray],
+                        use_pallas: bool = False) -> Dict[str, jnp.ndarray]:
+    """Fast-path stat merge: scatter-add delta rows at known positions,
+    optionally through the MXU one-hot kernel."""
+    if use_pallas:
+        from repro.kernels.ops import scatter_merge_op
+        names = sorted(base_stats)
+        table = jnp.stack([base_stats[k] for k in names], axis=1)
+        vals = jnp.stack([delta_stats[k] for k in names], axis=1)
+        merged = scatter_merge_op(table, pos, vals)
+        return {k: merged[:, j] for j, k in enumerate(names)}
+    return groupby.scatter_add_stats(base_stats, pos, delta_stats)
+
+
 def merge_delta(base: Cuboid, delta: Cuboid, granule: int = 1024,
-                use_pallas: bool = False
+                use_pallas: bool = False, fast: bool = None
                 ) -> Tuple[Cuboid, jnp.ndarray, bool]:
     """Fold a delta stat table into a materialized cuboid.
 
@@ -190,25 +229,27 @@ def merge_delta(base: Cuboid, delta: Cuboid, granule: int = 1024,
     cuboid): re-sort merge — the same combine ``repro.core.distributed``
     uses to fold per-chip stat tables — with geometric capacity growth.
 
+    ``fast`` injects a path decision computed elsewhere: the fused online
+    engine plans every merge of an ingest on device and reads all verdicts
+    back in ONE sync (its fast-path merges then bypass this function
+    entirely, so only ``fast=False`` re-sort merges land here). ``fast=None``
+    decides locally with a blocking device->host read.
+
     Returns (merged, positions of delta groups in merged, fast_path).
     """
     if base.codec.fields != delta.codec.fields:
         raise ValueError("codec mismatch in merge_delta")
     if set(base.stats) != set(delta.stats):
         raise ValueError("stat-column mismatch in merge_delta")
-    pos, found = groupby.lookup_rows_in_table(
-        delta.key_hi, delta.key_lo, base.key_hi, base.key_lo)
-    ok = np.asarray(found) | ~np.asarray(delta.group_valid)
-    if ok.all():
-        if use_pallas:
-            from repro.kernels.ops import scatter_merge_op
-            names = sorted(base.stats)
-            table = jnp.stack([base.stats[k] for k in names], axis=1)
-            vals = jnp.stack([delta.stats[k] for k in names], axis=1)
-            merged = scatter_merge_op(table, pos, vals)
-            stats = {k: merged[:, j] for j, k in enumerate(names)}
-        else:
-            stats = groupby.scatter_add_stats(base.stats, pos, delta.stats)
+    if fast is None or fast:
+        pos, found = groupby.lookup_rows_in_table(
+            delta.key_hi, delta.key_lo, base.key_hi, base.key_lo)
+        if fast is None:
+            fast = bool((np.asarray(found)
+                         | ~np.asarray(delta.group_valid)).all())
+    if fast:
+        stats = scatter_merge_stats(base.stats, pos, delta.stats,
+                                    use_pallas=use_pallas)
         return dataclasses.replace(base, stats=stats), pos, True
     cat_hi = jnp.concatenate([base.key_hi, delta.key_hi])
     cat_lo = jnp.concatenate([base.key_lo, delta.key_lo])

@@ -27,7 +27,7 @@ Both are shard_map programs over a 1-D "data" axis (the flattened
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -111,6 +111,62 @@ def make_distributed_cem(mesh, capacity: int = 8192,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=(P(), P(), P(), P(), P(), P(axis), P()),
         check_rep=False)
+    return jax.jit(fn)
+
+
+# ===================== sharded online delta build ===========================
+def make_sharded_delta_build(mesh, specs: Mapping, treatments: Sequence[str],
+                             outcome: str, capacity: int,
+                             axis: str = "data"):
+    """Delta-cuboid build for the ONLINE engine, sharded over ``axis``.
+
+    Each device coarsens/packs/locally-aggregates its row shard of a
+    streamed batch (the same stat schema as ``cube._build_fn``, via
+    ``cube.delta_stat_columns``), truncates its local stat table to
+    ``capacity`` slots, and the tiny per-device tables are ``all_gather``ed
+    and re-combined with the existing combine-broadcast group-by — so every
+    device ends up holding the REPLICATED global delta stat table and the
+    downstream cuboid merge is identical to the single-chip path.
+
+    Returns a jitted ``f(columns, valid) -> (hi, lo, stats, group_valid,
+    n_groups, overflow)`` with rows sharded over ``axis`` and the combined
+    table (length n_dev * capacity, valid groups first) replicated.
+    ``overflow`` is set when any LOCAL shard had more distinct groups than
+    ``capacity`` (the combined table is then incomplete and the caller must
+    fall back to an exact host-side build).
+    """
+    from repro.core import cube as cube_mod
+    from repro.core.cem import make_codec
+    from repro.core.coarsen import coarsen_columns
+
+    codec = make_codec(specs)
+    specs = dict(specs)
+    treatments = tuple(treatments)
+
+    def shard_body(columns, valid):
+        buckets = coarsen_columns(columns, specs)
+        hi, lo = codec.pack(buckets, valid)
+        cols = cube_mod.delta_stat_columns(columns, valid, treatments,
+                                           outcome)
+        lhi, llo, lstats, loverflow = _local_stat_table(
+            hi, lo, cols, capacity)
+        ghi = jax.lax.all_gather(lhi, axis, tiled=True)
+        glo = jax.lax.all_gather(llo, axis, tiled=True)
+        gstats = {k: jax.lax.all_gather(v, axis, tiled=True)
+                  for k, v in lstats.items()}
+        # full-length re-combine: the gathered table is tiny, so no second
+        # truncation (hence no combine-side overflow) is needed
+        g = groupby.group_by_key(ghi, glo)
+        sums = groupby.segment_sums(g, gstats)
+        any_overflow = jax.lax.pmax(loverflow.astype(jnp.int32), axis) > 0
+        return (g.group_hi, g.group_lo, sums, g.group_valid, g.n_groups,
+                any_overflow)
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(shard_body, mesh=mesh,
+                   in_specs=(P(axis), P(axis)),
+                   out_specs=(P(), P(), P(), P(), P(), P()),
+                   check_rep=False)
     return jax.jit(fn)
 
 

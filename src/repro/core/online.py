@@ -1,41 +1,60 @@
 """Online incremental causal inference (paper §4.2's "online setting",
-made truly incremental).
+made truly incremental — and sharded over the device mesh).
 
 The offline path re-coarsens, re-groups and re-cubes the whole relation for
 every new batch of rows. This engine instead maintains causal estimates
 under streaming INSERTs with work proportional to the DELTA, not the data:
 
   1. DELTA CUBOID MAINTENANCE — every cuboid stat is decomposable
-     (count/sum), so a streamed batch reduces to a tiny stat table
-     (:func:`repro.core.cube.delta_cuboid`) that is folded into each
-     materialized cuboid with the same combine the distributed engine uses
-     for per-chip partials (:func:`repro.core.cube.merge_delta`). The delta
-     is computed ONCE at base granularity and propagated DOWN the cube
-     lattice by rolling the delta itself up to each view's dims — never by
-     rebuilding a cuboid from rows.
-  2. INCREMENTAL CEM OVERLAP — when a merge keeps the stat-table layout
+     (count/sum), so a streamed batch reduces to a tiny stat table that is
+     folded into each materialized cuboid with the same combine the
+     distributed engine uses for per-chip partials
+     (:func:`repro.core.cube.merge_delta`). The delta is computed ONCE at
+     base granularity and propagated DOWN the cube lattice by rolling the
+     delta itself up to each view's dims — never by rebuilding a cuboid
+     from rows.
+  2. SHARDED INGEST — on a multi-device mesh the batch is row-sharded over
+     the data axis: each device coarsens/packs/locally-aggregates its
+     shard, the per-device delta stat tables are ``all_gather``ed and
+     combined (:func:`repro.core.distributed.make_sharded_delta_build`),
+     and the replicated merged delta folds into every view exactly as on
+     one chip — the offline-equivalence guarantees carry over verbatim on
+     1..N devices.
+  3. INCREMENTAL CEM OVERLAP — when a merge keeps the stat-table layout
      (fast path), the overlap filter ``max(T) != min(T)`` is re-evaluated
      only at the group ids the delta touched
      (:func:`repro.core.cem.update_overlap`): groups flip in and out of the
      matched set in O(|delta groups|).
-  3. WARM-STARTED PROPENSITY — logistic refreshes resume Newton from the
-     previous coefficients under a configurable step budget with frozen
-     standardization (:func:`repro.core.propensity.warm_refit`).
-  4. ESTIMATE CACHE — repeated online queries are served from a cache keyed
+  4. STREAMING PROPENSITY — logistic refreshes no longer need an unbounded
+     row log: a :class:`repro.core.propensity.StreamStats` maintains exact
+     per-feature moment accumulators (stream-wide standardization,
+     retractable) plus a bounded uniform reservoir that the warm-started
+     Newton refit (:func:`repro.core.propensity.warm_refit`) runs over.
+  5. ESTIMATE CACHE — repeated online queries are served from a cache keyed
      by (treatment, sub-population); a delta invalidates only the entries
      whose group predicate it actually touched.
+  6. ONE FUSED HOST SYNC PER INGEST — the per-merge fast/slow-path
+     decisions, the retraction guard, the delta group count, and the cache
+     invalidation predicate all come back from the device in a single
+     ``device_get`` (:func:`_plan_ingest`), instead of one blocking
+     device->host read per merge serializing dispatch every batch.
 
 The maintained state is EXACT: after any number of ingested batches, every
 cuboid stat, CEM matched set and ATE equals the offline computation over
 the concatenated table (bit-identical when outcome sums are exact, e.g.
 integer-valued outcomes; to float tolerance otherwise — summation order is
-the only difference). ``tests/test_online.py`` asserts this equivalence.
+the only difference). ``tests/test_online.py`` asserts this equivalence,
+and ``tests/test_online_sharded.py`` asserts it per device count. Eviction
+(:meth:`OnlineEngine.evict`) deliberately trades this exactness for
+bounded state on unbounded key spaces.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+import functools
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -45,9 +64,9 @@ from repro.core.ate import ATEEstimate, estimate_ate_from_stats
 from repro.core.cem import (CEMGroups, make_codec, overlap_keep, pack_keys,
                             update_overlap)
 from repro.core.coarsen import CoarsenSpec
-from repro.core.propensity import (LogisticModel, design_matrix,
+from repro.core.propensity import (LogisticModel, StreamStats, design_matrix,
                                    fit_logistic)
-from repro.data.columnar import GrowableTable, Table
+from repro.data.columnar import GrowableTable, Table, _round_capacity
 
 BASE_VIEW = "__base__"
 
@@ -81,6 +100,70 @@ class _View:
     keep: jnp.ndarray
 
 
+def _stamp_touch(touch: jnp.ndarray, pos: jnp.ndarray, dvalid: jnp.ndarray,
+                 counter: int) -> jnp.ndarray:
+    """Record the current ingest counter at the touched group slots.
+    Invalid delta rows are routed out of bounds and dropped, so a clipped
+    lookup position can never stamp an unrelated live group."""
+    upd = jnp.where(dvalid, pos, touch.shape[0])
+    return touch.at[upd].set(jnp.int32(counter), mode="drop")
+
+
+def _remap_touch(old_cub: cube_mod.Cuboid, new_cub: cube_mod.Cuboid,
+                 touch: jnp.ndarray) -> jnp.ndarray:
+    """Carry last-touch stamps across a layout-changing (re-sort) merge."""
+    pos, found = groupby.lookup_rows_in_table(
+        old_cub.key_hi, old_cub.key_lo, new_cub.key_hi, new_cub.key_lo)
+    upd = jnp.where(old_cub.group_valid & found, pos, new_cub.capacity)
+    return jnp.zeros((new_cub.capacity,), touch.dtype).at[upd].set(
+        touch, mode="drop")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("codec", "tnames", "vdims", "retract", "use_pallas"))
+def _plan_ingest(d_hi, d_lo, d_stats, d_gv, base_hi, base_lo, base_stats,
+                 view_hi, view_lo, view_stats, view_gv, view_keep, *,
+                 codec, tnames, vdims, retract, use_pallas):
+    """Everything one ingest must know, computed in ONE device program.
+
+    Produces, without any host round-trip: the per-view rolled-up deltas,
+    the fast/slow-path verdicts (is every delta key already materialized?),
+    the fast-path merge candidates with their updated overlap masks, the
+    retraction-negativity probe, and the cache-invalidation predicate
+    inputs. The engine then issues a single fused ``device_get`` for the
+    scalars/small vectors it needs to branch on — replacing the one-sync-
+    per-merge pattern that serialized device dispatch on every batch.
+    """
+    if retract:
+        d_stats = {k: -v for k, v in d_stats.items()}
+    pos_b, found_b = groupby.lookup_rows_in_table(d_hi, d_lo,
+                                                  base_hi, base_lo)
+    ok_b = jnp.all(found_b | ~d_gv)
+    merged_b = cube_mod.scatter_merge_stats(base_stats, pos_b, d_stats,
+                                            use_pallas=use_pallas)
+    count_cols = [merged_b["one"]] + [merged_b[f"t_{t}"] for t in tnames]
+    neg_min = jnp.min(jnp.stack(count_cols))
+    views = {}
+    for t, dims in zip(tnames, vdims):
+        roll = cube_mod._rollup_fn(codec, dims)
+        v_hi, v_lo, v_stats, v_gv = roll(d_hi, d_lo, d_gv, d_stats)
+        pos_v, found_v = groupby.lookup_rows_in_table(
+            v_hi, v_lo, view_hi[t], view_lo[t])
+        ok_v = jnp.all(found_v | ~v_gv)
+        m_stats = cube_mod.scatter_merge_stats(view_stats[t], pos_v, v_stats,
+                                               use_pallas=use_pallas)
+        nt = m_stats[f"t_{t}"]
+        nc = m_stats["one"] - nt
+        new_keep = update_overlap(view_keep[t], view_gv[t], nt, nc, pos_v)
+        views[t] = dict(delta=(v_hi, v_lo, v_stats, v_gv), pos=pos_v,
+                        ok=ok_v, stats=m_stats, keep=new_keep)
+    buckets = {d: codec.extract(d_hi, d_lo, d) for d in codec.names}
+    return dict(d_stats=d_stats, pos_b=pos_b, ok_b=ok_b, merged_b=merged_b,
+                neg_min=neg_min, views=views, buckets=buckets,
+                n_delta=jnp.sum(d_gv.astype(jnp.int32)))
+
+
 class OnlineEngine:
     """Streaming causal-inference engine over a fixed coarsening schema.
 
@@ -90,15 +173,31 @@ class OnlineEngine:
     query_dims:  extra dims kept in every view so sub-population queries
                  (e.g. airport=SFO) stay answerable from materialized state.
     keep_rows:   also log raw rows (append-only, geometric growth) — needed
-                 only for propensity refreshes and row-level diagnostics.
+                 only for row-level diagnostics; propensity refreshes now
+                 run off the bounded streaming reservoir instead.
+    reservoir_size: rows of streaming-propensity reservoir state kept per
+                 engine. Default-on so ``refresh_propensity`` works out of
+                 the box without a row log; it costs one jitted top-k
+                 merge per ingest (no host sync) — pass 0 to disable if
+                 propensity refreshes are never needed.
+    mesh:        a jax Mesh with a ``mesh_axis`` data axis: streamed batches
+                 are row-sharded across it and per-device delta stat tables
+                 combined via all-gather. None = single-device build.
     use_pallas:  route fast-path merges through the MXU scatter kernel.
+    fused_host_sync: plan every merge on device and fetch ONE fused result
+                 per ingest (default). False restores the legacy
+                 one-blocking-read-per-merge path (kept measurable in
+                 ``benchmarks/bench_online.py``).
     """
 
     def __init__(self, specs: Mapping[str, CoarsenSpec],
                  treatments: Mapping[str, Sequence[str]], outcome: str,
                  query_dims: Sequence[str] = (), granule: int = 1024,
                  delta_granule: int = 256, keep_rows: bool = False,
-                 row_granule: int = 4096, use_pallas: bool = False):
+                 row_granule: int = 4096, use_pallas: bool = False,
+                 reservoir_size: int = 8192, mesh=None,
+                 mesh_axis: str = "data", seed: int = 0,
+                 fused_host_sync: bool = True):
         self.treatments = {t: tuple(sorted(c)) for t, c in treatments.items()}
         self.outcome = outcome
         self.query_dims = tuple(query_dims)
@@ -112,8 +211,15 @@ class OnlineEngine:
         self.granule = granule
         self.delta_granule = delta_granule
         self.use_pallas = use_pallas
+        self.fused_host_sync = fused_host_sync
         self.row_granule = row_granule
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self._mesh_ndev = 1 if mesh is None else int(mesh.shape[mesh_axis])
+        self._delta_cap = delta_granule
+        self._sharded_builds: Dict[int, Callable] = {}
         tnames = sorted(self.treatments)
+        self._row_cols = (*base_dims, *tnames, outcome)
         self.base = cube_mod.empty_cuboid(self.codec, tnames,
                                           capacity=granule)
         self.views: Dict[str, _View] = {}
@@ -126,13 +232,19 @@ class OnlineEngine:
                 cuboid=cube_mod.empty_cuboid(vcodec, tnames,
                                              capacity=granule),
                 keep=jnp.zeros((granule,), bool))
+        self._touch: Dict[str, jnp.ndarray] = {
+            name: jnp.zeros((granule,), jnp.int32)
+            for name in (BASE_VIEW, *tnames)}
+        self._ingest_count = 0
         self.rows: Optional[GrowableTable] = (
             None if not keep_rows else GrowableTable.from_table(
                 Table.from_numpy(
-                    {c: np.zeros((0,), np.float32)
-                     for c in (*base_dims, *tnames, outcome)},
+                    {c: np.zeros((0,), np.float32) for c in self._row_cols},
                     np.zeros((0,), bool)),
                 granule=row_granule))
+        self.stream: Optional[StreamStats] = (
+            StreamStats.empty(self._row_cols, capacity=reservoir_size,
+                              seed=seed) if reservoir_size > 0 else None)
         self.n_rows_ingested = 0
         self._cache: Dict[Tuple, ATEEstimate] = {}
         self.cache_hits = 0
@@ -148,46 +260,219 @@ class OnlineEngine:
         eng.ingest(table)
         return eng
 
+    # ------------------------------------------------------- delta build
+    def _get_sharded_build(self, capacity: int) -> Callable:
+        if capacity not in self._sharded_builds:
+            from repro.core.distributed import make_sharded_delta_build
+            self._sharded_builds[capacity] = make_sharded_delta_build(
+                self.mesh, self.specs, sorted(self.treatments),
+                self.outcome, capacity, axis=self.mesh_axis)
+        return self._sharded_builds[capacity]
+
+    def _build_delta(self, batch: Table):
+        """Raw (uncompacted) delta stat table of one batch, sharded over
+        the mesh when one is attached. Returns device arrays only —
+        (hi, lo, stats, group_valid, n_groups, overflow) — where overflow
+        means the table is INCOMPLETE (a local shard overflowed its
+        capacity) and the caller must rebuild exactly on the host.
+        """
+        cols = {c: batch.columns[c] for c in self._row_cols}
+        valid = batch.valid
+        if self.mesh is not None and self._mesh_ndev > 1:
+            pad = (-batch.nrows) % self._mesh_ndev
+            if pad:
+                cols = {k: jnp.pad(v, (0, pad)) for k, v in cols.items()}
+                valid = jnp.pad(valid, (0, pad))
+            fn = self._get_sharded_build(self._delta_cap)
+            return fn(cols, valid)
+        fn = cube_mod._build_fn(self.codec,
+                                tuple(sorted(self.specs.items())),
+                                tuple(sorted(self.treatments)), self.outcome)
+        hi, lo, stats, gv = fn(cols, valid)
+        n_full = jnp.sum(gv.astype(jnp.int32))
+        return hi, lo, stats, gv, n_full, jnp.asarray(False)
+
     # ------------------------------------------------------------- ingest
     def ingest(self, batch: Table, retract: bool = False) -> DeltaReport:
         """Fold one streamed batch into every materialized view.
 
-        Work is O(batch + |delta groups| * #views) on the fast path; a full
-        re-sort of a view's (tiny) stat table only happens when the delta
-        introduces group keys that view has never seen.
+        Work is O(batch/device + |delta groups| * #views) on the fast path;
+        a full re-sort of a view's (tiny) stat table only happens when the
+        delta introduces group keys that view has never seen.
 
         ``retract=True`` REMOVES previously ingested rows: every maintained
         stat is a count/sum, so retraction is exact sign-flipped delta
         maintenance — groups can lose overlap and flip back out of the
-        matched set. Retracting rows that were never ingested corrupts the
-        state (counts go negative), as in any incremental view.
+        matched set. Retracting rows that were never ingested would drive
+        group counts negative and silently corrupt overlap masks, so it is
+        detected (new keys, or any post-merge count below zero) and raises
+        ``ValueError`` BEFORE any state is committed.
         """
         if retract and self.rows is not None:
             raise ValueError("retract=True is not supported with "
                              "keep_rows=True (the row log is append-only)")
+        hi, lo, stats, gv, n_full, overflow = self._build_delta(batch)
+        if self.fused_host_sync:
+            return self._ingest_fused(batch, hi, lo, stats, gv, n_full,
+                                      overflow, retract)
+        return self._ingest_unfused(batch, hi, lo, stats, gv, n_full,
+                                    overflow, retract)
+
+    def _commit_rows(self, batch: Table, retract: bool) -> None:
+        """Row log / streaming-propensity / counter updates shared by both
+        ingest paths. Called only after the retraction guard has passed."""
         if self.rows is not None:
             self.rows = self.rows.append(
                 batch.select(list(self.rows.table.columns)),
                 granule=self.row_granule)
+        if self.stream is not None:
+            self.stream = self.stream.update(
+                {c: batch.columns[c] for c in self._row_cols},
+                batch.valid, retract=retract)
         self.n_rows_ingested += -batch.nrows if retract else batch.nrows
-        tnames = sorted(self.treatments)
-        d_base = cube_mod.delta_cuboid(batch, self.specs, tnames,
-                                       self.outcome,
-                                       granule=self.delta_granule)
+        self._ingest_count += 1
+
+    def _raise_bad_retraction(self) -> None:
+        raise ValueError(
+            "retraction of rows that were never ingested: the delta "
+            "contains unknown group keys or would drive a group count "
+            "negative; engine state is unchanged")
+
+    def _ingest_fused(self, batch: Table, hi, lo, stats, gv, n_full,
+                      overflow, retract: bool) -> DeltaReport:
+        dcap = self._delta_cap
+        d_hi, d_lo, d_gv = hi[:dcap], lo[:dcap], gv[:dcap]
+        d_stats = {k: v[:dcap] for k, v in stats.items()}
+        tnames = tuple(sorted(self.treatments))
+        plan = _plan_ingest(
+            d_hi, d_lo, d_stats, d_gv,
+            self.base.key_hi, self.base.key_lo, self.base.stats,
+            {t: self.views[t].cuboid.key_hi for t in tnames},
+            {t: self.views[t].cuboid.key_lo for t in tnames},
+            {t: self.views[t].cuboid.stats for t in tnames},
+            {t: self.views[t].cuboid.group_valid for t in tnames},
+            {t: self.views[t].keep for t in tnames},
+            codec=self.codec, tnames=tnames,
+            vdims=tuple(self.views[t].dims for t in tnames),
+            retract=retract, use_pallas=self.use_pallas)
+        # THE one host sync of a fast-path ingest: every decision at once
+        fetched = jax.device_get(dict(
+            overflow=overflow | (n_full > dcap), ok_b=plan["ok_b"],
+            ok_v={t: plan["views"][t]["ok"] for t in tnames},
+            neg_min=plan["neg_min"], n_delta=plan["n_delta"],
+            gv=d_gv, buckets=plan["buckets"]))
+        if fetched["overflow"]:
+            # the sliced delta missed groups: fall back to the exact
+            # host-compacted path and grow the delta capacity geometrically
+            self._delta_cap = _round_capacity(
+                max(int(n_full), 2 * self._delta_cap), self.delta_granule)
+            return self._ingest_unfused(batch, hi, lo, stats, gv, n_full,
+                                        overflow, retract)
+        all_fast = bool(fetched["ok_b"]) and all(
+            bool(v) for v in fetched["ok_v"].values())
+        if retract and (not all_fast or fetched["neg_min"] < -0.5):
+            self._raise_bad_retraction()
+        counter = self._ingest_count + 1
+        fast: Dict[str, bool] = {}
+        d_base = cube_mod.Cuboid(
+            codec=self.codec, key_hi=d_hi, key_lo=d_lo,
+            stats=plan["d_stats"], group_valid=d_gv, treatments=tnames)
+        if fetched["ok_b"]:
+            old = self.base
+            self.base = dataclasses.replace(old, stats=plan["merged_b"])
+            self._touch[BASE_VIEW] = _stamp_touch(
+                self._touch[BASE_VIEW], plan["pos_b"], d_gv, counter)
+        else:
+            old = self.base
+            self.base, pos_b, _ = cube_mod.merge_delta(
+                old, d_base, granule=self.granule,
+                use_pallas=self.use_pallas, fast=False)
+            self._touch[BASE_VIEW] = _stamp_touch(
+                _remap_touch(old, self.base, self._touch[BASE_VIEW]),
+                pos_b, d_gv, counter)
+        fast[BASE_VIEW] = bool(fetched["ok_b"])
+        for t in tnames:
+            view = self.views[t]
+            vplan = plan["views"][t]
+            v_gv = vplan["delta"][3]
+            if fetched["ok_v"][t]:
+                view.cuboid = dataclasses.replace(view.cuboid,
+                                                  stats=vplan["stats"])
+                view.keep = vplan["keep"]
+                self._touch[t] = _stamp_touch(self._touch[t], vplan["pos"],
+                                              v_gv, counter)
+            else:
+                v_hi, v_lo, v_stats, _ = vplan["delta"]
+                d_view = cube_mod.Cuboid(
+                    codec=view.cuboid.codec, key_hi=v_hi, key_lo=v_lo,
+                    stats=v_stats, group_valid=v_gv, treatments=tnames)
+                old_v = view.cuboid
+                merged, pos_v, _ = cube_mod.merge_delta(
+                    old_v, d_view, granule=self.granule,
+                    use_pallas=self.use_pallas, fast=False)
+                nt = merged.stats[f"t_{t}"]
+                view.keep = overlap_keep(merged.group_valid, nt,
+                                         merged.stats["one"] - nt)
+                view.cuboid = merged
+                self._touch[t] = _stamp_touch(
+                    _remap_touch(old_v, merged, self._touch[t]),
+                    pos_v, v_gv, counter)
+            fast[t] = bool(fetched["ok_v"][t])
+        self._commit_rows(batch, retract)
+        invalidated = self._invalidate(
+            fetched["gv"], lambda d: fetched["buckets"][d])
+        return DeltaReport(n_rows=batch.nrows,
+                           n_delta_groups=int(fetched["n_delta"]),
+                           fast_path=fast, invalidated=invalidated)
+
+    def _ingest_unfused(self, batch: Table, hi, lo, stats, gv, n_full,
+                        overflow, retract: bool) -> DeltaReport:
+        """Legacy merge loop: one blocking device->host read per merge (the
+        fast/slow decision), plus host-side delta compaction. Kept as the
+        exact fallback for delta-capacity overflow and as the measurable
+        baseline for the fused path (``bench_online.py``)."""
+        tnames = tuple(sorted(self.treatments))
+        if bool(overflow):
+            # a local shard overflowed: the gathered table is incomplete,
+            # so rebuild the delta exactly on one device
+            d_base = cube_mod.delta_cuboid(batch, self.specs, tnames,
+                                           self.outcome,
+                                           granule=self.delta_granule)
+        else:
+            d_base = cube_mod.compact_cuboid(
+                cube_mod.Cuboid(codec=self.codec, key_hi=hi, key_lo=lo,
+                                stats=stats, group_valid=gv,
+                                treatments=tnames),
+                granule=self.delta_granule)
         if retract:
             d_base = dataclasses.replace(
                 d_base, stats={k: -v for k, v in d_base.stats.items()})
         fast: Dict[str, bool] = {}
-        self.base, _, fast[BASE_VIEW] = cube_mod.merge_delta(
+        merged_base, pos_b, fast_b = cube_mod.merge_delta(
             self.base, d_base, granule=self.granule,
             use_pallas=self.use_pallas)
+        if retract:
+            counts = np.stack(
+                [np.asarray(merged_base.stats["one"])]
+                + [np.asarray(merged_base.stats[f"t_{t}"]) for t in tnames])
+            if not fast_b or counts.min() < -0.5:
+                self._raise_bad_retraction()
+        counter = self._ingest_count + 1
+        old_base = self.base
+        self.base, fast[BASE_VIEW] = merged_base, fast_b
+        touch_b = (self._touch[BASE_VIEW] if fast_b else
+                   _remap_touch(old_base, merged_base,
+                                self._touch[BASE_VIEW]))
+        self._touch[BASE_VIEW] = _stamp_touch(touch_b, pos_b,
+                                              d_base.group_valid, counter)
         # lattice propagation: the delta itself rolls up to each view's dims
         for t, view in self.views.items():
             d_view = cube_mod.compact_cuboid(
                 cube_mod.rollup(d_base, view.dims),
                 granule=self.delta_granule)
+            old_v = view.cuboid
             merged, pos, was_fast = cube_mod.merge_delta(
-                view.cuboid, d_view, granule=self.granule,
+                old_v, d_view, granule=self.granule,
                 use_pallas=self.use_pallas)
             nt = merged.stats[f"t_{t}"]
             nc = merged.stats["one"] - nt
@@ -198,20 +483,13 @@ class OnlineEngine:
             else:
                 view.keep = overlap_keep(merged.group_valid, nt, nc)
             view.cuboid = merged
+            touch_v = (self._touch[t] if was_fast else
+                       _remap_touch(old_v, merged, self._touch[t]))
+            self._touch[t] = _stamp_touch(touch_v, pos,
+                                          d_view.group_valid, counter)
             fast[t] = was_fast
-        invalidated = self._invalidate(d_base)
-        return DeltaReport(n_rows=batch.nrows,
-                           n_delta_groups=int(d_base.n_groups()),
-                           fast_path=fast, invalidated=invalidated)
-
-    def _invalidate(self, d_base: cube_mod.Cuboid) -> Tuple:
-        """Drop exactly the cache entries whose group predicate the delta
-        touched: an unrestricted estimate is touched by any delta; a
-        sub-population estimate only if some delta group satisfies its
-        (conjunctive) bucket predicate."""
-        gv = np.asarray(d_base.group_valid)
-        if not gv.any():
-            return ()
+        self._commit_rows(batch, retract)
+        gv_host = np.asarray(d_base.group_valid)
         buckets: Dict[str, np.ndarray] = {}
 
         def dim_buckets(dim: str) -> np.ndarray:
@@ -220,6 +498,20 @@ class OnlineEngine:
                     d_base.key_hi, d_base.key_lo, dim))
             return buckets[dim]
 
+        invalidated = self._invalidate(gv_host, dim_buckets)
+        return DeltaReport(n_rows=batch.nrows,
+                           n_delta_groups=int(np.sum(gv_host)),
+                           fast_path=fast, invalidated=invalidated)
+
+    def _invalidate(self, gv: np.ndarray,
+                    dim_buckets: Callable[[str], np.ndarray]) -> Tuple:
+        """Drop exactly the cache entries whose group predicate the delta
+        touched: an unrestricted estimate is touched by any delta; a
+        sub-population estimate only if some delta group satisfies its
+        (conjunctive) bucket predicate. Operates on host arrays the caller
+        already fetched — no extra device sync."""
+        if not gv.any():
+            return ()
         dropped: List[Tuple] = []
         for key in list(self._cache):
             _, subpop = key
@@ -235,11 +527,51 @@ class OnlineEngine:
                 del self._cache[key]
         return tuple(dropped)
 
+    # ----------------------------------------------------------- eviction
+    def evict(self, ttl: int) -> Dict[str, int]:
+        """Drop every group whose last delta touch is more than ``ttl``
+        ingests old — the bounded-state escape hatch for streams whose key
+        space grows without bound. Estimates afterwards cover only the
+        surviving (recently active) groups, so this deliberately trades
+        the offline-equivalence guarantee for bounded memory; re-ingesting
+        an evicted key later resurrects it as a fresh group.
+
+        Returns {view name: groups evicted}.
+        """
+        cutoff = self._ingest_count - ttl
+        evicted: Dict[str, int] = {}
+        for name in (BASE_VIEW, *sorted(self.treatments)):
+            cub = (self.base if name == BASE_VIEW
+                   else self.views[name].cuboid)
+            keep_mask = np.asarray(self._touch[name]) >= cutoff
+            gv = np.asarray(cub.group_valid)
+            n_evict = int((gv & ~keep_mask).sum())
+            evicted[name] = n_evict
+            if n_evict == 0:
+                continue
+            new_cub = cube_mod.compact_cuboid(cub, granule=self.granule,
+                                              keep_mask=keep_mask)
+            new_touch = _remap_touch(cub, new_cub, self._touch[name])
+            if name == BASE_VIEW:
+                self.base = new_cub
+            else:
+                view = self.views[name]
+                nt = new_cub.stats[f"t_{name}"]
+                view.keep = overlap_keep(new_cub.group_valid, nt,
+                                         new_cub.stats["one"] - nt)
+                view.cuboid = new_cub
+            self._touch[name] = new_touch
+        if any(evicted.values()):
+            self._cache.clear()
+        return evicted
+
     # ------------------------------------------------------------ queries
     def ate(self, treatment: str, subpopulation: SubPop = None
             ) -> ATEEstimate:
         """Online causal query from materialized state: O(view capacity),
-        independent of rows ingested. Repeated queries hit the cache."""
+        independent of rows ingested. Repeated queries hit the cache.
+        Includes the Neyman within-group variance, carried by the cuboid's
+        second-moment (``yy``) stat columns."""
         key = (treatment, _freeze_subpop(subpopulation))
         if key in self._cache:
             self.cache_hits += 1
@@ -257,7 +589,10 @@ class OnlineEngine:
         nc = cub.stats["one"] - nt
         yt = cub.stats[f"yt_{treatment}"]
         yc = cub.stats["y"] - yt
-        est = estimate_ate_from_stats(keep, nt, nc, yt, yc)
+        yyt = cub.stats[f"yyt_{treatment}"]
+        yyc = cub.stats["yy"] - yyt
+        est = estimate_ate_from_stats(keep, nt, nc, yt, yc,
+                                      sum_yy_t=yyt, sum_yy_c=yyc)
         self._cache[key] = est
         return est
 
@@ -294,18 +629,34 @@ class OnlineEngine:
     def refresh_propensity(self, treatment: str, features: Sequence[str],
                            step_budget: int = 4, cold_iters: int = 32,
                            ridge: float = 1e-4) -> LogisticModel:
-        """(Re)fit the propensity model over all ingested rows: a cold
-        Newton fit the first time, afterwards warm-started from the
-        previous coefficients with ``step_budget`` iterations."""
-        if self.rows is None:
-            raise ValueError("refresh_propensity needs keep_rows=True")
-        tbl = self.rows.table
-        X = design_matrix(tbl, features)
+        """(Re)fit the propensity model: a cold Newton fit the first time,
+        afterwards warm-started from the previous coefficients with
+        ``step_budget`` iterations. With ``keep_rows=True`` the fit runs
+        over the full row log; otherwise it runs over the engine's
+        streaming sufficient statistics — the bounded uniform reservoir
+        for rows, standardized by the exact stream-wide moment
+        accumulators — so no unbounded row log is ever needed."""
         prev = self.models.get(treatment)
-        model = fit_logistic(
-            X, tbl[treatment], tbl.valid,
-            n_iter=step_budget if prev is not None else cold_iters,
-            ridge=ridge, init=prev)
+        n_iter = step_budget if prev is not None else cold_iters
+        if self.rows is not None:
+            tbl = self.rows.table
+            X = design_matrix(tbl, features)
+            model = fit_logistic(X, tbl[treatment], tbl.valid,
+                                 n_iter=n_iter, ridge=ridge, init=prev)
+        elif self.stream is not None:
+            cols, rvalid = self.stream.reservoir()
+            X = jnp.stack([cols[f] for f in features], axis=-1)
+            # stream-exact moments standardize the COLD fit; warm refits
+            # keep the previous model's frozen standardization so the
+            # coefficients stay in one basis across refreshes
+            moments = (self.stream.moments(features) if prev is None
+                       else None)
+            model = fit_logistic(X, cols[treatment], rvalid,
+                                 n_iter=n_iter, ridge=ridge, init=prev,
+                                 moments=moments)
+        else:
+            raise ValueError("refresh_propensity needs keep_rows=True or "
+                             "reservoir_size > 0")
         self.models[treatment] = model
         return model
 

@@ -9,7 +9,8 @@ and pure-jnp reference.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+import functools
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +43,7 @@ def _standardize(X: jnp.ndarray, valid: jnp.ndarray):
 def fit_logistic(X: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
                  n_iter: int = 32, ridge: float = 1e-4,
                  init: Optional[LogisticModel] = None,
+                 moments: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
                  ) -> LogisticModel:
     """Newton-Raphson logistic regression on valid rows.
 
@@ -49,9 +51,15 @@ def fit_logistic(X: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
     ``init`` warm-starts from a previous model: its coefficients seed the
     iteration and its standardization is FROZEN (so coefficients stay
     comparable across online refreshes); ``n_iter`` is then the step budget
-    of the refresh, typically far below a cold fit's.
+    of the refresh, typically far below a cold fit's. ``moments`` overrides
+    the standardization with an externally maintained (mean, std) — the
+    online engine passes its exact streaming moments so a reservoir refit
+    standardizes over the WHOLE stream, not just the sampled rows.
     """
-    if init is not None:
+    if moments is not None:
+        mean, std = moments
+        Xs = (X - mean) / std
+    elif init is not None:
         mean, std = init.mean, init.std
         Xs = (X - mean) / std
     else:
@@ -61,20 +69,126 @@ def fit_logistic(X: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
     m = valid.astype(jnp.float32)
     tf = t.astype(jnp.float32)
 
+    def grad(w):
+        p = jax.nn.sigmoid(Xb @ w)
+        return Xb.T @ (m * (p - tf)) + ridge * w, p
+
     def step(w, _):
-        logits = Xb @ w
-        p = jax.nn.sigmoid(logits)
-        g = Xb.T @ (m * (p - tf)) + ridge * w
+        g, p = grad(w)
         s = m * p * (1.0 - p) + 1e-6
         H = (Xb * s[:, None]).T @ Xb + ridge * jnp.eye(d + 1)
         dw = jnp.linalg.solve(H, g)
-        return w - dw, jnp.linalg.norm(g)
+        return w - dw, None
 
     w0 = (init.w if init is not None
           else jnp.zeros((d + 1,), jnp.float32))
-    w, gnorms = jax.lax.scan(step, w0, None, length=n_iter)
-    return LogisticModel(w=w, mean=mean, std=std,
-                         converged=gnorms[-1] < 1e-3 * (1 + jnp.sum(m)) ** 0.5)
+    w, _ = jax.lax.scan(step, w0, None, length=n_iter)
+    # Convergence must be judged at the RETURNED w: the last scanned gradient
+    # norm predates the final Newton step, so warm refits (small n_iter)
+    # would mis-report by one step.
+    g_final, _ = grad(w)
+    converged = (jnp.linalg.norm(g_final)
+                 < 1e-3 * (1 + jnp.sum(m)) ** 0.5)
+    return LogisticModel(w=w, mean=mean, std=std, converged=converged)
+
+
+@functools.partial(jax.jit, static_argnames=("names",))
+def _stream_update(names: Tuple[str, ...], res_cols, priority, n, sums,
+                   sumsqs, batch_cols, valid, sign, key):
+    """One streamed batch into (moments, reservoir). Fully on device: no
+    host round-trip rides on the ingest hot path.
+
+    Moments are plain signed sums (exact, retractable). The reservoir is
+    priority-based uniform sampling: every valid row draws an iid U(0,1)
+    priority and the R largest priorities across the whole stream are kept —
+    a top-k merge of the current reservoir with the batch, which is exactly
+    Algorithm R's distribution without sequential per-row state.
+    """
+    w = valid.astype(jnp.float32) * sign
+    new_n = n + jnp.sum(w)
+    new_sums, new_sumsqs = {}, {}
+    for c in names:
+        x = batch_cols[c].astype(jnp.float32)
+        new_sums[c] = sums[c] + jnp.sum(w * x)
+        new_sumsqs[c] = sumsqs[c] + jnp.sum(w * x * x)
+    cap = priority.shape[0]
+    u = jax.random.uniform(key, valid.shape)
+    # retraction (sign < 0) cannot un-sample: contribute empty priorities
+    pri = jnp.where(valid & (sign > 0), u, -jnp.inf)
+    cat_pri = jnp.concatenate([priority, pri])
+    new_pri, idx = jax.lax.top_k(cat_pri, cap)
+    new_res = {}
+    for c in names:
+        cat = jnp.concatenate([res_cols[c],
+                               batch_cols[c].astype(jnp.float32)])
+        new_res[c] = cat[idx]
+    return new_res, new_pri, new_n, new_sums, new_sumsqs
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamStats:
+    """Sufficient statistics for streaming propensity refreshes: exact
+    per-column moment accumulators plus a bounded uniform reservoir of rows.
+
+    This is what lets :meth:`OnlineEngine.refresh_propensity` work without
+    ``keep_rows=True``'s unbounded row log: the moments standardize features
+    over the WHOLE stream (and support exact retraction), while the Newton
+    refit runs over the reservoir sample. Retraction only reverses the
+    moments — a retracted row may linger in the reservoir (bounded-memory
+    approximation, documented trade-off).
+    """
+
+    names: Tuple[str, ...]
+    columns: Dict[str, jnp.ndarray]   # (R,) reservoir slots per column
+    priority: jnp.ndarray             # (R,) f32; -inf marks an empty slot
+    n: jnp.ndarray                    # () f32 valid rows accumulated
+    sums: Dict[str, jnp.ndarray]      # () f32 per column
+    sumsqs: Dict[str, jnp.ndarray]    # () f32 per column
+    seed: int = 0
+    n_batches: int = 0                # host counter folded into the PRNG
+
+    @classmethod
+    def empty(cls, names: Sequence[str], capacity: int = 8192,
+              seed: int = 0) -> "StreamStats":
+        names = tuple(names)
+        zero = jnp.float32(0.0)
+        return cls(
+            names=names,
+            columns={c: jnp.zeros((capacity,), jnp.float32) for c in names},
+            priority=jnp.full((capacity,), -jnp.inf, jnp.float32),
+            n=zero, sums={c: zero for c in names},
+            sumsqs={c: zero for c in names}, seed=seed)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.priority.shape[0])
+
+    def update(self, batch_cols: Mapping[str, jnp.ndarray],
+               valid: jnp.ndarray, retract: bool = False) -> "StreamStats":
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                 self.n_batches)
+        cols = {c: batch_cols[c] for c in self.names}
+        res, pri, n, sums, sumsqs = _stream_update(
+            self.names, self.columns, self.priority, self.n, self.sums,
+            self.sumsqs, cols, valid,
+            jnp.float32(-1.0 if retract else 1.0), key)
+        return dataclasses.replace(self, columns=res, priority=pri, n=n,
+                                   sums=sums, sumsqs=sumsqs,
+                                   n_batches=self.n_batches + 1)
+
+    def moments(self, features: Sequence[str]
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Exact stream-wide (mean, std) per feature, from the accumulators
+        — same formula as :func:`_standardize` over the full row set."""
+        n = jnp.maximum(self.n, 1.0)
+        mean = jnp.stack([self.sums[f] for f in features]) / n
+        ex2 = jnp.stack([self.sumsqs[f] for f in features]) / n
+        std = jnp.sqrt(jnp.maximum(ex2 - mean ** 2, 1e-12))
+        return mean, std
+
+    def reservoir(self) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+        """(columns, valid-mask) of the sampled rows, fit-ready."""
+        return self.columns, self.priority > -jnp.inf
 
 
 def warm_refit(model: LogisticModel, X: jnp.ndarray, t: jnp.ndarray,

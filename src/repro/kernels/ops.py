@@ -82,13 +82,22 @@ def scatter_merge_op(table: jnp.ndarray, pos: jnp.ndarray,
                      vals: jnp.ndarray, block: int = 256) -> jnp.ndarray:
     """Merge delta stat rows into a (C, S) stat table at known positions
     (the online engine's fast-path cuboid update). Pads the delta to a
-    block multiple; padding rows contribute zeros."""
+    block multiple (padding rows contribute zeros) and, on TPU backends,
+    the stat axis to the 128-lane width Mosaic tiles by — the cuboid stat
+    bundle (3 + 3 * #treatments columns) is rarely lane-aligned."""
     if pos.shape[0] == 0:  # empty delta: at[].add semantics -> no-op
         return table.astype(jnp.float32)
+    interp = _interpret()
     vp, _ = _pad_rows(vals.astype(jnp.float32), block)
     pp, _ = _pad_rows(pos.astype(jnp.int32), block, fill=0)  # pad adds 0s
-    return scatter_merge_pallas(table.astype(jnp.float32), pp, vp,
-                                block=block, interpret=_interpret())
+    t = table.astype(jnp.float32)
+    s = t.shape[1]
+    pad_s = 0 if interp else (-s) % 128
+    if pad_s:
+        t = jnp.pad(t, ((0, 0), (0, pad_s)))
+        vp = jnp.pad(vp, ((0, 0), (0, pad_s)))
+    out = scatter_merge_pallas(t, pp, vp, block=block, interpret=interp)
+    return out[:, :s] if pad_s else out
 
 
 def knn_topk_op(Q: jnp.ndarray, C: jnp.ndarray, c_valid: jnp.ndarray,

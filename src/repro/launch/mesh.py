@@ -25,6 +25,14 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
         return jax.make_mesh(shape, axes)
 
 
+def make_data_mesh(n_devices: int = None, axis: str = "data"):
+    """1-D mesh over ``n_devices`` (default: all local devices) with a
+    single data axis — the shape the online engine's sharded delta
+    maintenance and the distributed combine-broadcast programs expect."""
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return make_mesh((n,), (axis,))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

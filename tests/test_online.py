@@ -14,9 +14,10 @@ import pytest
 
 from repro.core import (CoarsenSpec, OnlineEngine, cem, estimate_ate,
                         estimate_ate_from_stats)
-from repro.core import cube
+from repro.core import cube, keys
 from repro.core.cem import overlap_keep, update_overlap
-from repro.core.propensity import fit_logistic, predict_ps, warm_refit
+from repro.core.propensity import (StreamStats, fit_logistic, predict_ps,
+                                   warm_refit)
 from repro.data.columnar import GrowableTable, Table
 
 
@@ -328,6 +329,228 @@ def test_engine_propensity_warm_path():
                                atol=5e-3)
     with pytest.raises(ValueError):
         eng.ingest(batches[0], retract=True)   # row log is append-only
+
+
+def test_fused_and_unfused_ingest_paths_agree():
+    # the fused single-sync planner and the legacy one-sync-per-merge loop
+    # must maintain identical state, including across the grow path
+    c1, v1 = _frame(2000, seed=20, int_outcome=True, x0_hi=2)
+    c2, v2 = _frame(1500, seed=21, int_outcome=True)
+    cols = {k: np.concatenate([c1[k], c2[k]]) for k in c1}
+    valid = np.concatenate([v1, v2])
+    fused = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    legacy = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                          fused_host_sync=False)
+    for b in _batches(cols, valid, [700] * 5):
+        rf = fused.ingest(b)
+        rl = legacy.ingest(b)
+        assert rf.fast_path == rl.fast_path
+        assert rf.n_delta_groups == rl.n_delta_groups
+    assert _stat_map(fused.base) == _stat_map(legacy.base)
+    for t in TREATMENTS:
+        assert (_stat_map(fused.views[t].cuboid)
+                == _stat_map(legacy.views[t].cuboid))
+        np.testing.assert_array_equal(np.asarray(fused.views[t].keep),
+                                      np.asarray(legacy.views[t].keep))
+        assert float(fused.ate(t).ate) == float(legacy.ate(t).ate)
+
+
+def test_online_variance_matches_offline_row_level():
+    # the yy second-moment stat columns must reproduce estimate_ate's
+    # row-level Neyman within-group variance from materialized state alone
+    cols, valid = _frame(4000, seed=22)
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    for b in _batches(cols, valid, [800] * 5):
+        eng.ingest(b)
+    full = Table.from_numpy(cols, valid)
+    for t, cov in TREATMENTS.items():
+        res = cem(full, t, "y", {c: SPECS[c] for c in cov})
+        want = estimate_ate(res.groups, full["y"], full[t],
+                            res.table.valid)
+        got = eng.ate(t)
+        assert float(want.variance) > 0.0
+        np.testing.assert_allclose(float(got.variance),
+                                   float(want.variance),
+                                   rtol=1e-4, atol=1e-8)
+
+
+def test_retracting_never_ingested_rows_raises_and_leaves_state():
+    cols, valid = _frame(1200, seed=23, int_outcome=True)
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    for b in _batches(cols, valid, [600, 600]):
+        eng.ingest(b)
+    before_base = _stat_map(eng.base)
+    before_ate = float(eng.ate("ta").ate)
+    # same keys as ingested rows, but far more of them than ever existed:
+    # counts would go negative
+    bogus = Table.from_numpy(
+        {k: np.repeat(v[:1], 400) for k, v in cols.items()},
+        np.ones(400, bool))
+    with pytest.raises(ValueError, match="never ingested"):
+        eng.ingest(bogus, retract=True)
+    # keys the engine has never seen at all -> slow-path retraction, raises
+    novel = {k: v[:64].copy() for k, v in cols.items()}
+    novel["x1"][:] = 3
+    novel["x2"][:] = 2
+    novel["x0"][:] = 4
+    with pytest.raises(ValueError, match="never ingested"):
+        eng.ingest(Table.from_numpy(novel, np.ones(64, bool)),
+                   retract=True)
+    assert _stat_map(eng.base) == before_base
+    assert float(eng.ate("ta").ate) == before_ate
+
+
+def test_compact_cuboid_pads_with_canonical_invalid_marker():
+    cols, valid = _frame(300, seed=24)
+    full = Table.from_numpy(cols, valid)
+    cub = cube.compact_cuboid(
+        cube.build_cuboid(full, SPECS, sorted(TREATMENTS), "y"),
+        granule=128)
+    gv = np.asarray(cub.group_valid)
+    assert not gv.all()  # there is padding to check
+    np.testing.assert_array_equal(np.asarray(cub.key_hi)[~gv],
+                                  np.uint32(keys.INVALID_HI))
+    np.testing.assert_array_equal(np.asarray(cub.key_lo)[~gv],
+                                  np.uint32(keys.INVALID_LO))
+
+
+def test_converged_flag_reflects_returned_coefficients():
+    # gnorms[-1] used to be the gradient norm BEFORE the final Newton step:
+    # a warm refit whose single step lands on the optimum was mis-reported
+    # as unconverged. The flag must be computed at the returned w.
+    rng = np.random.default_rng(25)
+    n, d = 4096, 3
+    X = rng.normal(0, 1, (n, d)).astype(np.float32)
+    logits = 1.0 * X[:, 0] - 0.5 * X[:, 1]
+    t = (rng.random(n) < 1 / (1 + np.exp(-logits))).astype(np.float32)
+    m = np.ones(n, bool)
+    full = fit_logistic(jnp.asarray(X), jnp.asarray(t), jnp.asarray(m))
+    assert bool(full.converged)
+
+    import dataclasses as dc
+    perturbed = dc.replace(full, w=full.w + 5e-3)
+
+    def gnorm(model):
+        Xs = (jnp.asarray(X) - model.mean) / model.std
+        Xb = jnp.concatenate([Xs, jnp.ones((n, 1), jnp.float32)], axis=1)
+        p = 1 / (1 + jnp.exp(-(Xb @ model.w)))
+        g = Xb.T @ (jnp.asarray(m, jnp.float32) * (p - jnp.asarray(t)))
+        return float(jnp.linalg.norm(g + 1e-4 * model.w))
+
+    thresh = 1e-3 * (1 + n) ** 0.5
+    assert gnorm(perturbed) > thresh  # the pre-step norm is NOT converged
+    refit = fit_logistic(jnp.asarray(X), jnp.asarray(t), jnp.asarray(m),
+                         n_iter=1, init=perturbed)
+    # one Newton step from a near-optimum re-converges (quadratic rate) ...
+    assert gnorm(refit) < thresh
+    # ... and the flag now agrees with the returned coefficients
+    assert bool(refit.converged)
+
+
+def test_stream_stats_moments_exact_and_retractable():
+    rng = np.random.default_rng(26)
+    n = 3000
+    x = rng.normal(3.0, 2.0, n).astype(np.float32)
+    t = (rng.random(n) < 0.5).astype(np.float32)
+    valid = rng.random(n) > 0.2
+    ss = StreamStats.empty(("x", "t"), capacity=512)
+    for s in range(0, n, 500):
+        ss = ss.update({"x": jnp.asarray(x[s:s + 500]),
+                        "t": jnp.asarray(t[s:s + 500])},
+                       jnp.asarray(valid[s:s + 500]))
+    mean, std = ss.moments(["x"])
+    np.testing.assert_allclose(float(mean[0]), x[valid].mean(), rtol=1e-5)
+    np.testing.assert_allclose(float(std[0]), x[valid].std(), rtol=1e-4)
+    # retraction reverses the moments exactly (reservoir is left alone)
+    ss2 = ss.update({"x": jnp.asarray(x[:500]), "t": jnp.asarray(t[:500])},
+                    jnp.asarray(valid[:500]), retract=True)
+    keep = valid.copy()
+    keep[:500] = False
+    mean2, std2 = ss2.moments(["x"])
+    np.testing.assert_allclose(float(mean2[0]), x[keep].mean(), rtol=1e-5)
+    np.testing.assert_allclose(float(std2[0]), x[keep].std(), rtol=1e-3)
+    # the reservoir never exceeds its bound and only holds valid rows
+    _, rvalid = ss.reservoir()
+    assert int(rvalid.sum()) == min(512, int(valid.sum()))
+
+
+def test_reservoir_propensity_refresh_without_row_log():
+    # keep_rows=False: refreshes run over the streaming reservoir with
+    # stream-exact standardization. With capacity >= stream size the
+    # reservoir holds every valid row, so the refit matches the full fit.
+    cols, valid = _frame(2000, seed=27)
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                       reservoir_size=4096)
+    assert eng.rows is None
+    batches = _batches(cols, valid, [1000, 1000])
+    eng.ingest(batches[0])
+    m1 = eng.refresh_propensity("ta", ["x0", "x1"])
+    eng.ingest(batches[1])
+    m2 = eng.refresh_propensity("ta", ["x0", "x1"], step_budget=4)
+    full = Table.from_numpy(cols, valid)
+    from repro.core.propensity import design_matrix
+    X = design_matrix(full, ["x0", "x1"])
+    ref_model = fit_logistic(X, full["ta"], full.valid)
+    np.testing.assert_allclose(np.asarray(predict_ps(m2, X)),
+                               np.asarray(predict_ps(ref_model, X)),
+                               atol=5e-3)
+    # a bounded (sub-stream) reservoir still recovers the model to
+    # statistical accuracy (deterministic: PRNG keys are fixed)
+    small = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                         reservoir_size=512)
+    for b in batches:
+        small.ingest(b)
+    m_small = small.refresh_propensity("ta", ["x0", "x1"])
+    np.testing.assert_allclose(np.asarray(predict_ps(m_small, X)),
+                               np.asarray(predict_ps(ref_model, X)),
+                               atol=0.15)
+    # reservoir_size=0 and no row log: refresh must refuse, not lie
+    none = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                        reservoir_size=0)
+    none.ingest(batches[0])
+    with pytest.raises(ValueError, match="reservoir"):
+        none.refresh_propensity("ta", ["x0", "x1"])
+
+
+def test_eviction_ttl_bounds_unbounded_key_space():
+    # each batch lives in its own x0 slice -> the key space keeps growing;
+    # TTL eviction must drop groups whose last touch is stale
+    n_per = 200
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=64,
+                       delta_granule=64)
+    rng = np.random.default_rng(28)
+    for i in range(5):
+        cols = {
+            "x0": np.full(n_per, i, np.int32),
+            "x1": rng.integers(0, 4, n_per).astype(np.int32),
+            "x2": rng.integers(0, 3, n_per).astype(np.int32),
+        }
+        cols["ta"] = (rng.random(n_per) < 0.5).astype(np.int32)
+        cols["tb"] = (rng.random(n_per) < 0.5).astype(np.int32)
+        cols["y"] = rng.normal(0, 1, n_per).astype(np.float32)
+        eng.ingest(Table.from_numpy(cols))
+    groups_before = int(eng.base.n_groups())
+    # ttl=2 keeps touches at most 2 ingests old: batches 2, 3, 4
+    evicted = eng.evict(ttl=2)
+    assert evicted["__base__"] > 0
+    assert int(eng.base.n_groups()) == groups_before - evicted["__base__"]
+    x0_left = np.asarray(eng.codec.extract(
+        eng.base.key_hi, eng.base.key_lo, "x0"))
+    gv = np.asarray(eng.base.group_valid)
+    assert set(x0_left[gv]) == {2, 3, 4}
+    # queries keep working over the surviving groups; cache was dropped
+    assert not eng._cache
+    est = eng.ate("ta")
+    assert int(est.n_groups) > 0
+    # a second evict with nothing stale is a no-op
+    assert eng.evict(ttl=2) == {k: 0 for k in evicted}
+    # re-ingesting an evicted slice resurrects those groups fresh
+    cols["x0"][:] = 0
+    eng.ingest(Table.from_numpy(cols))
+    x0_left = np.asarray(eng.codec.extract(
+        eng.base.key_hi, eng.base.key_lo, "x0"))
+    gv = np.asarray(eng.base.group_valid)
+    assert 0 in set(x0_left[gv])
 
 
 def test_estimate_ate_from_stats_matches_estimate_ate():

@@ -1,0 +1,172 @@
+"""Multi-device online engine: sharded ingest == single-device ingest.
+
+The contract: attaching a mesh changes WHERE the per-batch delta stat table
+is computed (per-device local aggregation + all-gather + combine), never
+WHAT is maintained — cuboid stats are bit-identical (integer outcomes) and
+matched sets / ATEs identical across 1/2/4-device meshes.
+
+Runs in a SUBPROCESS with --xla_force_host_platform_device_count so the
+main pytest process keeps seeing exactly 1 device (same isolation rule as
+tests/test_distributed.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT_HEADER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax, jax.numpy as jnp
+assert jax.device_count() == 4, jax.devices()
+from repro.launch.mesh import make_data_mesh
+from repro.core import CoarsenSpec, OnlineEngine
+from repro.data.columnar import Table
+
+SPECS = {"x0": CoarsenSpec.categorical(5), "x1": CoarsenSpec.categorical(4),
+         "x2": CoarsenSpec.categorical(3)}
+TREATMENTS = {"ta": ["x0", "x1"], "tb": ["x0", "x2"]}
+
+
+def frame(n, seed, x0_hi=5):
+    rng = np.random.default_rng(seed)
+    cols = {
+        "x0": rng.integers(0, x0_hi, n).astype(np.int32),
+        "x1": rng.integers(0, 4, n).astype(np.int32),
+        "x2": rng.integers(0, 3, n).astype(np.int32),
+    }
+    p = 0.15 + 0.6 * cols["x0"] / 4
+    cols["ta"] = (rng.random(n) < p).astype(np.int32)
+    cols["tb"] = (rng.random(n) < 0.4).astype(np.int32)
+    y = 2.0 * cols["ta"] + 1.5 * cols["x0"] + rng.normal(0, 0.5, n)
+    cols["y"] = np.round(y).astype(np.float32)  # exact f32 sums
+    return cols, rng.random(n) > 0.08
+
+
+def stat_map(cub):
+    gv = np.asarray(cub.group_valid) & (np.asarray(cub.stats["one"]) > 0)
+    hi = np.asarray(cub.key_hi)[gv]
+    lo = np.asarray(cub.key_lo)[gv]
+    c = {k: np.asarray(v)[gv] for k, v in sorted(cub.stats.items())}
+    return {(int(h), int(l)): tuple(float(c[k][i]) for k in c)
+            for i, (h, l) in enumerate(zip(hi, lo))}
+"""
+
+
+def _run(body: str):
+    code = SCRIPT_HEADER + textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=600,
+                          env={**os.environ, "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc.stdout
+
+
+def test_sharded_ingest_bit_identical_across_device_counts():
+    out = _run("""
+    # early batches restricted to x0 < 2 -> later batches add new group
+    # keys mid-stream, exercising the grow path under sharding too
+    c1, v1 = frame(3000, seed=1, x0_hi=2)
+    c2, v2 = frame(2024, seed=2)
+    cols = {k: np.concatenate([c1[k], c2[k]]) for k in c1}
+    valid = np.concatenate([v1, v2])
+    # batch sizes deliberately not divisible by the device count: the
+    # sharded build pads with invalid rows
+    sizes = [1000, 1000, 1000, 1000, 1024]
+
+    engines = {}
+    for ndev in (1, 2, 4):
+        mesh = make_data_mesh(ndev) if ndev > 1 else None
+        eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256, mesh=mesh)
+        s = 0
+        saw_slow = False
+        for sz in sizes:
+            b = Table.from_numpy({k: v[s:s + sz] for k, v in cols.items()},
+                                 valid[s:s + sz])
+            rep = eng.ingest(b)
+            if s > 0 and not all(rep.fast_path.values()):
+                saw_slow = True
+            s += sz
+        assert saw_slow, "stream never exercised the grow path"
+        engines[ndev] = eng
+
+    ref = engines[1]
+    full = Table.from_numpy(cols, valid)
+    ref_matched = {t: np.asarray(ref.matched_rows(t, full))
+                   for t in TREATMENTS}
+    for ndev in (2, 4):
+        eng = engines[ndev]
+        assert stat_map(eng.base) == stat_map(ref.base), ndev
+        for t in TREATMENTS:
+            assert (stat_map(eng.views[t].cuboid)
+                    == stat_map(ref.views[t].cuboid)), (ndev, t)
+            got, want = eng.ate(t), ref.ate(t)
+            assert float(got.ate) == float(want.ate), (ndev, t)
+            assert float(got.variance) == float(want.variance), (ndev, t)
+            assert int(got.n_groups) == int(want.n_groups)
+            np.testing.assert_array_equal(
+                np.asarray(eng.matched_rows(t, full)), ref_matched[t])
+    print("SHARDED_EQUIV_OK")
+    """)
+    assert "SHARDED_EQUIV_OK" in out
+
+
+def test_sharded_retraction_and_guard():
+    out = _run("""
+    cols, valid = frame(4000, seed=3)
+    sizes = [1000] * 4
+    engines = {}
+    for ndev in (1, 4):
+        mesh = make_data_mesh(ndev) if ndev > 1 else None
+        eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256, mesh=mesh)
+        for s in range(0, 4000, 1000):
+            eng.ingest(Table.from_numpy(
+                {k: v[s:s + 1000] for k, v in cols.items()},
+                valid[s:s + 1000]))
+        engines[ndev] = eng
+    # retract the second batch on both: still bit-identical
+    b1 = Table.from_numpy({k: v[1000:2000] for k, v in cols.items()},
+                          valid[1000:2000])
+    for eng in engines.values():
+        eng.ingest(b1, retract=True)
+    assert stat_map(engines[4].base) == stat_map(engines[1].base)
+    for t in TREATMENTS:
+        assert float(engines[4].ate(t).ate) == float(engines[1].ate(t).ate)
+    # the never-ingested guard fires through the sharded path too
+    bogus = Table.from_numpy({k: np.repeat(v[:1], 600) for k, v in
+                              cols.items()}, np.ones(600, bool))
+    before = stat_map(engines[4].base)
+    try:
+        engines[4].ingest(bogus, retract=True)
+        raise SystemExit("guard did not fire")
+    except ValueError:
+        pass
+    assert stat_map(engines[4].base) == before
+    print("SHARDED_RETRACT_OK")
+    """)
+    assert "SHARDED_RETRACT_OK" in out
+
+
+def test_sharded_delta_capacity_overflow_falls_back_exactly():
+    out = _run("""
+    # tiny delta capacity: the first wide batch overflows the sliced delta
+    # table, forcing the exact host fallback + geometric capacity growth
+    cols, valid = frame(4096, seed=4)
+    mesh = make_data_mesh(4)
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256, mesh=mesh,
+                       delta_granule=8)
+    ref = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                       delta_granule=8)
+    for s in range(0, 4096, 1024):
+        b = Table.from_numpy({k: v[s:s + 1024] for k, v in cols.items()},
+                             valid[s:s + 1024])
+        eng.ingest(b)
+        ref.ingest(b)
+    assert eng._delta_cap > 8  # capacity grew past the forced overflow
+    assert stat_map(eng.base) == stat_map(ref.base)
+    for t in TREATMENTS:
+        assert float(eng.ate(t).ate) == float(ref.ate(t).ate)
+    print("SHARDED_OVERFLOW_OK")
+    """)
+    assert "SHARDED_OVERFLOW_OK" in out
