@@ -16,7 +16,13 @@ Emits, per batch size B:
 and, per device count D (subprocess with host-platform device forcing):
   online_ingest_dD          per-batch sharded ingest latency on a D-device
                             data mesh (delta built per shard + all-gather
-                            combine)
+                            combine; materialized views REPLICATED)
+  online_ingest_part_dD     same stream through the PARTITIONED engine
+                            (key-range partitioned views, all-to-all
+                            routed deltas, per-partition merges)
+  online_state_bytes_dD     per-device resident bytes of the materialized
+                            views, replicated vs partitioned — the
+                            partitioned engine must show ~1/D scaling
 
 REPRO_BENCH_SMOKE=1 shrinks N for CI smoke runs (full mode: N = 2^20).
 """
@@ -51,33 +57,41 @@ def _gen(n, seed):
 
 
 _SWEEP_SCRIPT = """
-import os, time
+import json, os, time
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
 import numpy as np
 from benchmarks.bench_online import SPECS, TREATMENTS, _gen
-from repro.core import OnlineEngine
+from repro.core import OnlineEngine, PartitionedOnlineEngine
 from repro.data.columnar import Table
 from repro.launch.mesh import make_data_mesh
 
 mesh = make_data_mesh({ndev}) if {ndev} > 1 else None
-eng = OnlineEngine.from_table(Table.from_numpy(_gen({n}, seed=0)),
-                              SPECS, TREATMENTS, "y", mesh=mesh)
-feed = [Table.from_numpy(_gen({bs}, seed=1 + i))
-        for i in range({warmup} + {iters})]
-for b in feed[:{warmup}]:
-    eng.ingest(b)
-ts = []
-for b in feed[{warmup}:]:
-    t0 = time.perf_counter()
-    eng.ingest(b)
-    ts.append(time.perf_counter() - t0)
-print("SWEEP_RESULT", float(np.median(ts)))
+out = {{}}
+for label, cls, kw in (
+        ("replicated", OnlineEngine, dict()),
+        ("partitioned", PartitionedOnlineEngine,
+         dict(n_parts=None if {ndev} > 1 else 1))):
+    eng = cls.from_table(Table.from_numpy(_gen({n}, seed=0)),
+                         SPECS, TREATMENTS, "y", mesh=mesh, **kw)
+    feed = [Table.from_numpy(_gen({bs}, seed=1 + i))
+            for i in range({warmup} + {iters})]
+    for b in feed[:{warmup}]:
+        eng.ingest(b)
+    ts = []
+    for b in feed[{warmup}:]:
+        t0 = time.perf_counter()
+        eng.ingest(b)
+        ts.append(time.perf_counter() - t0)
+    out[label] = dict(secs=float(np.median(ts)), **eng.state_bytes())
+print("SWEEP_RESULT", json.dumps(out))
 """
 
 
 def sharded_sweep(n: int, bs: int, device_counts, warmup=2, iters=5):
-    """Per-batch ingest latency per data-mesh size. Host-platform device
-    forcing needs a fresh process per count (XLA_FLAGS is read once)."""
+    """Per-batch ingest latency + per-device resident state per data-mesh
+    size, replicated vs partitioned views. Host-platform device forcing
+    needs a fresh process per count (XLA_FLAGS is read once)."""
+    import json
     for ndev in device_counts:
         code = textwrap.dedent(_SWEEP_SCRIPT.format(
             ndev=ndev, n=n, bs=bs, warmup=warmup, iters=iters))
@@ -85,14 +99,14 @@ def sharded_sweep(n: int, bs: int, device_counts, warmup=2, iters=5):
         try:
             proc = subprocess.run(
                 [sys.executable, "-c", code], capture_output=True,
-                text=True, timeout=900,
+                text=True, timeout=1200,
                 env={**os.environ, "PYTHONPATH": "src:."})
             marker = [ln for ln in proc.stdout.splitlines()
                       if ln.startswith("SWEEP_RESULT")]
             if proc.returncode != 0 or not marker:
                 raise RuntimeError(f"rc={proc.returncode}, "
                                    f"marker={'yes' if marker else 'no'}")
-            secs = float(marker[-1].split()[1])
+            res = json.loads(marker[-1].split(" ", 1)[1])
         except (subprocess.TimeoutExpired, RuntimeError,
                 ValueError, IndexError) as e:
             # warn-and-continue; no emit — a 0.0 datapoint would read as
@@ -102,7 +116,18 @@ def sharded_sweep(n: int, bs: int, device_counts, warmup=2, iters=5):
             if proc is not None:
                 print(proc.stderr[-2000:], file=sys.stderr)
             continue
-        emit(f"online_ingest_d{ndev}", secs, f"n={n} batch={bs}")
+        rep, part = res["replicated"], res["partitioned"]
+        emit(f"online_ingest_d{ndev}", rep["secs"], f"n={n} batch={bs}")
+        emit(f"online_ingest_part_d{ndev}", part["secs"],
+             f"n={n} batch={bs} vs_replicated="
+             f"{part['secs'] / max(rep['secs'], 1e-12):.2f}x")
+        # state scaling row: seconds slot carries no latency — emit 0-cost
+        # with the bytes in the derived column (JSON artifact keeps both)
+        emit(f"online_state_bytes_d{ndev}", 0.0,
+             f"replicated_per_device={rep['per_device']} "
+             f"partitioned_per_device={part['per_device']} "
+             f"partitioned_total={part['total']} "
+             f"shrink={rep['per_device'] / max(part['per_device'], 1):.2f}x")
 
 
 def main() -> None:

@@ -17,9 +17,12 @@ With ``--devices D`` the stream is row-sharded over a D-device data mesh:
 each device aggregates its shard of every batch and the tiny per-device
 delta stat tables are all-gathered and combined (off-TPU this forces D
 host-platform devices, so it demonstrates the mechanism, not a speedup).
+Add ``--partitioned`` to key-range partition the MATERIALIZED views
+themselves over the mesh (deltas routed to owner devices, per-device
+resident state ~1/D — printed at the end).
 
 Run:  PYTHONPATH=src python examples/online_flight_delay.py \
-          [--flights N] [--batches K] [--devices D]
+          [--flights N] [--batches K] [--devices D] [--partitioned]
 """
 import argparse
 import os
@@ -35,7 +38,8 @@ if _n_dev > 1:  # must precede any jax import; preserve existing flags
 
 import numpy as np
 
-from repro.core import CoarsenSpec, OnlineEngine, cem, estimate_ate
+from repro.core import (CoarsenSpec, OnlineEngine, PartitionedOnlineEngine,
+                        cem, estimate_ate)
 from repro.data import flightgen
 from repro.data.columnar import Table
 from repro.data.join import fk_join
@@ -68,6 +72,9 @@ def main():
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--devices", type=int, default=1,
                     help="shard ingest over a data mesh of this many devices")
+    ap.add_argument("--partitioned", action="store_true",
+                    help="key-range partition the materialized views over "
+                         "the mesh (state ~1/D per device)")
     args = ap.parse_args()
 
     print(f"== generating {args.flights:,} flights, joining weather ==")
@@ -85,8 +92,15 @@ def main():
     mesh = make_data_mesh(args.devices) if args.devices > 1 else None
     if mesh is not None:
         print(f"== sharding ingest over {args.devices}-device data mesh ==")
-    engine = OnlineEngine(specs, treatments, outcome="dep_delay",
-                          query_dims=("airport",), mesh=mesh)
+    if args.partitioned:
+        print("== key-range partitioned views: each device owns "
+              f"1/{max(args.devices, 1)} of every stat table ==")
+        engine = PartitionedOnlineEngine(specs, treatments,
+                                         outcome="dep_delay",
+                                         query_dims=("airport",), mesh=mesh)
+    else:
+        engine = OnlineEngine(specs, treatments, outcome="dep_delay",
+                              query_dims=("airport",), mesh=mesh)
 
     # seed with the first half, stream the rest
     seed_n = n // 2
@@ -144,6 +158,10 @@ def main():
         print(f"   {t:9s} offline {float(offline.ate):7.2f} in {dt:5.2f}s"
               f" | online {float(online.ate):7.2f} from materialized state"
               f" | truth {data.true_sate[t]:6.2f}")
+
+    sb = engine.state_bytes()
+    print(f"\n== materialized state: {sb['total']:,} B total, "
+          f"{sb['per_device']:,} B per device ==")
 
 
 if __name__ == "__main__":

@@ -25,7 +25,8 @@ from repro.core import cube
 from repro.core.pushdown import (PushdownResult, cem_join_pushdown,
                                  cem_overlap_filter)
 from repro.core.prepare import PreparedDatabase, prepare
-from repro.core.online import DeltaReport, OnlineEngine
+from repro.core.online import (DeltaReport, OnlineEngine,
+                               PartitionedOnlineEngine)
 
 __all__ = [
     "CoarsenSpec", "coarsen", "coarsen_columns", "KeyCodec", "groupby",
@@ -38,4 +39,5 @@ __all__ = [
     "knn_quadratic", "knn_sorted_1d", "nnmnr", "nnmwr", "nnmwr_att",
     "features", "mahalanobis_transform", "masked_covariance",
     "pairwise_sqdist", "ps_distance_features", "DeltaReport", "OnlineEngine",
+    "PartitionedOnlineEngine",
 ]

@@ -11,6 +11,17 @@ aggregates (counts/sums per treatment arm). Everything CEM/ATE need is
 decomposable (min/max/sum/count), so rollups are exact. The same stat-table
 shape is what `repro.core.distributed` all-gathers across chips — the cube
 and the distributed combine are literally one mechanism.
+
+A :class:`PartitionedCuboid` is the scale-out form of the same table: the
+key space is split into contiguous ranges of a 32-bit avalanche-hash space
+(:func:`partition_ids`) and each partition holds its own sorted stat table,
+stacked along a leading ``(n_parts, capacity)`` axis. On a device mesh that
+leading axis is sharded over the data axis, so every device owns 1/N of the
+materialized state instead of a full replica; deltas are ROUTED to the
+owning partition (all-to-all on key range) and merges/compaction/eviction
+run per-partition. Any group key lives in exactly one partition, so
+per-group stats are identical to the replicated layout — the partitioning
+changes where state lives, never what it contains.
 """
 from __future__ import annotations
 
@@ -308,6 +319,244 @@ def smallest_ancestor(targets: Mapping[str, Sequence[str]],
             raise ValueError(f"no materialized ancestor covers {tname}: {dims}")
         plan[tname] = best[1]
     return plan
+
+
+# ===================== key-range partitioned views ==========================
+def _hash32(hi: jnp.ndarray, lo: jnp.ndarray):
+    """32-bit avalanche hash of a packed (hi, lo) key — murmur3 finalizer.
+
+    Pure u32 arithmetic so numpy (host routing fallback) and jnp (jitted
+    routing) produce identical assignments bit for bit."""
+    h = lo ^ (hi * np.uint32(0x9E3779B1))
+    h = h ^ (h >> np.uint32(16))
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> np.uint32(13))
+    h = h * np.uint32(0xC2B2AE35)
+    return h ^ (h >> np.uint32(16))
+
+
+def partition_ids(hi: jnp.ndarray, lo: jnp.ndarray, n_parts: int):
+    """Owning partition of each key: partition p owns the p-th contiguous
+    range of the hash space, computed as ``(hash * n_parts) >> 32`` via an
+    exact u32 multiply-high (no float rounding, any ``n_parts`` < 2^16,
+    identical under numpy and jnp). Hashing first balances load even when
+    raw keys cluster; contiguous ranges keep the assignment a key-RANGE
+    partition of the hashed space."""
+    if n_parts == 1:
+        return (hi * np.uint32(0)).astype(jnp.int32)
+    if n_parts >= 1 << 16:
+        raise ValueError(f"n_parts {n_parts} >= 2^16")
+    h = _hash32(hi, lo)
+    a = h >> np.uint32(16)
+    b = h & np.uint32(0xFFFF)
+    n = np.uint32(n_parts)
+    t = a * n + ((b * n) >> np.uint32(16))
+    return (t >> np.uint32(16)).astype(jnp.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PartitionedCuboid:
+    """Key-range partitioned group-stat table: partition p (row p of every
+    array) holds the sorted stat table of the keys whose hash falls in its
+    range. Same stat schema as :class:`Cuboid`; the leading axis is what a
+    mesh shards over its data axis. Registered as a pytree so whole tables
+    can be device_put with a partition sharding in one call."""
+
+    codec: KeyCodec
+    key_hi: jnp.ndarray                # (P, C) u32
+    key_lo: jnp.ndarray                # (P, C) u32
+    stats: Dict[str, jnp.ndarray]      # (P, C) f32
+    group_valid: jnp.ndarray           # (P, C) bool
+    treatments: Tuple[str, ...]
+
+    def tree_flatten(self):
+        names = tuple(sorted(self.stats))
+        children = (self.key_hi, self.key_lo, self.group_valid,
+                    *(self.stats[n] for n in names))
+        return children, (self.codec, self.treatments, names)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codec, treatments, names = aux
+        key_hi, key_lo, group_valid, *stat_vals = children
+        return cls(codec=codec, key_hi=key_hi, key_lo=key_lo,
+                   stats=dict(zip(names, stat_vals)),
+                   group_valid=group_valid, treatments=treatments)
+
+    @property
+    def n_parts(self) -> int:
+        return int(self.key_hi.shape[0])
+
+    @property
+    def capacity(self) -> int:
+        return int(self.key_hi.shape[1])
+
+    @property
+    def dims(self) -> Tuple[str, ...]:
+        return self.codec.names
+
+    def n_groups(self) -> jnp.ndarray:
+        return jnp.sum(self.group_valid.astype(jnp.int32))
+
+    def part(self, p: int) -> Cuboid:
+        """Partition p as a plain (host-side) Cuboid — the unit the
+        per-partition merge/compaction paths operate on."""
+        return Cuboid(codec=self.codec, key_hi=self.key_hi[p],
+                      key_lo=self.key_lo[p],
+                      stats={k: v[p] for k, v in self.stats.items()},
+                      group_valid=self.group_valid[p],
+                      treatments=self.treatments)
+
+
+def _pad_cuboid(cuboid: Cuboid, capacity: int) -> Cuboid:
+    """Host-side pad to ``capacity`` slots (invalid-key marker, zero stats)
+    so per-partition tables of different sizes stack rectangularly."""
+    pad = capacity - cuboid.capacity
+    if pad < 0:
+        raise ValueError("cannot shrink in _pad_cuboid")
+    if pad == 0:
+        return cuboid
+    return Cuboid(
+        codec=cuboid.codec,
+        key_hi=jnp.pad(cuboid.key_hi, (0, pad),
+                       constant_values=np.uint32(INVALID_HI)),
+        key_lo=jnp.pad(cuboid.key_lo, (0, pad),
+                       constant_values=np.uint32(INVALID_LO)),
+        stats={k: jnp.pad(v, (0, pad)) for k, v in cuboid.stats.items()},
+        group_valid=jnp.pad(cuboid.group_valid, (0, pad)),
+        treatments=cuboid.treatments)
+
+
+def stack_partitions(parts: Sequence[Cuboid]) -> PartitionedCuboid:
+    """Stack per-partition tables (padded to the max capacity) into one
+    PartitionedCuboid — the common exit of every host-side per-partition
+    rebuild (slow-path merge, compaction, eviction)."""
+    cap = max(p.capacity for p in parts)
+    parts = [_pad_cuboid(p, cap) for p in parts]
+    return PartitionedCuboid(
+        codec=parts[0].codec,
+        key_hi=jnp.stack([p.key_hi for p in parts]),
+        key_lo=jnp.stack([p.key_lo for p in parts]),
+        stats={k: jnp.stack([p.stats[k] for p in parts])
+               for k in parts[0].stats},
+        group_valid=jnp.stack([p.group_valid for p in parts]),
+        treatments=parts[0].treatments)
+
+
+def partition_cuboid(cuboid: Cuboid, n_parts: int,
+                     granule: int = 1024) -> PartitionedCuboid:
+    """Host-side split of a replicated cuboid into its key-range partitions
+    (each partition keeps global sorted order, so per-partition tables stay
+    binary-searchable)."""
+    pid = np.asarray(partition_ids(np.asarray(cuboid.key_hi),
+                                   np.asarray(cuboid.key_lo), n_parts))
+    gv = np.asarray(cuboid.group_valid)
+    parts = []
+    for p in range(n_parts):
+        keep = gv & (pid == p)
+        parts.append(compact_cuboid(cuboid, granule=granule, keep_mask=keep))
+    return stack_partitions(parts)
+
+
+@jax.jit
+def _canonical_fn(key_hi, key_lo, stats):
+    """Flatten (P, C) partition tables and re-sort into ONE canonical
+    globally key-sorted table. Keys are distinct across partitions, so the
+    segment sums are an exact gather — no float reassociation."""
+    hi = key_hi.reshape(-1)
+    lo = key_lo.reshape(-1)
+    g = groupby.group_by_key(hi, lo)
+    sums = groupby.segment_sums(g, {k: v.reshape(-1)
+                                    for k, v in stats.items()})
+    return g.group_hi, g.group_lo, sums, g.group_valid
+
+
+def unpartition_cuboid(pcub: PartitionedCuboid) -> Cuboid:
+    """Reassemble the replicated (canonically sorted) view of a partitioned
+    cuboid — the deterministic cross-partition reduce queries run on. The
+    stat vectors are tiny relative to rows, so this is O(total groups)."""
+    hi, lo, sums, gv = _canonical_fn(pcub.key_hi, pcub.key_lo,
+                                     dict(pcub.stats))
+    return Cuboid(codec=pcub.codec, key_hi=hi, key_lo=lo, stats=sums,
+                  group_valid=gv, treatments=pcub.treatments)
+
+
+@functools.partial(jax.jit, static_argnames=("n_parts",))
+def route_delta(hi, lo, stats, gv, n_parts: int):
+    """Route a delta stat table to its owner partitions (single-device
+    path; the mesh path routes with an all-to-all in
+    ``repro.core.distributed.make_routed_delta_build``).
+
+    Returns (hi, lo, stats, group_valid) with a leading ``n_parts`` axis:
+    row p is partition p's share of the delta, re-grouped and key-sorted.
+    Exact: each key lands in exactly one partition, so per-group sums are
+    gathers, not re-summations."""
+    pid = partition_ids(hi, lo, n_parts)
+
+    def one(p):
+        own = gv & (pid == p)
+        phi = jnp.where(own, hi, INVALID_HI)
+        plo = jnp.where(own, lo, INVALID_LO)
+        g = groupby.group_by_key(phi, plo)
+        sums = groupby.segment_sums(
+            g, {k: jnp.where(own, v, 0.0) for k, v in stats.items()})
+        return g.group_hi, g.group_lo, sums, g.group_valid
+
+    return jax.vmap(one)(jnp.arange(n_parts))
+
+
+def scatter_merge_stats_parts(base_stats: Mapping[str, jnp.ndarray],
+                              pos: jnp.ndarray,
+                              delta_stats: Mapping[str, jnp.ndarray],
+                              use_pallas: bool = False
+                              ) -> Dict[str, jnp.ndarray]:
+    """Partition-local fast-path merge: scatter-add each partition's delta
+    rows into its own stat table ((P, C) tables, (P, B) positions). No
+    cross-partition traffic — the routing already delivered every delta row
+    to its owner."""
+    if use_pallas:
+        from repro.kernels.ops import scatter_merge_parts_op
+        names = sorted(base_stats)
+        table = jnp.stack([base_stats[k] for k in names], axis=2)
+        vals = jnp.stack([delta_stats[k] for k in names], axis=2)
+        merged = scatter_merge_parts_op(table, pos, vals)
+        return {k: merged[:, :, j] for j, k in enumerate(names)}
+    return jax.vmap(groupby.scatter_add_stats)(dict(base_stats), pos,
+                                               dict(delta_stats))
+
+
+def merge_delta_parts(pcub: PartitionedCuboid, d_hi, d_lo, d_stats, d_gv,
+                      granule: int = 1024
+                      ) -> Tuple[PartitionedCuboid, jnp.ndarray]:
+    """Slow-path (re-sort) merge of a routed delta into a partitioned
+    cuboid: each partition re-sort-merges independently (growth events are
+    rare and partition-local), then the tables re-stack at the max
+    capacity. Returns (merged, per-partition positions of delta groups)."""
+    parts = []
+    for p in range(pcub.n_parts):
+        delta_p = Cuboid(codec=pcub.codec, key_hi=d_hi[p], key_lo=d_lo[p],
+                         stats={k: v[p] for k, v in d_stats.items()},
+                         group_valid=d_gv[p], treatments=pcub.treatments)
+        merged, _, _ = merge_delta(pcub.part(p), delta_p, granule=granule,
+                                   fast=False)
+        parts.append(merged)
+    out = stack_partitions(parts)
+    pos, _ = jax.vmap(groupby.lookup_rows_in_table)(
+        d_hi, d_lo, out.key_hi, out.key_lo)
+    return out, pos
+
+
+def compact_partitioned(pcub: PartitionedCuboid, granule: int = 1024,
+                        keep_mask: np.ndarray = None) -> PartitionedCuboid:
+    """Host-side per-partition shrink (the partitioned eviction path);
+    ``keep_mask`` is (P, C) over partition slots."""
+    parts = []
+    for p in range(pcub.n_parts):
+        km = None if keep_mask is None else np.asarray(keep_mask)[p]
+        parts.append(compact_cuboid(pcub.part(p), granule=granule,
+                                    keep_mask=km))
+    return stack_partitions(parts)
 
 
 def filter_cuboid(cuboid: Cuboid, dim: str, bucket_values: Sequence[int]

@@ -61,19 +61,30 @@ def _combine_gathered(ghi, glo, gstats: Dict[str, jnp.ndarray],
 def make_distributed_cem(mesh, capacity: int = 8192,
                          axis: str = "data", key_bits: int = 64):
     """Returns a jitted function
-        f(hi, lo, t, y, valid) -> (ate, att, n_groups, n_matched_t,
-                                   n_matched_c, matched_valid, overflow)
+        f(hi, lo, t, y, valid) -> (ate, att, variance, n_groups,
+                                   n_matched_t, n_matched_c, matched_valid,
+                                   overflow)
     with rows sharded over `axis` and scalar outputs replicated.
+
+    The per-group state is the SAME decomposable stat schema the cube and
+    the online engine materialize (``cube.stat_names`` for one treatment
+    named "t": one/y/yy + t_t/yt_t/yyt_t, via ``cube.delta_stat_columns``)
+    and the estimate comes from the shared
+    :func:`repro.core.ate.estimate_ate_from_stats` — one definition of
+    group stats and of the estimator across the offline cube, the online
+    engine and the distributed path. The ``yy`` second moments make the
+    Neyman within-group variance a free extra output.
     """
+    from repro.core import cube as cube_mod
+    from repro.core.ate import estimate_ate_from_stats
+    from repro.core.cem import overlap_keep
+    from repro.core.keys import INVALID_HI, INVALID_LO
 
     single_word = key_bits <= 31
 
     def shard_body(hi, lo, t, y, valid):
-        w = valid.astype(jnp.float32)
-        tf = t.astype(jnp.float32) * w
-        cf = (1.0 - t.astype(jnp.float32)) * w
-        yf = y.astype(jnp.float32)
-        stats = {"n_t": tf, "n_c": cf, "y_t": tf * yf, "y_c": cf * yf}
+        stats = cube_mod.delta_stat_columns({"t": t, "y": y}, valid,
+                                            ("t",), "y")
         lhi, llo, lstats, loverflow = _local_stat_table(
             hi, lo, stats, capacity, single_word=single_word)
         # gather stat tables from every device (tiny vs rows)
@@ -83,33 +94,30 @@ def make_distributed_cem(mesh, capacity: int = 8192,
                   for k, v in lstats.items()}
         chi, clo, cstats, coverflow = _combine_gathered(
             ghi, glo, gstats, capacity, single_word=single_word)
-        keep = (~((chi == jnp.uint32(0xFFFFFFFF))
-                  & (clo == jnp.uint32(0xFFFFFFFF)))
-                & (cstats["n_t"] > 0) & (cstats["n_c"] > 0))
-        nt = jnp.where(keep, cstats["n_t"], 0.0)
-        nc = jnp.where(keep, cstats["n_c"], 0.0)
-        mean_t = jnp.where(nt > 0, cstats["y_t"] / jnp.maximum(nt, 1e-9), 0.)
-        mean_c = jnp.where(nc > 0, cstats["y_c"] / jnp.maximum(nc, 1e-9), 0.)
-        diff = mean_t - mean_c
-        n_b = nt + nc
-        n_tot = jnp.maximum(jnp.sum(n_b), 1e-9)
-        ate = jnp.sum(n_b * diff) / n_tot
-        att = jnp.sum(nt * diff) / jnp.maximum(jnp.sum(nt), 1e-9)
-        n_groups = jnp.sum(keep.astype(jnp.int32))
+        gvalid = ~((chi == INVALID_HI) & (clo == INVALID_LO))
+        nt = cstats["t_t"]
+        nc = cstats["one"] - nt
+        keep = overlap_keep(gvalid, nt, nc)
+        yt = cstats["yt_t"]
+        yc = cstats["y"] - yt
+        est = estimate_ate_from_stats(
+            keep, nt, nc, yt, yc,
+            sum_yy_t=cstats["yyt_t"], sum_yy_c=cstats["yy"] - cstats["yyt_t"])
         # row-level matched mask: look up each local row in the (sorted)
         # global table
         pos, found = groupby.lookup_rows_in_table(hi, lo, chi, clo)
         matched = valid & found & keep[pos]
         overflow = loverflow | coverflow
         any_overflow = jax.lax.pmax(overflow.astype(jnp.int32), axis) > 0
-        return (ate, att, n_groups, jnp.sum(nt), jnp.sum(nc), matched,
+        return (est.ate, est.att, est.variance, est.n_groups,
+                est.n_matched_treated, est.n_matched_control, matched,
                 any_overflow)
 
     from jax.experimental.shard_map import shard_map
     fn = shard_map(
         shard_body, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=(P(), P(), P(), P(), P(), P(axis), P()),
+        out_specs=(P(), P(), P(), P(), P(), P(), P(axis), P()),
         check_rep=False)
     return jax.jit(fn)
 
@@ -166,6 +174,102 @@ def make_sharded_delta_build(mesh, specs: Mapping, treatments: Sequence[str],
     fn = shard_map(shard_body, mesh=mesh,
                    in_specs=(P(axis), P(axis)),
                    out_specs=(P(), P(), P(), P(), P(), P()),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+# ===================== routed (partitioned) delta build =====================
+def make_routed_delta_build(mesh, specs: Mapping, treatments: Sequence[str],
+                            outcome: str, capacity: int,
+                            view_dims: Mapping[str, Sequence[str]],
+                            axis: str = "data"):
+    """Delta build for PARTITIONED materialized views: instead of
+    all-gathering every per-device stat table to every device (the
+    replicated path), each delta row is ROUTED to the single device that
+    owns its key-range partition via one all-to-all.
+
+    Per device: coarsen/pack/locally-aggregate its row shard once at base
+    granularity, roll the local table up to each view's dims (each view has
+    its own key space, so routing happens per view), bucket rows by owner
+    (``cube.partition_ids`` over the view key), exchange buckets with one
+    ``all_to_all`` over ``axis``, and re-combine what arrived — every
+    device then holds ONLY its partition's share of each view's delta.
+
+    ``view_dims`` maps view name -> dims; the FIRST entry is the base view
+    and must list every dim (the others roll up from it). Returns a jitted
+    ``f(columns, valid) -> (deltas, n_full, overflow)`` where
+    ``deltas[name]`` is ``(hi, lo, stats, group_valid)`` with leading
+    ``(n_dev, capacity)`` partition axes sharded over ``axis``, ``n_full``
+    is the total distinct base-granularity delta groups, and ``overflow``
+    means some local or routed table was truncated (caller must fall back
+    to the exact host build)."""
+    from repro.core import cube as cube_mod
+    from repro.core.cem import make_codec
+    from repro.core.coarsen import coarsen_columns
+    from repro.core.keys import INVALID_HI, INVALID_LO
+
+    codec = make_codec(specs)
+    specs = dict(specs)
+    treatments = tuple(treatments)
+    view_items = tuple((name, tuple(dims))
+                       for name, dims in view_dims.items())
+    n_dev = int(mesh.shape[axis])
+    base_name = view_items[0][0]
+    if set(view_items[0][1]) != set(codec.names):
+        raise ValueError("first view_dims entry must cover every dim")
+
+    def shard_body(columns, valid):
+        buckets = coarsen_columns(columns, specs)
+        hi, lo = codec.pack(buckets, valid)
+        cols = cube_mod.delta_stat_columns(columns, valid, treatments,
+                                           outcome)
+        lhi, llo, lstats, overflow = _local_stat_table(hi, lo, cols,
+                                                       capacity)
+        lgv = ~((lhi == INVALID_HI) & (llo == INVALID_LO))
+        deltas = {}
+        n_full = jnp.int32(0)
+        for name, dims in view_items:
+            if name == base_name:
+                vhi, vlo, vstats, vgv = lhi, llo, lstats, lgv
+            else:
+                roll = cube_mod._rollup_fn(codec, dims)
+                vhi, vlo, vstats, vgv = roll(lhi, llo, lgv, lstats)
+            # bucket by owner, exchange buckets, re-combine what arrived
+            pid = cube_mod.partition_ids(vhi, vlo, n_dev)
+            own = vgv[None, :] & (pid[None, :]
+                                  == jnp.arange(n_dev)[:, None])
+            bhi = jnp.where(own, vhi[None, :], INVALID_HI)
+            blo = jnp.where(own, vlo[None, :], INVALID_LO)
+            bstats = {k: jnp.where(own, v[None, :], 0.0)
+                      for k, v in vstats.items()}
+            rhi = jax.lax.all_to_all(bhi, axis, 0, 0, tiled=True)
+            rlo = jax.lax.all_to_all(blo, axis, 0, 0, tiled=True)
+            rstats = {k: jax.lax.all_to_all(v, axis, 0, 0, tiled=True)
+                      for k, v in bstats.items()}
+            g = groupby.group_by_key(rhi.reshape(-1), rlo.reshape(-1))
+            sums = groupby.segment_sums(
+                g, {k: v.reshape(-1) for k, v in rstats.items()})
+            overflow = overflow | (g.n_groups > capacity)
+            if name == base_name:
+                n_full = jax.lax.psum(g.n_groups, axis)
+            deltas[name] = (g.group_hi[:capacity][None],
+                            g.group_lo[:capacity][None],
+                            {k: v[:capacity][None] for k, v in sums.items()},
+                            g.group_valid[:capacity][None])
+        any_overflow = jax.lax.pmax(overflow.astype(jnp.int32), axis) > 0
+        return deltas, n_full, any_overflow
+
+    from jax.experimental.shard_map import shard_map
+    part = P(axis, None)
+    out_deltas = {name: (part, part,
+                         {k: part for k in cube_mod.stat_names(treatments)},
+                         part)
+                  for name, _ in view_items}
+    fn = shard_map(shard_body, mesh=mesh,
+                   in_specs=({k: P(axis) for k in
+                              set(list(specs) + list(treatments)
+                                  + [outcome])}, P(axis)),
+                   out_specs=(out_deltas, P(), P()),
                    check_rep=False)
     return jax.jit(fn)
 

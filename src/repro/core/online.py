@@ -19,7 +19,12 @@ under streaming INSERTs with work proportional to the DELTA, not the data:
      combined (:func:`repro.core.distributed.make_sharded_delta_build`),
      and the replicated merged delta folds into every view exactly as on
      one chip — the offline-equivalence guarantees carry over verbatim on
-     1..N devices.
+     1..N devices. :class:`PartitionedOnlineEngine` goes further: the
+     MATERIALIZED views themselves are key-range partitioned over the mesh
+     (each device owns 1/N of every stat table), deltas are ROUTED to
+     their owner device (all-to-all on key range instead of
+     all-gather-everything), and merges/eviction run per partition — total
+     state scales with the mesh instead of being capped by one chip.
   3. INCREMENTAL CEM OVERLAP — when a merge keeps the stat-table layout
      (fast path), the overlap filter ``max(T) != min(T)`` is re-evaluated
      only at the group ids the delta touched
@@ -70,6 +75,14 @@ from repro.data.columnar import GrowableTable, Table, _round_capacity
 
 BASE_VIEW = "__base__"
 
+# Canonical capacity granule of the query path: estimates are computed over
+# a key-sorted stat vector compacted to a capacity derived from CONTENT
+# (n_groups rounded up to this), never from an engine's growth history or
+# partition count — so float reductions see identical vectors and the same
+# state yields bit-identical estimates from replicated and partitioned
+# engines on any device count.
+_QUERY_GRANULE = 1024
+
 SubPop = Optional[Mapping[str, Sequence[int]]]
 
 
@@ -99,6 +112,55 @@ class _View:
     cuboid: cube_mod.Cuboid
     keep: jnp.ndarray
 
+    @property
+    def table(self):
+        """Uniform accessor over replicated/partitioned view state."""
+        return self.cuboid
+
+
+@dataclasses.dataclass
+class _PartView:
+    """One key-range partitioned cuboid + per-partition overlap mask."""
+
+    treatment: str
+    dims: Tuple[str, ...]
+    pcub: cube_mod.PartitionedCuboid
+    keep: jnp.ndarray            # (P, C)
+
+    @property
+    def table(self):
+        return self.pcub
+
+
+def _estimate_view(cub: cube_mod.Cuboid, keep: jnp.ndarray, treatment: str,
+                   subpopulation: SubPop) -> ATEEstimate:
+    """Causal estimate over one materialized view's stat table.
+
+    The estimate is computed over the CANONICAL form of the view — matched
+    groups in key-sorted order, compacted to a content-derived capacity
+    (:data:`_QUERY_GRANULE`) — so the float reductions are deterministic
+    functions of the maintained state alone: replicated and partitioned
+    engines (any partition count, any capacity-growth history) return
+    bit-identical ATE, ATT and Neyman variance for identical group stats.
+    """
+    if subpopulation:
+        for dim, allowed in subpopulation.items():
+            cub = cube_mod.filter_cuboid(cub, dim, allowed)
+        # population restriction leaves per-group stats (hence overlap)
+        # of surviving groups unchanged
+        keep = keep & cub.group_valid
+    cub = cube_mod.compact_cuboid(cub, granule=_QUERY_GRANULE,
+                                  keep_mask=np.asarray(keep))
+    keep = cub.group_valid
+    nt = cub.stats[f"t_{treatment}"]
+    nc = cub.stats["one"] - nt
+    yt = cub.stats[f"yt_{treatment}"]
+    yc = cub.stats["y"] - yt
+    yyt = cub.stats[f"yyt_{treatment}"]
+    yyc = cub.stats["yy"] - yyt
+    return estimate_ate_from_stats(keep, nt, nc, yt, yc,
+                                   sum_yy_t=yyt, sum_yy_c=yyc)
+
 
 def _stamp_touch(touch: jnp.ndarray, pos: jnp.ndarray, dvalid: jnp.ndarray,
                  counter: int) -> jnp.ndarray:
@@ -117,6 +179,31 @@ def _remap_touch(old_cub: cube_mod.Cuboid, new_cub: cube_mod.Cuboid,
     upd = jnp.where(old_cub.group_valid & found, pos, new_cub.capacity)
     return jnp.zeros((new_cub.capacity,), touch.dtype).at[upd].set(
         touch, mode="drop")
+
+
+def _stamp_touch_parts(touch: jnp.ndarray, pos: jnp.ndarray,
+                       dvalid: jnp.ndarray, counter: int) -> jnp.ndarray:
+    """Per-partition :func:`_stamp_touch` over (P, C) touch tables: routed
+    delta positions index their own partition's table only."""
+    return jax.vmap(_stamp_touch, in_axes=(0, 0, 0, None))(
+        touch, pos, dvalid, counter)
+
+
+def _remap_touch_parts(old: cube_mod.PartitionedCuboid,
+                       new: cube_mod.PartitionedCuboid,
+                       touch: jnp.ndarray) -> jnp.ndarray:
+    """Carry (P, C) last-touch stamps across a per-partition re-sort merge
+    or compaction. Keys never change partition (the owner is a pure
+    function of the key), so the remap is partition-local."""
+
+    def one(ohi, olo, ogv, nhi, nlo, t):
+        pos, found = groupby.lookup_rows_in_table(ohi, olo, nhi, nlo)
+        upd = jnp.where(ogv & found, pos, nhi.shape[0])
+        return jnp.zeros((nhi.shape[0],), t.dtype).at[upd].set(
+            t, mode="drop")
+
+    return jax.vmap(one)(old.key_hi, old.key_lo, old.group_valid,
+                         new.key_hi, new.key_lo, touch)
 
 
 @functools.partial(
@@ -162,6 +249,56 @@ def _plan_ingest(d_hi, d_lo, d_stats, d_gv, base_hi, base_lo, base_stats,
     return dict(d_stats=d_stats, pos_b=pos_b, ok_b=ok_b, merged_b=merged_b,
                 neg_min=neg_min, views=views, buckets=buckets,
                 n_delta=jnp.sum(d_gv.astype(jnp.int32)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("codec", "tnames", "retract", "use_pallas"))
+def _plan_ingest_parts(deltas, base_hi, base_lo, base_stats, view_hi,
+                       view_lo, view_stats, view_gv, view_keep, *,
+                       codec, tnames, retract, use_pallas):
+    """Partitioned analogue of :func:`_plan_ingest`: every per-view,
+    per-partition decision of one ingest in ONE device program.
+
+    ``deltas`` holds the ROUTED delta stat tables — (P, Cd) per view, each
+    partition's rows already delivered to its owner — so lookups, scatter
+    merges and overlap re-evaluation are partition-local vmaps with no
+    cross-partition traffic; on a mesh the leading axis is sharded and the
+    whole plan runs 1/N-per-device. The engine fetches one fused
+    ``device_get`` of the verdict scalars, exactly like the replicated
+    fused path."""
+    out_pos, out_ok, out_merged, out_keep = {}, {}, {}, {}
+    neg_min = jnp.float32(0.0)
+    n_delta = jnp.int32(0)
+    buckets = {}
+    for name in (BASE_VIEW,) + tnames:
+        d_hi, d_lo, d_stats, d_gv = deltas[name]
+        if retract:
+            d_stats = {k: -v for k, v in d_stats.items()}
+        if name == BASE_VIEW:
+            t_hi, t_lo, t_stats = base_hi, base_lo, base_stats
+        else:
+            t_hi, t_lo, t_stats = view_hi[name], view_lo[name], \
+                view_stats[name]
+        pos, found = jax.vmap(groupby.lookup_rows_in_table)(
+            d_hi, d_lo, t_hi, t_lo)
+        out_ok[name] = jnp.all(found | ~d_gv)
+        merged = cube_mod.scatter_merge_stats_parts(
+            t_stats, pos, d_stats, use_pallas=use_pallas)
+        out_pos[name], out_merged[name] = pos, merged
+        if name == BASE_VIEW:
+            count_cols = [merged["one"]] + [merged[f"t_{t}"]
+                                            for t in tnames]
+            neg_min = jnp.min(jnp.stack(count_cols))
+            n_delta = jnp.sum(d_gv.astype(jnp.int32))
+            buckets = {d: codec.extract(d_hi, d_lo, d)
+                       for d in codec.names}
+        else:
+            nt = merged[f"t_{name}"]
+            nc = merged["one"] - nt
+            out_keep[name] = jax.vmap(update_overlap)(
+                view_keep[name], view_gv[name], nt, nc, pos)
+    return dict(pos=out_pos, ok=out_ok, merged=out_merged, keep=out_keep,
+                neg_min=neg_min, buckets=buckets, n_delta=n_delta)
 
 
 class OnlineEngine:
@@ -220,21 +357,7 @@ class OnlineEngine:
         self._sharded_builds: Dict[int, Callable] = {}
         tnames = sorted(self.treatments)
         self._row_cols = (*base_dims, *tnames, outcome)
-        self.base = cube_mod.empty_cuboid(self.codec, tnames,
-                                          capacity=granule)
-        self.views: Dict[str, _View] = {}
-        for t in tnames:
-            dims = tuple(sorted(set(self.treatments[t])
-                                | set(self.query_dims)))
-            vcodec = make_codec({d: self.specs[d] for d in dims})
-            self.views[t] = _View(
-                treatment=t, dims=dims,
-                cuboid=cube_mod.empty_cuboid(vcodec, tnames,
-                                             capacity=granule),
-                keep=jnp.zeros((granule,), bool))
-        self._touch: Dict[str, jnp.ndarray] = {
-            name: jnp.zeros((granule,), jnp.int32)
-            for name in (BASE_VIEW, *tnames)}
+        self._init_state()
         self._ingest_count = 0
         self.rows: Optional[GrowableTable] = (
             None if not keep_rows else GrowableTable.from_table(
@@ -250,6 +373,32 @@ class OnlineEngine:
         self.cache_hits = 0
         self.cache_misses = 0
         self.models: Dict[str, LogisticModel] = {}
+
+    def _view_schema(self):
+        """(treatment, dims, codec) of every materialized view — shared by
+        the replicated and partitioned state layouts."""
+        for t in sorted(self.treatments):
+            dims = tuple(sorted(set(self.treatments[t])
+                                | set(self.query_dims)))
+            yield t, dims, make_codec({d: self.specs[d] for d in dims})
+
+    def _init_state(self) -> None:
+        """Allocate the empty materialized views (replicated layout);
+        :class:`PartitionedOnlineEngine` overrides this with per-partition
+        tables, so no replicated state is ever allocated there."""
+        tnames = tuple(sorted(self.treatments))
+        self.base = cube_mod.empty_cuboid(self.codec, tnames,
+                                          capacity=self.granule)
+        self.views: Dict[str, _View] = {}
+        for t, dims, vcodec in self._view_schema():
+            self.views[t] = _View(
+                treatment=t, dims=dims,
+                cuboid=cube_mod.empty_cuboid(vcodec, tnames,
+                                             capacity=self.granule),
+                keep=jnp.zeros((self.granule,), bool))
+        self._touch: Dict[str, jnp.ndarray] = {
+            name: jnp.zeros((self.granule,), jnp.int32)
+            for name in (BASE_VIEW, *tnames)}
 
     @classmethod
     def from_table(cls, table: Table, specs: Mapping[str, CoarsenSpec],
@@ -308,9 +457,7 @@ class OnlineEngine:
         detected (new keys, or any post-merge count below zero) and raises
         ``ValueError`` BEFORE any state is committed.
         """
-        if retract and self.rows is not None:
-            raise ValueError("retract=True is not supported with "
-                             "keep_rows=True (the row log is append-only)")
+        self._guard_retract_rows(retract)
         hi, lo, stats, gv, n_full, overflow = self._build_delta(batch)
         if self.fused_host_sync:
             return self._ingest_fused(batch, hi, lo, stats, gv, n_full,
@@ -331,6 +478,11 @@ class OnlineEngine:
                 batch.valid, retract=retract)
         self.n_rows_ingested += -batch.nrows if retract else batch.nrows
         self._ingest_count += 1
+
+    def _guard_retract_rows(self, retract: bool) -> None:
+        if retract and self.rows is not None:
+            raise ValueError("retract=True is not supported with "
+                             "keep_rows=True (the row log is append-only)")
 
     def _raise_bad_retraction(self) -> None:
         raise ValueError(
@@ -566,41 +718,37 @@ class OnlineEngine:
         return evicted
 
     # ------------------------------------------------------------ queries
+    def _view_state(self, treatment: str
+                    ) -> Tuple[cube_mod.Cuboid, jnp.ndarray]:
+        """(stat table, overlap mask) a query runs on — the replicated
+        view directly; the partitioned engine overrides this with the
+        canonical cross-partition reassembly."""
+        view = self.views[treatment]
+        return view.cuboid, view.keep
+
     def ate(self, treatment: str, subpopulation: SubPop = None
             ) -> ATEEstimate:
         """Online causal query from materialized state: O(view capacity),
         independent of rows ingested. Repeated queries hit the cache.
         Includes the Neyman within-group variance, carried by the cuboid's
-        second-moment (``yy``) stat columns."""
+        second-moment (``yy``) stat columns. Estimates are computed over
+        the canonical (key-sorted, content-compacted) form of the view, so
+        identical maintained stats give bit-identical results regardless
+        of engine layout (see :func:`_estimate_view`)."""
         key = (treatment, _freeze_subpop(subpopulation))
         if key in self._cache:
             self.cache_hits += 1
             return self._cache[key]
         self.cache_misses += 1
-        view = self.views[treatment]
-        cub, keep = view.cuboid, view.keep
-        if subpopulation:
-            for dim, allowed in subpopulation.items():
-                cub = cube_mod.filter_cuboid(cub, dim, allowed)
-            # population restriction leaves per-group stats (hence overlap)
-            # of surviving groups unchanged
-            keep = keep & cub.group_valid
-        nt = cub.stats[f"t_{treatment}"]
-        nc = cub.stats["one"] - nt
-        yt = cub.stats[f"yt_{treatment}"]
-        yc = cub.stats["y"] - yt
-        yyt = cub.stats[f"yyt_{treatment}"]
-        yyc = cub.stats["yy"] - yyt
-        est = estimate_ate_from_stats(keep, nt, nc, yt, yc,
-                                      sum_yy_t=yyt, sum_yy_c=yyc)
+        cub, keep = self._view_state(treatment)
+        est = _estimate_view(cub, keep, treatment, subpopulation)
         self._cache[key] = est
         return est
 
     def cem_groups(self, treatment: str) -> CEMGroups:
         """Current CEM group stats with the incrementally maintained
         overlap mask (same shape the offline path produces)."""
-        view = self.views[treatment]
-        cub = view.cuboid
+        cub, keep = self._view_state(treatment)
         nt = cub.stats[f"t_{treatment}"]
         nc = cub.stats["one"] - nt
         yt = cub.stats[f"yt_{treatment}"]
@@ -610,7 +758,7 @@ class OnlineEngine:
             seg_ids=jnp.zeros((cub.capacity,), jnp.int32),
             group_hi=cub.key_hi, group_lo=cub.key_lo,
             group_valid=cub.group_valid, n_groups=cub.n_groups())
-        return CEMGroups(grouping=dummy, keep=view.keep, n_treated=nt,
+        return CEMGroups(grouping=dummy, keep=keep, n_treated=nt,
                          n_control=nc, sum_y_t=yt,
                          sum_y_c=cub.stats["y"] - yt)
 
@@ -618,12 +766,12 @@ class OnlineEngine:
         """Row-level matched mask for ``table`` against current state
         (binary-search lookup into the broadcast stat table, exactly like
         the distributed engine's row mask)."""
-        view = self.views[treatment]
-        vspecs = {d: self.specs[d] for d in view.dims}
-        _, hi, lo = pack_keys(table, vspecs, codec=view.cuboid.codec)
+        cub, keep = self._view_state(treatment)
+        vspecs = {d: self.specs[d] for d in self.views[treatment].dims}
+        _, hi, lo = pack_keys(table, vspecs, codec=cub.codec)
         pos, found = groupby.lookup_rows_in_table(
-            hi, lo, view.cuboid.key_hi, view.cuboid.key_lo)
-        return table.valid & found & view.keep[pos]
+            hi, lo, cub.key_hi, cub.key_lo)
+        return table.valid & found & keep[pos]
 
     # --------------------------------------------------------- propensity
     def refresh_propensity(self, treatment: str, features: Sequence[str],
@@ -668,6 +816,321 @@ class OnlineEngine:
         for t, view in self.views.items():
             out[t] = {"capacity": view.cuboid.capacity,
                       "n_groups": int(view.cuboid.n_groups()),
+                      "n_matched_groups": int(jnp.sum(
+                          view.keep.astype(jnp.int32)))}
+        return out
+
+    def _state_arrays(self) -> List[jnp.ndarray]:
+        """Every array of the materialized views — `self.base` and
+        `view.table` have the same field names in both the replicated and
+        the partitioned layouts, so one walk serves both engines."""
+        arrs = [self.base.key_hi, self.base.key_lo, self.base.group_valid,
+                *self.base.stats.values()]
+        for view in self.views.values():
+            tab = view.table
+            arrs += [tab.key_hi, tab.key_lo, tab.group_valid,
+                     *tab.stats.values(), view.keep]
+        arrs += list(self._touch.values())
+        return arrs
+
+    @staticmethod
+    def _per_device_bytes(a) -> int:
+        shards = getattr(a, "addressable_shards", None)
+        if shards:
+            return max(int(s.data.nbytes) for s in shards)
+        return int(a.nbytes)
+
+    def state_bytes(self) -> Dict[str, int]:
+        """Resident bytes of the materialized views (keys + stats + masks
+        + touch stamps): ``total`` across the job and ``per_device`` (the
+        largest per-device share — equal to ``total`` when views are
+        replicated, ~``total / n_parts`` when partitioned over a mesh)."""
+        arrs = self._state_arrays()
+        return {"total": sum(int(a.nbytes) for a in arrs),
+                "per_device": sum(self._per_device_bytes(a) for a in arrs)}
+
+
+class PartitionedOnlineEngine(OnlineEngine):
+    """Online engine whose MATERIALIZED views are key-range partitioned.
+
+    The replicated :class:`OnlineEngine` shards the per-batch delta BUILD
+    over a mesh but keeps every merged stat table fully replicated, so
+    total materialized state is capped by one chip's memory. Here the
+    tables themselves are split into contiguous ranges of a hashed key
+    space (:func:`repro.core.cube.partition_ids`): every view is a
+    ``(n_parts, capacity)`` :class:`repro.core.cube.PartitionedCuboid`
+    whose leading axis is sharded over the mesh's data axis, deltas are
+    ROUTED to owner devices (one all-to-all on key range,
+    :func:`repro.core.distributed.make_routed_delta_build`, instead of
+    all-gather-everything), and merges, overlap maintenance, eviction and
+    compaction run per partition. Per-device resident state is ~1/N of the
+    total (``state_bytes()``).
+
+    Queries reassemble the tiny per-partition stat vectors into ONE
+    canonically sorted table (:func:`repro.core.cube.unpartition_cuboid`)
+    — partition-local masking/overlap plus a deterministic cross-partition
+    reduce — so ``ate()``, ``cem_groups()`` and ``matched_rows()`` are
+    bit-identical to the replicated engine's on any device count.
+
+    n_parts: number of key-range partitions. With a mesh attached it must
+    equal the data-axis size (one partition per device); without one, any
+    ``n_parts >= 1`` runs the same layout on a single device (the
+    differential test harness exercises this). All other arguments match
+    :class:`OnlineEngine`; ``fused_host_sync=False`` is not supported (the
+    partitioned path is fused-only, with the exact host fallback on delta
+    overflow).
+    """
+
+    def __init__(self, specs: Mapping[str, CoarsenSpec],
+                 treatments: Mapping[str, Sequence[str]], outcome: str,
+                 n_parts: int = None, **kwargs):
+        # consumed by _init_state, which super().__init__ invokes once the
+        # mesh attributes exist — so only partitioned tables are ever
+        # allocated, never a throwaway replicated layout
+        self._requested_n_parts = n_parts
+        super().__init__(specs, treatments, outcome, **kwargs)
+        if not self.fused_host_sync:
+            raise ValueError("PartitionedOnlineEngine is fused-only")
+
+    def _init_state(self) -> None:
+        n_parts = self._requested_n_parts
+        if self.mesh is not None and self._mesh_ndev > 1:
+            if n_parts is None:
+                n_parts = self._mesh_ndev
+            if n_parts != self._mesh_ndev:
+                raise ValueError(
+                    f"n_parts={n_parts} must equal the mesh data-axis size "
+                    f"{self._mesh_ndev} (one partition per device)")
+        self.n_parts = 1 if n_parts is None else int(n_parts)
+        if self.n_parts < 1:
+            raise ValueError(f"n_parts must be >= 1, got {self.n_parts}")
+        # per-partition capacity granule: hashing balances groups across
+        # partitions, so each holds ~1/n_parts of the keys — capacities
+        # (hence per-device bytes) shrink with the partition count
+        self._part_granule = max(64, -(-self.granule // self.n_parts))
+        tnames = tuple(sorted(self.treatments))
+        self.base = self._place(cube_mod.stack_partitions(
+            [cube_mod.empty_cuboid(self.codec, tnames,
+                                   capacity=self._part_granule)
+             for _ in range(self.n_parts)]))
+        self.views: Dict[str, _PartView] = {}
+        for t, dims, vcodec in self._view_schema():
+            self.views[t] = _PartView(
+                treatment=t, dims=dims,
+                pcub=self._place(cube_mod.stack_partitions(
+                    [cube_mod.empty_cuboid(vcodec, tnames,
+                                           capacity=self._part_granule)
+                     for _ in range(self.n_parts)])),
+                keep=self._place(
+                    jnp.zeros((self.n_parts, self._part_granule), bool)))
+        self._touch = {name: self._place(
+            jnp.zeros((self.n_parts, self._part_granule), jnp.int32))
+            for name in (BASE_VIEW, *tnames)}
+        self._routed_builds: Dict[int, Callable] = {}
+        self._assembled: Dict[str, Tuple[cube_mod.Cuboid, jnp.ndarray]] = {}
+
+    # ----------------------------------------------------- state placement
+    def _place(self, tree):
+        """Shard (P, ...) state over the mesh's data axis (one partition
+        per device); identity on a single device."""
+        if self.mesh is None or self._mesh_ndev == 1:
+            return tree
+        from repro.launch.mesh import shard_partitions
+        return shard_partitions(self.mesh, tree, axis=self.mesh_axis)
+
+    # ------------------------------------------------------- delta build
+    def _get_routed_build(self, capacity: int) -> Callable:
+        if capacity not in self._routed_builds:
+            from repro.core.distributed import make_routed_delta_build
+            view_dims = {BASE_VIEW: tuple(self.codec.names)}
+            for t in sorted(self.treatments):
+                view_dims[t] = self.views[t].dims
+            self._routed_builds[capacity] = make_routed_delta_build(
+                self.mesh, self.specs, sorted(self.treatments),
+                self.outcome, capacity, view_dims, axis=self.mesh_axis)
+        return self._routed_builds[capacity]
+
+    def _route_from_base(self, hi, lo, stats, gv):
+        """Single-device routing: regroup a base-granularity delta stat
+        table into per-partition tables for every view (each view routes
+        by ITS OWN key hash — rollup changes the key, hence the owner)."""
+        deltas = {BASE_VIEW: cube_mod.route_delta(hi, lo, stats, gv,
+                                                  self.n_parts)}
+        for t in sorted(self.treatments):
+            roll = cube_mod._rollup_fn(self.codec, self.views[t].dims)
+            vhi, vlo, vstats, vgv = roll(hi, lo, gv, stats)
+            deltas[t] = cube_mod.route_delta(vhi, vlo, vstats, vgv,
+                                             self.n_parts)
+        return deltas
+
+    def _build_delta_parts(self, batch: Table):
+        """Routed delta stat tables of one batch: (deltas, n_full,
+        overflow) where deltas[name] is (hi, lo, stats, gv) with leading
+        (n_parts, delta_capacity) axes."""
+        cols = {c: batch.columns[c] for c in self._row_cols}
+        valid = batch.valid
+        if self.mesh is not None and self._mesh_ndev > 1:
+            pad = (-batch.nrows) % self._mesh_ndev
+            if pad:
+                cols = {k: jnp.pad(v, (0, pad)) for k, v in cols.items()}
+                valid = jnp.pad(valid, (0, pad))
+            fn = self._get_routed_build(self._delta_cap)
+            return fn(cols, valid)
+        fn = cube_mod._build_fn(self.codec,
+                                tuple(sorted(self.specs.items())),
+                                tuple(sorted(self.treatments)), self.outcome)
+        hi, lo, stats, gv = fn(cols, valid)
+        n_full = jnp.sum(gv.astype(jnp.int32))
+        dcap = self._delta_cap
+        deltas = self._route_from_base(hi[:dcap], lo[:dcap],
+                                       {k: v[:dcap] for k, v in
+                                        stats.items()}, gv[:dcap])
+        return deltas, n_full, n_full > dcap
+
+    # ------------------------------------------------------------- ingest
+    def ingest(self, batch: Table, retract: bool = False) -> DeltaReport:
+        """Fold one streamed batch into every partitioned view: route the
+        delta to owner partitions, plan every merge on device, fetch ONE
+        fused verdict, commit per partition. Semantics (including the
+        retraction guard and the delta-overflow exact fallback) match
+        :meth:`OnlineEngine.ingest` bit for bit."""
+        self._guard_retract_rows(retract)
+        deltas, n_full, overflow = self._build_delta_parts(batch)
+        return self._ingest_parts(batch, deltas, n_full, overflow, retract)
+
+    def _ingest_parts(self, batch: Table, deltas, n_full, overflow,
+                      retract: bool) -> DeltaReport:
+        tnames = tuple(sorted(self.treatments))
+        plan = _plan_ingest_parts(
+            deltas, self.base.key_hi, self.base.key_lo, self.base.stats,
+            {t: self.views[t].pcub.key_hi for t in tnames},
+            {t: self.views[t].pcub.key_lo for t in tnames},
+            {t: self.views[t].pcub.stats for t in tnames},
+            {t: self.views[t].pcub.group_valid for t in tnames},
+            {t: self.views[t].keep for t in tnames},
+            codec=self.codec, tnames=tnames, retract=retract,
+            use_pallas=self.use_pallas)
+        # THE one host sync of a fast-path ingest
+        fetched = jax.device_get(dict(
+            overflow=overflow, ok=plan["ok"], neg_min=plan["neg_min"],
+            n_delta=plan["n_delta"], gv=deltas[BASE_VIEW][3],
+            buckets=plan["buckets"]))
+        if fetched["overflow"]:
+            # a routed table was truncated: rebuild the delta exactly on
+            # the host, grow the capacity geometrically, and re-route
+            self._delta_cap = _round_capacity(
+                max(int(n_full), 2 * self._delta_cap), self.delta_granule)
+            d = cube_mod.delta_cuboid(batch, self.specs, tnames,
+                                      self.outcome,
+                                      granule=self._delta_cap)
+            deltas = self._route_from_base(d.key_hi, d.key_lo,
+                                           dict(d.stats), d.group_valid)
+            return self._ingest_parts(batch, deltas, n_full,
+                                      jnp.asarray(False), retract)
+        all_fast = all(bool(v) for v in fetched["ok"].values())
+        if retract and (not all_fast or fetched["neg_min"] < -0.5):
+            self._raise_bad_retraction()
+        counter = self._ingest_count + 1
+        fast: Dict[str, bool] = {}
+        for name in (BASE_VIEW, *tnames):
+            ok = bool(fetched["ok"][name])
+            d_hi, d_lo, d_stats, d_gv = deltas[name]
+            pcub = (self.base if name == BASE_VIEW
+                    else self.views[name].pcub)
+            if ok:
+                merged = dataclasses.replace(pcub,
+                                             stats=plan["merged"][name])
+                self._touch[name] = _stamp_touch_parts(
+                    self._touch[name], plan["pos"][name], d_gv, counter)
+            else:
+                merged, pos = cube_mod.merge_delta_parts(
+                    pcub, d_hi, d_lo, d_stats, d_gv,
+                    granule=self._part_granule)
+                merged = self._place(merged)
+                self._touch[name] = _stamp_touch_parts(
+                    self._place(_remap_touch_parts(pcub, merged,
+                                                   self._touch[name])),
+                    pos, d_gv, counter)
+            if name == BASE_VIEW:
+                self.base = merged
+            else:
+                view = self.views[name]
+                if ok:
+                    view.keep = plan["keep"][name]
+                else:
+                    nt = merged.stats[f"t_{name}"]
+                    view.keep = overlap_keep(merged.group_valid, nt,
+                                             merged.stats["one"] - nt)
+                view.pcub = merged
+            fast[name] = ok
+        self._assembled.clear()
+        self._commit_rows(batch, retract)
+        invalidated = self._invalidate(
+            fetched["gv"].reshape(-1),
+            lambda d: fetched["buckets"][d].reshape(-1))
+        return DeltaReport(n_rows=batch.nrows,
+                           n_delta_groups=int(fetched["n_delta"]),
+                           fast_path=fast, invalidated=invalidated)
+
+    # ----------------------------------------------------------- eviction
+    def evict(self, ttl: int) -> Dict[str, int]:
+        """Per-partition TTL eviction — same semantics as the replicated
+        :meth:`OnlineEngine.evict` (same touch stamps, same cutoff), run
+        independently inside each key-range partition."""
+        cutoff = self._ingest_count - ttl
+        evicted: Dict[str, int] = {}
+        for name in (BASE_VIEW, *sorted(self.treatments)):
+            pcub = (self.base if name == BASE_VIEW
+                    else self.views[name].pcub)
+            keep_mask = np.asarray(self._touch[name]) >= cutoff
+            gv = np.asarray(pcub.group_valid)
+            n_evict = int((gv & ~keep_mask).sum())
+            evicted[name] = n_evict
+            if n_evict == 0:
+                continue
+            new_p = self._place(cube_mod.compact_partitioned(
+                pcub, granule=self._part_granule, keep_mask=keep_mask))
+            new_touch = self._place(
+                _remap_touch_parts(pcub, new_p, self._touch[name]))
+            if name == BASE_VIEW:
+                self.base = new_p
+            else:
+                view = self.views[name]
+                nt = new_p.stats[f"t_{name}"]
+                view.keep = overlap_keep(new_p.group_valid, nt,
+                                         new_p.stats["one"] - nt)
+                view.pcub = new_p
+            self._touch[name] = new_touch
+        if any(evicted.values()):
+            self._cache.clear()
+        self._assembled.clear()
+        return evicted
+
+    # ------------------------------------------------------------ queries
+    def _view_state(self, treatment: str
+                    ) -> Tuple[cube_mod.Cuboid, jnp.ndarray]:
+        """Canonical reassembly of a partitioned view: flatten the (tiny)
+        per-partition stat vectors, re-sort by key, recompute overlap from
+        the (exact) stats. Memoized until the next state mutation."""
+        if treatment not in self._assembled:
+            pv = self.views[treatment]
+            cub = cube_mod.unpartition_cuboid(pv.pcub)
+            nt = cub.stats[f"t_{treatment}"]
+            keep = overlap_keep(cub.group_valid, nt,
+                                cub.stats["one"] - nt)
+            self._assembled[treatment] = (cub, keep)
+        return self._assembled[treatment]
+
+    # -------------------------------------------------------------- state
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        """Materialized-state summary; capacities are PER PARTITION."""
+        out = {BASE_VIEW: {"capacity": self.base.capacity,
+                           "n_parts": self.n_parts,
+                           "n_groups": int(self.base.n_groups())}}
+        for t, view in self.views.items():
+            out[t] = {"capacity": view.pcub.capacity,
+                      "n_parts": self.n_parts,
+                      "n_groups": int(view.pcub.n_groups()),
                       "n_matched_groups": int(jnp.sum(
                           view.keep.astype(jnp.int32)))}
         return out

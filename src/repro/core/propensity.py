@@ -92,9 +92,22 @@ def fit_logistic(X: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
     return LogisticModel(w=w, mean=mean, std=std, converged=converged)
 
 
+def _signed_moments(names, n, sums, sumsqs, batch_cols, valid, sign):
+    """Fold one batch into the per-column moment accumulators: plain
+    signed sums, so retraction (sign=-1) reverses them exactly."""
+    w = valid.astype(jnp.float32) * sign
+    new_n = n + jnp.sum(w)
+    new_sums, new_sumsqs = {}, {}
+    for c in names:
+        x = batch_cols[c].astype(jnp.float32)
+        new_sums[c] = sums[c] + jnp.sum(w * x)
+        new_sumsqs[c] = sumsqs[c] + jnp.sum(w * x * x)
+    return new_n, new_sums, new_sumsqs
+
+
 @functools.partial(jax.jit, static_argnames=("names",))
 def _stream_update(names: Tuple[str, ...], res_cols, priority, n, sums,
-                   sumsqs, batch_cols, valid, sign, key):
+                   sumsqs, batch_cols, valid, key):
     """One streamed batch into (moments, reservoir). Fully on device: no
     host round-trip rides on the ingest hot path.
 
@@ -104,17 +117,11 @@ def _stream_update(names: Tuple[str, ...], res_cols, priority, n, sums,
     a top-k merge of the current reservoir with the batch, which is exactly
     Algorithm R's distribution without sequential per-row state.
     """
-    w = valid.astype(jnp.float32) * sign
-    new_n = n + jnp.sum(w)
-    new_sums, new_sumsqs = {}, {}
-    for c in names:
-        x = batch_cols[c].astype(jnp.float32)
-        new_sums[c] = sums[c] + jnp.sum(w * x)
-        new_sumsqs[c] = sumsqs[c] + jnp.sum(w * x * x)
+    new_n, new_sums, new_sumsqs = _signed_moments(
+        names, n, sums, sumsqs, batch_cols, valid, jnp.float32(1.0))
     cap = priority.shape[0]
     u = jax.random.uniform(key, valid.shape)
-    # retraction (sign < 0) cannot un-sample: contribute empty priorities
-    pri = jnp.where(valid & (sign > 0), u, -jnp.inf)
+    pri = jnp.where(valid, u, -jnp.inf)
     cat_pri = jnp.concatenate([priority, pri])
     new_pri, idx = jax.lax.top_k(cat_pri, cap)
     new_res = {}
@@ -122,6 +129,81 @@ def _stream_update(names: Tuple[str, ...], res_cols, priority, n, sums,
         cat = jnp.concatenate([res_cols[c],
                                batch_cols[c].astype(jnp.float32)])
         new_res[c] = cat[idx]
+    return new_res, new_pri, new_n, new_sums, new_sumsqs
+
+
+def _row_tags(names: Tuple[str, ...], cols, alive) -> Tuple[jnp.ndarray,
+                                                            jnp.ndarray]:
+    """Key tags of rows: two independent u32 content hashes over the f32
+    bit patterns of every column. Tags are pure functions of row CONTENT,
+    so a retracted row presented by value re-derives the tag of its
+    sampled copy. The top bit of the first word is cleared so a live tag
+    can never equal the all-ones invalid-key marker; rows with
+    ``alive=False`` get exactly that marker."""
+    shape = alive.shape
+    h1 = jnp.full(shape, 0x811C9DC5, jnp.uint32)
+    h2 = jnp.full(shape, 0x01000193, jnp.uint32)
+    for c in names:
+        x = jax.lax.bitcast_convert_type(cols[c].astype(jnp.float32),
+                                         jnp.uint32)
+        h1 = (h1 ^ x) * jnp.uint32(0x9E3779B1)
+        h1 = h1 ^ (h1 >> 15)
+        h2 = (h2 ^ (x * jnp.uint32(0x85EBCA6B))) * jnp.uint32(0xC2B2AE35)
+        h2 = h2 ^ (h2 >> 13)
+    h1 = h1 & jnp.uint32(0x7FFFFFFF)
+    from repro.core.keys import INVALID_HI, INVALID_LO
+    return (jnp.where(alive, h1, INVALID_HI),
+            jnp.where(alive, h2, INVALID_LO))
+
+
+@functools.partial(jax.jit, static_argnames=("names",))
+def _stream_retract(names: Tuple[str, ...], res_cols, priority, n, sums,
+                    sumsqs, batch_cols, valid):
+    """Exact retraction: reverse the moments AND delete the exact sampled
+    copies of the retracted rows from the reservoir (key-tagged deletion).
+
+    Each reservoir slot and each retracted row carries a content-hash tag
+    (:func:`_row_tags`). Deletion is multiplicity-aware: if the stream
+    held a row value twice and one copy is retracted, exactly one slot is
+    removed — slot s dies iff its occurrence rank among same-tag live
+    slots is below the retracted count of that tag. Removed slots are
+    zeroed and the reservoir re-sorts by priority, so the surviving state
+    is IDENTICAL to a stream that never held the removed rows (the
+    regression contract: retract-then-refit == never-ingested-then-fit;
+    bit-exact when rows are content-unique — with duplicated row values
+    the surviving VALUE multiset is still exact, but which copy's sampling
+    priority dies is unspecified). A retracted row whose sampled copy was
+    already displaced by the bounded top-k simply removes nothing.
+    """
+    from repro.core import groupby
+    new_n, new_sums, new_sumsqs = _signed_moments(
+        names, n, sums, sumsqs, batch_cols, valid, jnp.float32(-1.0))
+    cap = priority.shape[0]
+    alive = priority > -jnp.inf
+    s1, s2 = _row_tags(names, res_cols, alive)
+    r1, r2 = _row_tags(names, batch_cols, valid)
+    # per-tag retracted counts, looked up per slot (sorted group table)
+    g = groupby.group_by_key(r1, r2)
+    cnt = groupby.segment_sums(g, {"c": valid.astype(jnp.float32)})["c"]
+    pos, found = groupby.lookup_rows_in_table(s1, s2, g.group_hi,
+                                              g.group_lo)
+    c = jnp.where(found, cnt[pos], 0.0)
+    # occurrence rank of each live slot among equal-tag slots (slot order)
+    iota = jnp.arange(cap, dtype=jnp.int32)
+    o1, o2, perm = jax.lax.sort((s1, s2, iota), num_keys=2, is_stable=True)
+    head = jnp.concatenate([jnp.ones((1,), bool),
+                            (o1[1:] != o1[:-1]) | (o2[1:] != o2[:-1])])
+    rank_sorted = iota - jax.lax.cummax(jnp.where(head, iota, 0))
+    rank = jnp.zeros((cap,), jnp.int32).at[perm].set(rank_sorted)
+    removed = alive & found & (rank.astype(jnp.float32) < c)
+    # zero + drop removed slots, re-sort by priority: the layout equals a
+    # stream that never sampled those rows
+    pri = jnp.where(removed, -jnp.inf, priority)
+    new_pri, idx = jax.lax.top_k(pri, cap)
+    new_res = {}
+    for col in names:
+        zeroed = jnp.where(removed, 0.0, res_cols[col])
+        new_res[col] = zeroed[idx]
     return new_res, new_pri, new_n, new_sums, new_sumsqs
 
 
@@ -133,9 +215,13 @@ class StreamStats:
     This is what lets :meth:`OnlineEngine.refresh_propensity` work without
     ``keep_rows=True``'s unbounded row log: the moments standardize features
     over the WHOLE stream (and support exact retraction), while the Newton
-    refit runs over the reservoir sample. Retraction only reverses the
-    moments — a retracted row may linger in the reservoir (bounded-memory
-    approximation, documented trade-off).
+    refit runs over the reservoir sample. Retraction is exact end to end:
+    the moments reverse as signed sums, and the KEY-TAGGED reservoir
+    (content-hash tags, :func:`_stream_retract`) deletes the exact sampled
+    copy of every retracted row — multiplicity-aware, with the surviving
+    layout identical to a stream that never held those rows. Only rows a
+    full reservoir had already displaced are beyond recovery (they were
+    not part of the sample to begin with).
     """
 
     names: Tuple[str, ...]
@@ -165,13 +251,17 @@ class StreamStats:
 
     def update(self, batch_cols: Mapping[str, jnp.ndarray],
                valid: jnp.ndarray, retract: bool = False) -> "StreamStats":
-        key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
-                                 self.n_batches)
         cols = {c: batch_cols[c] for c in self.names}
-        res, pri, n, sums, sumsqs = _stream_update(
-            self.names, self.columns, self.priority, self.n, self.sums,
-            self.sumsqs, cols, valid,
-            jnp.float32(-1.0 if retract else 1.0), key)
+        if retract:
+            res, pri, n, sums, sumsqs = _stream_retract(
+                self.names, self.columns, self.priority, self.n,
+                self.sums, self.sumsqs, cols, valid)
+        else:
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                     self.n_batches)
+            res, pri, n, sums, sumsqs = _stream_update(
+                self.names, self.columns, self.priority, self.n,
+                self.sums, self.sumsqs, cols, valid, key)
         return dataclasses.replace(self, columns=res, priority=pri, n=n,
                                    sums=sums, sumsqs=sumsqs,
                                    n_batches=self.n_batches + 1)

@@ -11,7 +11,7 @@ holds the jit'd wrappers; ref.py the pure-jnp oracles):
 """
 from repro.kernels.ops import (cem_keys_op, knn_topk_op,
                                logistic_newton_terms_op, scatter_merge_op,
-                               segment_sums_op)
+                               scatter_merge_parts_op, segment_sums_op)
 
 __all__ = ["cem_keys_op", "knn_topk_op", "logistic_newton_terms_op",
-           "scatter_merge_op", "segment_sums_op"]
+           "scatter_merge_op", "scatter_merge_parts_op", "segment_sums_op"]

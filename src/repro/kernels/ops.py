@@ -100,6 +100,21 @@ def scatter_merge_op(table: jnp.ndarray, pos: jnp.ndarray,
     return out[:, :s] if pad_s else out
 
 
+def scatter_merge_parts_op(tables: jnp.ndarray, pos: jnp.ndarray,
+                           vals: jnp.ndarray, block: int = 256
+                           ) -> jnp.ndarray:
+    """Scatter-merge over a PARTITION-LOCAL key space: ``tables`` is
+    (P, C, S) — one stat table per key-range partition — ``pos``/``vals``
+    are (P, B)/(P, B, S) routed delta rows whose positions index their own
+    partition's table only. Each partition runs the MXU one-hot kernel
+    independently (unrolled; P is the mesh's data-axis size, so small), so
+    on a sharded leading axis the merge stays device-local."""
+    n_parts = tables.shape[0]
+    return jnp.stack([scatter_merge_op(tables[p], pos[p], vals[p],
+                                       block=block)
+                      for p in range(n_parts)])
+
+
 def knn_topk_op(Q: jnp.ndarray, C: jnp.ndarray, c_valid: jnp.ndarray,
                 k: int, caliper: float = None, block_q: int = 256,
                 block_c: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -73,7 +73,7 @@ def main(argv=None):
         out[0].block_until_ready()
         t_compile = time.perf_counter() - t0
         t0 = time.perf_counter()
-        ate, att, ng, nt, nc, matched, overflow = f(*args_dev)
+        ate, att, var, ng, nt, nc, matched, overflow = f(*args_dev)
         ate.block_until_ready()
         t_run = time.perf_counter() - t0
         if not bool(overflow):
@@ -86,7 +86,8 @@ def main(argv=None):
 
     naive = float(difference_in_means(table["dep_delay"],
                                       table[args.treatment], table.valid))
-    print(f"\nATE({args.treatment}) = {float(ate):+.3f} min  "
+    print(f"\nATE({args.treatment}) = {float(ate):+.3f} "
+          f"± {float(var) ** 0.5:.3f} min  "
           f"(ATT {float(att):+.3f}; naive {naive:+.3f}; "
           f"truth {data.true_sate.get(args.treatment, float('nan')):+.3f})")
     print(f"groups: {int(ng)}; matched T/C: {int(nt)}/{int(nc)}; "

@@ -33,6 +33,23 @@ def make_data_mesh(n_devices: int = None, axis: str = "data"):
     return make_mesh((n,), (axis,))
 
 
+def partition_sharding(mesh, axis: str = "data"):
+    """NamedSharding that lays a ``(n_parts, capacity)`` partitioned stat
+    table out with one key-range partition per device along ``axis`` — the
+    placement the partitioned online engine uses for every materialized
+    view, so resident state per device is 1/n_parts of the total."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec(axis, None))
+
+
+def shard_partitions(mesh, tree, axis: str = "data"):
+    """Place every (n_parts, ...) array leaf of ``tree`` with
+    :func:`partition_sharding` over ``mesh``."""
+    import jax as _jax
+    s = partition_sharding(mesh, axis)
+    return _jax.tree.map(lambda a: _jax.device_put(a, s), tree)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -33,6 +33,9 @@ def _run(body: str):
 
 
 def test_distributed_cem_matches_single_device():
+    # equivalence with the single-device engine — the same outputs the
+    # pre-unification (private n_t/n_c layout) path was checked against —
+    # plus the Neyman variance the unified cuboid stat schema adds
     out = _run("""
     from repro.core import CoarsenSpec, cem, estimate_ate
     from repro.core.cem import pack_keys
@@ -49,20 +52,24 @@ def test_distributed_cem_matches_single_device():
     table = Table.from_numpy(dict(x0=x0, x1=x1, t=t, y=y), valid)
     specs = {"x0": CoarsenSpec.categorical(6), "x1": CoarsenSpec.categorical(5)}
 
-    # single-device reference
+    # single-device reference (row-level variance via estimate_ate)
     res = cem(table, "t", "y", specs)
-    want = estimate_ate(res.groups)
+    want = estimate_ate(res.groups, table["y"], table["t"],
+                        res.table.valid)
 
     # distributed
     codec, hi, lo = pack_keys(table, specs)
     f = make_distributed_cem(mesh, capacity=256)
-    ate, att, ng, nt, nc, matched, overflow = f(
+    ate, att, var, ng, nt, nc, matched, overflow = f(
         hi, lo, table["t"], table["y"], table.valid)
     assert not bool(overflow)
     np.testing.assert_allclose(float(ate), float(want.ate), rtol=1e-4)
     np.testing.assert_allclose(float(att), float(want.att), rtol=1e-4)
+    assert float(want.variance) > 0.0
+    np.testing.assert_allclose(float(var), float(want.variance), rtol=1e-3)
     assert int(ng) == int(want.n_groups)
     np.testing.assert_allclose(float(nt), float(want.n_matched_treated))
+    np.testing.assert_allclose(float(nc), float(want.n_matched_control))
     np.testing.assert_array_equal(np.asarray(matched),
                                   np.asarray(res.table.valid))
     print("DIST_CEM_OK")

@@ -512,6 +512,81 @@ def test_reservoir_propensity_refresh_without_row_log():
         none.refresh_propensity("ta", ["x0", "x1"])
 
 
+def test_reservoir_retraction_is_exact():
+    # key-tagged reservoir: retraction deletes the exact sampled copies,
+    # zeroes the slots and re-sorts by priority — retract-then-refit is
+    # BIT-IDENTICAL to never-ingested-then-fit (content-unique rows with
+    # integer values keep every sum exact)
+    def uframe(n, seed, y0):
+        rng = np.random.default_rng(seed)
+        cols = {
+            "x0": rng.integers(0, 5, n).astype(np.int32),
+            "x1": rng.integers(0, 4, n).astype(np.int32),
+            "x2": rng.integers(0, 3, n).astype(np.int32),
+        }
+        cols["ta"] = (rng.random(n) < 0.15 + 0.6 * cols["x0"] / 4).astype(
+            np.int32)
+        cols["tb"] = (rng.random(n) < 0.4).astype(np.int32)
+        # unique integer outcomes: rows content-unique AND f32-sum exact
+        cols["y"] = (y0 + np.arange(n)).astype(np.float32)
+        return cols, rng.random(n) > 0.08
+
+    A, vA = uframe(1500, seed=1, y0=0)
+    B, vB = uframe(900, seed=2, y0=10_000)
+    bA, bB = Table.from_numpy(A, vA), Table.from_numpy(B, vB)
+    never = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                         reservoir_size=4096)
+    never.ingest(bA)
+    engine = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                          reservoir_size=4096)
+    engine.ingest(bA)
+    engine.ingest(bB)
+    engine.ingest(bB, retract=True)
+    # the whole streaming-propensity state is bit-identical ...
+    np.testing.assert_array_equal(np.asarray(never.stream.priority),
+                                  np.asarray(engine.stream.priority))
+    for c in never.stream.names:
+        np.testing.assert_array_equal(np.asarray(never.stream.columns[c]),
+                                      np.asarray(engine.stream.columns[c]))
+    # ... so the (cold, moment-standardized) refit is too
+    m_never = never.refresh_propensity("ta", ["x0", "x1"])
+    m_retract = engine.refresh_propensity("ta", ["x0", "x1"])
+    np.testing.assert_array_equal(np.asarray(m_never.w),
+                                  np.asarray(m_retract.w))
+    np.testing.assert_array_equal(np.asarray(m_never.mean),
+                                  np.asarray(m_retract.mean))
+    np.testing.assert_array_equal(np.asarray(m_never.std),
+                                  np.asarray(m_retract.std))
+
+
+def test_reservoir_retraction_multiplicity_and_displacement():
+    import jax.numpy as jnp
+    # duplicated row values: retracting ONE copy removes exactly one slot
+    ss = StreamStats.empty(("x", "t"), capacity=64)
+    ss = ss.update({"x": jnp.asarray([1.0, 2.0, 2.0, 3.0]),
+                    "t": jnp.asarray([0.0, 1.0, 1.0, 0.0])},
+                   jnp.ones(4, bool))
+    ss2 = ss.update({"x": jnp.asarray([2.0]), "t": jnp.asarray([1.0])},
+                    jnp.ones(1, bool), retract=True)
+    cols, rvalid = ss2.reservoir()
+    left = sorted(np.asarray(cols["x"])[np.asarray(rvalid)].tolist())
+    assert left == [1.0, 2.0, 3.0]
+    assert float(ss2.n) == 3.0
+    # a row the bounded reservoir already displaced: nothing to delete,
+    # moments still reverse exactly
+    ss = StreamStats.empty(("x",), capacity=4, seed=3)
+    xs = np.arange(16, dtype=np.float32)
+    ss = ss.update({"x": jnp.asarray(xs)}, jnp.ones(16, bool))
+    _, rvalid = ss.reservoir()
+    sampled = set(np.asarray(ss.columns["x"])[np.asarray(rvalid)].tolist())
+    missing = [v for v in xs if v not in sampled][0]
+    ss3 = ss.update({"x": jnp.asarray([missing])}, jnp.ones(1, bool),
+                    retract=True)
+    _, rvalid3 = ss3.reservoir()
+    assert int(rvalid3.sum()) == 4
+    assert float(ss3.n) == 15.0
+
+
 def test_eviction_ttl_bounds_unbounded_key_space():
     # each batch lives in its own x0 slice -> the key space keeps growing;
     # TTL eviction must drop groups whose last touch is stale

@@ -1,0 +1,227 @@
+"""Key-range partitioned materialized views: partitioned == replicated.
+
+The contract: `PartitionedOnlineEngine` changes WHERE materialized state
+lives (each device owns one contiguous hash/key-range partition of every
+stat table; deltas are routed to owners with an all-to-all), never WHAT is
+maintained — cuboid stats are bit-identical (integer outcomes), matched
+sets identical, and ATE / ATT / Neyman variance bit-identical to the
+replicated engine across 1/2/4-device meshes, including retraction,
+eviction and the delta-capacity overflow fallback. Per-device resident
+state must drop ~1/N on an N-device mesh.
+
+Runs in a SUBPROCESS with --xla_force_host_platform_device_count so the
+main pytest process keeps seeing exactly 1 device (same isolation rule as
+tests/test_distributed.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT_HEADER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax, jax.numpy as jnp
+assert jax.device_count() == 4, jax.devices()
+from repro.launch.mesh import make_data_mesh
+from repro.core import CoarsenSpec, OnlineEngine, PartitionedOnlineEngine
+from repro.data.columnar import Table
+
+SPECS = {"x0": CoarsenSpec.categorical(5), "x1": CoarsenSpec.categorical(4),
+         "x2": CoarsenSpec.categorical(3)}
+TREATMENTS = {"ta": ["x0", "x1"], "tb": ["x0", "x2"]}
+
+
+def frame(n, seed, x0_hi=5):
+    rng = np.random.default_rng(seed)
+    cols = {
+        "x0": rng.integers(0, x0_hi, n).astype(np.int32),
+        "x1": rng.integers(0, 4, n).astype(np.int32),
+        "x2": rng.integers(0, 3, n).astype(np.int32),
+    }
+    p = 0.15 + 0.6 * cols["x0"] / 4
+    cols["ta"] = (rng.random(n) < p).astype(np.int32)
+    cols["tb"] = (rng.random(n) < 0.4).astype(np.int32)
+    y = 2.0 * cols["ta"] + 1.5 * cols["x0"] + rng.normal(0, 0.5, n)
+    cols["y"] = np.round(y).astype(np.float32)  # exact f32 sums
+    return cols, rng.random(n) > 0.08
+
+
+def stat_map(cub):
+    # works for Cuboid (C,) and PartitionedCuboid (P, C) alike
+    gv = (np.asarray(cub.group_valid)
+          & (np.asarray(cub.stats["one"]) != 0)).reshape(-1)
+    hi = np.asarray(cub.key_hi).reshape(-1)[gv]
+    lo = np.asarray(cub.key_lo).reshape(-1)[gv]
+    c = {k: np.asarray(v).reshape(-1)[gv] for k, v in sorted(cub.stats.items())}
+    return {(int(h), int(l)): tuple(float(c[k][i]) for k in c)
+            for i, (h, l) in enumerate(zip(hi, lo))}
+"""
+
+
+def _run(body: str):
+    code = SCRIPT_HEADER + textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=900,
+                          env={**os.environ, "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc.stdout
+
+
+def test_partitioned_bit_identical_across_device_counts():
+    out = _run("""
+    # early batches restricted to x0 < 2 -> later batches add new group
+    # keys mid-stream, exercising the per-partition grow path too
+    c1, v1 = frame(3000, seed=1, x0_hi=2)
+    c2, v2 = frame(2024, seed=2)
+    cols = {k: np.concatenate([c1[k], c2[k]]) for k in c1}
+    valid = np.concatenate([v1, v2])
+    sizes = [1000, 1000, 1000, 1000, 1024]
+
+    ref = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    engines = {}
+    for ndev in (1, 2, 4):
+        mesh = make_data_mesh(ndev) if ndev > 1 else None
+        # ndev=1: no mesh, but still 2 key-range partitions on one device
+        engines[ndev] = PartitionedOnlineEngine(
+            SPECS, TREATMENTS, "y", granule=256, mesh=mesh,
+            n_parts=None if ndev > 1 else 2)
+    s = 0
+    saw_slow = False
+    for sz in sizes:
+        b = Table.from_numpy({k: v[s:s + sz] for k, v in cols.items()},
+                             valid[s:s + sz])
+        r = ref.ingest(b)
+        for ndev, eng in engines.items():
+            rp = eng.ingest(b)
+            assert rp.n_delta_groups == r.n_delta_groups, ndev
+        if s > 0 and not all(r.fast_path.values()):
+            saw_slow = True
+        s += sz
+    assert saw_slow, "stream never exercised the grow path"
+
+    full = Table.from_numpy(cols, valid)
+    ref_matched = {t: np.asarray(ref.matched_rows(t, full))
+                   for t in TREATMENTS}
+    for ndev, eng in engines.items():
+        assert stat_map(eng.base) == stat_map(ref.base), ndev
+        for t in TREATMENTS:
+            cub, _ = eng._view_state(t)
+            assert stat_map(cub) == stat_map(ref.views[t].cuboid), (ndev, t)
+            got, want = eng.ate(t), ref.ate(t)
+            assert float(got.ate) == float(want.ate), (ndev, t)
+            assert float(got.att) == float(want.att), (ndev, t)
+            assert float(got.variance) == float(want.variance), (ndev, t)
+            assert int(got.n_groups) == int(want.n_groups)
+            np.testing.assert_array_equal(
+                np.asarray(eng.matched_rows(t, full)), ref_matched[t])
+            gs = eng.ate(t, subpopulation={"x0": [0, 1]})
+            ws = ref.ate(t, subpopulation={"x0": [0, 1]})
+            assert float(gs.ate) == float(ws.ate), (ndev, t, "subpop")
+    print("PARTITIONED_EQUIV_OK")
+    """)
+    assert "PARTITIONED_EQUIV_OK" in out
+
+
+def test_partitioned_state_is_sharded_one_over_n_per_device():
+    out = _run("""
+    cols, valid = frame(6000, seed=5)
+    mesh = make_data_mesh(4)
+    ref = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    eng = PartitionedOnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                                  mesh=mesh)
+    for s in range(0, 6000, 1500):
+        b = Table.from_numpy({k: v[s:s + 1500] for k, v in cols.items()},
+                             valid[s:s + 1500])
+        ref.ingest(b)
+        eng.ingest(b)
+    rb, pb = ref.state_bytes(), eng.state_bytes()
+    # replicated: every device holds the full tables
+    assert rb["per_device"] == rb["total"]
+    # partitioned: the leading partition axis is sharded over the mesh —
+    # per-device resident state is ~1/4 of the total
+    assert pb["per_device"] * 4 <= pb["total"] * 1.01, pb
+    # and maintained state is not larger overall than the replicated engine's
+    assert pb["total"] <= rb["total"] * 1.5, (pb, rb)
+    import jax.sharding as shd
+    assert isinstance(eng.base.key_hi.sharding, shd.NamedSharding)
+    print("PARTITIONED_BYTES_OK", pb, rb)
+    """)
+    assert "PARTITIONED_BYTES_OK" in out
+
+
+def test_partitioned_retraction_eviction_and_guard():
+    out = _run("""
+    cols, valid = frame(4000, seed=3)
+    mesh = make_data_mesh(4)
+    ref = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    eng = PartitionedOnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                                  mesh=mesh)
+    for s in range(0, 4000, 1000):
+        b = Table.from_numpy({k: v[s:s + 1000] for k, v in cols.items()},
+                             valid[s:s + 1000])
+        ref.ingest(b)
+        eng.ingest(b)
+    # retract the second batch on both: still bit-identical
+    b1 = Table.from_numpy({k: v[1000:2000] for k, v in cols.items()},
+                          valid[1000:2000])
+    ref.ingest(b1, retract=True)
+    eng.ingest(b1, retract=True)
+    assert stat_map(eng.base) == stat_map(ref.base)
+    for t in TREATMENTS:
+        assert float(eng.ate(t).ate) == float(ref.ate(t).ate), t
+    # the never-ingested guard fires through the routed path too
+    bogus = Table.from_numpy({k: np.repeat(v[:1], 600) for k, v in
+                              cols.items()}, np.ones(600, bool))
+    before = stat_map(eng.base)
+    try:
+        eng.ingest(bogus, retract=True)
+        raise SystemExit("guard did not fire")
+    except ValueError:
+        pass
+    assert stat_map(eng.base) == before
+    # per-partition TTL eviction drops the same groups as replicated
+    rng = np.random.default_rng(28)
+    for i in range(5):
+        cc = {"x0": np.full(200, i % 5, np.int32),
+              "x1": rng.integers(0, 4, 200).astype(np.int32),
+              "x2": rng.integers(0, 3, 200).astype(np.int32)}
+        cc["ta"] = (rng.random(200) < 0.5).astype(np.int32)
+        cc["tb"] = (rng.random(200) < 0.5).astype(np.int32)
+        cc["y"] = np.round(rng.normal(0, 1, 200)).astype(np.float32)
+        b = Table.from_numpy(cc)
+        ref.ingest(b)
+        eng.ingest(b)
+    ev_r, ev_p = ref.evict(ttl=2), eng.evict(ttl=2)
+    assert ev_r == ev_p, (ev_r, ev_p)
+    assert stat_map(eng.base) == stat_map(ref.base)
+    for t in TREATMENTS:
+        assert float(eng.ate(t).ate) == float(ref.ate(t).ate), t
+    print("PARTITIONED_RETRACT_EVICT_OK")
+    """)
+    assert "PARTITIONED_RETRACT_EVICT_OK" in out
+
+
+def test_partitioned_delta_capacity_overflow_falls_back_exactly():
+    out = _run("""
+    # tiny delta capacity: the first wide batch overflows the routed delta
+    # tables, forcing the exact host rebuild + re-route + geometric growth
+    cols, valid = frame(4096, seed=4)
+    mesh = make_data_mesh(4)
+    eng = PartitionedOnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                                  mesh=mesh, delta_granule=8)
+    ref = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                       delta_granule=8)
+    for s in range(0, 4096, 1024):
+        b = Table.from_numpy({k: v[s:s + 1024] for k, v in cols.items()},
+                             valid[s:s + 1024])
+        eng.ingest(b)
+        ref.ingest(b)
+    assert eng._delta_cap > 8  # capacity grew past the forced overflow
+    assert stat_map(eng.base) == stat_map(ref.base)
+    for t in TREATMENTS:
+        assert float(eng.ate(t).ate) == float(ref.ate(t).ate)
+    print("PARTITIONED_OVERFLOW_OK")
+    """)
+    assert "PARTITIONED_OVERFLOW_OK" in out
