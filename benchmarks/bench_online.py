@@ -3,26 +3,34 @@
 The claim under measurement (paper's online setting): once a base table is
 materialized, folding a small streamed batch in and re-answering the causal
 query costs O(batch + stat-table capacity) — asymptotically below the
-offline path, which re-coarsens/re-groups ALL rows per refresh.
+offline path, which re-coarsens/re-groups ALL rows per refresh. Since the
+fused single-dispatch pipeline, the second claim is DISPATCH cost: the
+steady-state ingest is ONE compiled program launch (state donated in
+place), vs the PR 3 planner's build+plan+commit launches.
+
+All rows are median-of-5 after 2 warmup iterations (warmup also settles
+capacity growth and jit traces), so fused-vs-planner deltas are stable.
 
 Emits, per batch size B:
-  online_ingest_bB          fold one B-row batch into every view (fused
-                            single-host-sync planner)
-  online_ingest_unfused_bB  same, legacy one-blocking-sync-per-merge loop
-                            (derived: latency the fused path saves)
-  online_query_bB           uncached ATE from materialized state
-  online_cached_query_bB    repeat ATE (estimate cache hit)
-  offline_recompute_bB      full CEM + ATE over the N+B-row table
+  online_ingest_bB            fold one B-row batch into every view —
+                              fused single-dispatch pipeline (default)
+  online_ingest_planner_bB    same stream, PR 3 two-dispatch planner path
+  online_ingest_unfused_bB    same, legacy one-blocking-sync-per-merge loop
+  online_query_bB             uncached ATE from materialized state
+  online_cached_query_bB      repeat ATE (estimate cache hit)
+  offline_recompute_bB        full CEM + ATE over the N+B-row table
+plus a dispatch-count row (jit-launch counter, repro.launch.trace):
+  online_dispatches           compiled launches per steady-state ingest,
+                              fused1 vs planner vs unfused
 and, per device count D (subprocess with host-platform device forcing):
-  online_ingest_dD          per-batch sharded ingest latency on a D-device
-                            data mesh (delta built per shard + all-gather
-                            combine; materialized views REPLICATED)
-  online_ingest_part_dD     same stream through the PARTITIONED engine
-                            (key-range partitioned views, all-to-all
-                            routed deltas, per-partition merges)
-  online_state_bytes_dD     per-device resident bytes of the materialized
-                            views, replicated vs partitioned — the
-                            partitioned engine must show ~1/D scaling
+  online_ingest_fused1_dD         fused single-dispatch, replicated views
+  online_ingest_fused1_part_dD    fused single-dispatch, partitioned views
+  online_ingest_dD                planner path, replicated views
+  online_ingest_part_dD           planner path, partitioned views
+  online_state_bytes_dD           per-device resident bytes, partitioned
+                                  (must show ~1/D scaling)
+  online_state_bytes_replicated_dD  same accounting on the replicated
+                              engine, so memory claims are comparable
 
 REPRO_BENCH_SMOKE=1 shrinks N for CI smoke runs (full mode: N = 2^20).
 """
@@ -41,6 +49,8 @@ SPECS = {"x0": CoarsenSpec.categorical(8), "x1": CoarsenSpec.categorical(6),
          "x2": CoarsenSpec.categorical(5)}
 TREATMENTS = {"t": ["x0", "x1", "x2"]}
 
+WARMUP, ITERS = 2, 5     # median-of-5 per row; warmup settles traces
+
 
 def _gen(n, seed):
     rng = np.random.default_rng(seed)
@@ -56,6 +66,26 @@ def _gen(n, seed):
     return cols
 
 
+def _ingest_latency(eng, bs, seed0):
+    """Median ingest latency over ITERS distinct batches (after WARMUP
+    distinct batches): re-ingesting identical rows would let every repeat
+    hit the warm fast path artificially."""
+    feed = [_gen(bs, seed=seed0 + i) for i in range(WARMUP + ITERS)]
+    batches = iter([Table.from_numpy(c) for c in feed])
+    t, _ = timeit(lambda: eng.ingest(next(batches)),
+                  warmup=WARMUP, iters=ITERS)
+    return t, feed
+
+
+def _steady_dispatches(eng, bs, seed0):
+    """Compiled launches of one steady-state ingest (trace counter)."""
+    from repro.launch.trace import count_dispatches
+    eng.ingest(Table.from_numpy(_gen(bs, seed=seed0)))   # settle shapes
+    with count_dispatches() as n:
+        eng.ingest(Table.from_numpy(_gen(bs, seed=seed0 + 1)))
+    return n()
+
+
 _SWEEP_SCRIPT = """
 import json, os, time
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
@@ -68,9 +98,12 @@ from repro.launch.mesh import make_data_mesh
 mesh = make_data_mesh({ndev}) if {ndev} > 1 else None
 out = {{}}
 for label, cls, kw in (
-        ("replicated", OnlineEngine, dict()),
+        ("fused1", OnlineEngine, dict()),
+        ("fused1_part", PartitionedOnlineEngine,
+         dict(n_parts=None if {ndev} > 1 else 1)),
+        ("replicated", OnlineEngine, dict(pipeline="planner")),
         ("partitioned", PartitionedOnlineEngine,
-         dict(n_parts=None if {ndev} > 1 else 1))):
+         dict(pipeline="planner", n_parts=None if {ndev} > 1 else 1))):
     eng = cls.from_table(Table.from_numpy(_gen({n}, seed=0)),
                          SPECS, TREATMENTS, "y", mesh=mesh, **kw)
     feed = [Table.from_numpy(_gen({bs}, seed=1 + i))
@@ -87,10 +120,12 @@ print("SWEEP_RESULT", json.dumps(out))
 """
 
 
-def sharded_sweep(n: int, bs: int, device_counts, warmup=2, iters=5):
+def sharded_sweep(n: int, bs: int, device_counts, warmup=WARMUP,
+                  iters=ITERS):
     """Per-batch ingest latency + per-device resident state per data-mesh
-    size, replicated vs partitioned views. Host-platform device forcing
-    needs a fresh process per count (XLA_FLAGS is read once)."""
+    size: fused single-dispatch vs planner, replicated vs partitioned
+    views. Host-platform device forcing needs a fresh process per count
+    (XLA_FLAGS is read once)."""
     import json
     for ndev in device_counts:
         code = textwrap.dedent(_SWEEP_SCRIPT.format(
@@ -99,7 +134,7 @@ def sharded_sweep(n: int, bs: int, device_counts, warmup=2, iters=5):
         try:
             proc = subprocess.run(
                 [sys.executable, "-c", code], capture_output=True,
-                text=True, timeout=1200,
+                text=True, timeout=1800,
                 env={**os.environ, "PYTHONPATH": "src:."})
             marker = [ln for ln in proc.stdout.splitlines()
                       if ln.startswith("SWEEP_RESULT")]
@@ -117,61 +152,67 @@ def sharded_sweep(n: int, bs: int, device_counts, warmup=2, iters=5):
                 print(proc.stderr[-2000:], file=sys.stderr)
             continue
         rep, part = res["replicated"], res["partitioned"]
+        f1, f1p = res["fused1"], res["fused1_part"]
+        emit(f"online_ingest_fused1_d{ndev}", f1["secs"],
+             f"n={n} batch={bs} vs_planner="
+             f"{rep['secs'] / max(f1['secs'], 1e-12):.2f}x")
+        emit(f"online_ingest_fused1_part_d{ndev}", f1p["secs"],
+             f"n={n} batch={bs} vs_planner="
+             f"{part['secs'] / max(f1p['secs'], 1e-12):.2f}x")
         emit(f"online_ingest_d{ndev}", rep["secs"], f"n={n} batch={bs}")
         emit(f"online_ingest_part_d{ndev}", part["secs"],
              f"n={n} batch={bs} vs_replicated="
              f"{part['secs'] / max(rep['secs'], 1e-12):.2f}x")
-        # state scaling row: seconds slot carries no latency — emit 0-cost
+        # state scaling rows: seconds slot carries no latency — emit 0-cost
         # with the bytes in the derived column (JSON artifact keeps both)
         emit(f"online_state_bytes_d{ndev}", 0.0,
              f"replicated_per_device={rep['per_device']} "
              f"partitioned_per_device={part['per_device']} "
              f"partitioned_total={part['total']} "
              f"shrink={rep['per_device'] / max(part['per_device'], 1):.2f}x")
+        emit(f"online_state_bytes_replicated_d{ndev}", 0.0,
+             f"total={rep['total']} per_device={rep['per_device']} "
+             f"fused1_total={f1['total']} "
+             f"fused1_per_device={f1['per_device']}")
 
 
 def main() -> None:
     n = 1 << 16 if smoke() else 1 << 20
     batch_sizes = [256, 4096] if smoke() else [256, 4096, 65536]
-    warmup, iters = 1, 3
     base_cols = _gen(n, seed=0)
     base = Table.from_numpy(base_cols)
 
     eng = OnlineEngine.from_table(base, SPECS, TREATMENTS, "y")
+    planner = OnlineEngine.from_table(base, SPECS, TREATMENTS, "y",
+                                      pipeline="planner")
     legacy = OnlineEngine.from_table(base, SPECS, TREATMENTS, "y",
-                                     fused_host_sync=False)
+                                     pipeline="unfused")
     ingested = [base_cols]
     for bs in batch_sizes:
-        # one DISTINCT batch per timed call: re-ingesting the same rows
-        # would mutate the engine away from the offline baseline and let
-        # every repeat hit the warm fast path
-        feed = [_gen(bs, seed=bs + i) for i in range(warmup + iters)]
-        batches = iter([Table.from_numpy(c) for c in feed])
-        t_ing, _ = timeit(lambda: eng.ingest(next(batches)),
-                          warmup=warmup, iters=iters)
+        t_ing, feed = _ingest_latency(eng, bs, seed0=bs)
         ingested += feed
         emit(f"online_ingest_b{bs}", t_ing,
-             f"n={n} views={len(eng.views) + 1}")
+             f"n={n} views={len(eng.views) + 1} pipeline=fused1")
 
-        # the same stream through the legacy per-merge-host-sync loop:
-        # the delta vs the fused planner is dispatch serialization cost
-        feed_l = [_gen(bs, seed=1_000_000 + bs + i)
-                  for i in range(warmup + iters)]
-        batches_l = iter([Table.from_numpy(c) for c in feed_l])
-        t_unf, _ = timeit(lambda: legacy.ingest(next(batches_l)),
-                          warmup=warmup, iters=iters)
+        # the same stream through the PR 3 planner and the legacy
+        # per-merge-host-sync loop: deltas vs the fused single dispatch
+        # are dispatch/serialization cost
+        t_plan, _ = _ingest_latency(planner, bs, seed0=1_000_000 + bs)
+        emit(f"online_ingest_planner_b{bs}", t_plan,
+             f"fused1_speedup={t_plan / max(t_ing, 1e-12):.2f}x "
+             f"fused1_saves={(t_plan - t_ing) * 1e3:.2f}ms")
+        t_unf, _ = _ingest_latency(legacy, bs, seed0=2_000_000 + bs)
         emit(f"online_ingest_unfused_b{bs}", t_unf,
-             f"fused_saves={(t_unf - t_ing) * 1e3:.2f}ms "
-             f"({(1 - t_ing / max(t_unf, 1e-12)) * 100:.0f}%)")
+             f"fused1_speedup={t_unf / max(t_ing, 1e-12):.2f}x")
 
         def query():
             eng._cache.clear()
             return eng.ate("t")
-        t_q, _ = timeit(query)
+        t_q, _ = timeit(query, warmup=WARMUP, iters=ITERS)
         emit(f"online_query_b{bs}", t_q,
              f"groups={int(eng.views['t'].cuboid.n_groups())}")
 
-        t_cq, _ = timeit(lambda: eng.ate("t"))
+        t_cq, _ = timeit(lambda: eng.ate("t"), warmup=WARMUP, iters=ITERS)
         emit(f"online_cached_query_b{bs}", t_cq, "")
 
         # offline recompute over the SAME rows the engine now holds
@@ -181,10 +222,22 @@ def main() -> None:
 
         def offline():
             return estimate_ate(cem(full, "t", "y", SPECS).groups)
-        t_off, _ = timeit(offline)
+        t_off, _ = timeit(offline, warmup=WARMUP, iters=ITERS)
         speedup = t_off / max(t_ing + t_q, 1e-12)
         emit(f"offline_recompute_b{bs}", t_off,
              f"online_speedup={speedup:.1f}x")
+
+    # dispatch-count rows: compiled launches per steady-state ingest. The
+    # COUNT rides in the value slot (1 count == 1 "us") so the CI
+    # regression guard (tools/check_bench.py, 1.5x) actually fails when
+    # the fused pipeline regresses from one dispatch — a free-text
+    # derived field would never trip it.
+    d_f = _steady_dispatches(eng, batch_sizes[0], seed0=42)
+    d_p = _steady_dispatches(planner, batch_sizes[0], seed0=52)
+    d_u = _steady_dispatches(legacy, batch_sizes[0], seed0=62)
+    for name, d in (("fused1", d_f), ("planner", d_p), ("unfused", d_u)):
+        emit(f"online_dispatches_{name}", d / 1e6,
+             "compiled launches per steady ingest (value slot = count)")
 
     # sharded ingest: per-batch latency per device-mesh size
     sweep_n = 1 << 15 if smoke() else 1 << 18

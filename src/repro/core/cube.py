@@ -38,6 +38,7 @@ from repro.core.cem import CEMGroups, make_codec, overlap_keep
 from repro.core.coarsen import CoarsenSpec, coarsen_columns
 from repro.core.keys import INVALID_HI, INVALID_LO, KeyCodec
 from repro.data.columnar import Table, _round_capacity
+from repro.launch.trace import counted_jit
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +112,20 @@ def empty_cuboid(codec: KeyCodec, treatments: Sequence[str],
         treatments=tuple(treatments))
 
 
+def delta_build_body(columns, valid, *, codec, specs, treatments, outcome):
+    """coarsen -> pack -> group -> segment-sum: THE build body of a
+    base/delta stat table. One definition shared by the jitted offline
+    build (:func:`_build_fn`) and the fused single-dispatch ingest
+    programs (``repro.core.fused``), so a semantic change here propagates
+    to every pipeline. Returns (hi, lo, sums, group_valid, n_groups)."""
+    buckets = coarsen_columns(columns, specs)
+    hi, lo = codec.pack(buckets, valid)
+    g = groupby.group_by_key(hi, lo)
+    cols = delta_stat_columns(columns, valid, treatments, outcome)
+    sums = groupby.segment_sums(g, cols)
+    return g.group_hi, g.group_lo, sums, g.group_valid, g.n_groups
+
+
 @functools.lru_cache(maxsize=256)
 def _build_fn(codec: KeyCodec, specs_items: Tuple, treatments: Tuple[str, ...],
               outcome: str):
@@ -121,14 +136,12 @@ def _build_fn(codec: KeyCodec, specs_items: Tuple, treatments: Tuple[str, ...],
     shapes are stable across a stream, so one trace amortizes away."""
     specs = dict(specs_items)
 
-    @jax.jit
+    @counted_jit
     def fn(columns, valid):
-        buckets = coarsen_columns(columns, specs)
-        hi, lo = codec.pack(buckets, valid)
-        g = groupby.group_by_key(hi, lo)
-        cols = delta_stat_columns(columns, valid, treatments, outcome)
-        sums = groupby.segment_sums(g, cols)
-        return g.group_hi, g.group_lo, sums, g.group_valid
+        hi, lo, sums, gv, _ = delta_build_body(
+            columns, valid, codec=codec, specs=specs,
+            treatments=treatments, outcome=outcome)
+        return hi, lo, sums, gv
     return fn
 
 
@@ -149,7 +162,7 @@ def _rollup_fn(codec: KeyCodec, dims: Tuple[str, ...]):
     — same rationale as :func:`_build_fn`."""
     sub = codec.subcodec(dims)
 
-    @jax.jit
+    @counted_jit
     def fn(key_hi, key_lo, group_valid, stats):
         buckets = {n: codec.extract(key_hi, key_lo, n) for n in sub.names}
         shi, slo = sub.pack(buckets, group_valid)
@@ -428,6 +441,29 @@ def _pad_cuboid(cuboid: Cuboid, capacity: int) -> Cuboid:
         treatments=cuboid.treatments)
 
 
+def pad_partitioned(pcub: PartitionedCuboid,
+                    capacity: int) -> PartitionedCuboid:
+    """Pad every partition of a (P, C) table to ``capacity`` slots along
+    the slot axis (invalid-key marker, zero stats) — the growth step of the
+    fused single-dispatch ingest, which merges at a fixed per-partition
+    capacity and recompiles when a re-sort would not fit."""
+    pad = capacity - pcub.capacity
+    if pad < 0:
+        raise ValueError("cannot shrink in pad_partitioned")
+    if pad == 0:
+        return pcub
+    w = ((0, 0), (0, pad))
+    return PartitionedCuboid(
+        codec=pcub.codec,
+        key_hi=jnp.pad(pcub.key_hi, w,
+                       constant_values=np.uint32(INVALID_HI)),
+        key_lo=jnp.pad(pcub.key_lo, w,
+                       constant_values=np.uint32(INVALID_LO)),
+        stats={k: jnp.pad(v, w) for k, v in pcub.stats.items()},
+        group_valid=jnp.pad(pcub.group_valid, w),
+        treatments=pcub.treatments)
+
+
 def stack_partitions(parts: Sequence[Cuboid]) -> PartitionedCuboid:
     """Stack per-partition tables (padded to the max capacity) into one
     PartitionedCuboid — the common exit of every host-side per-partition
@@ -459,7 +495,7 @@ def partition_cuboid(cuboid: Cuboid, n_parts: int,
     return stack_partitions(parts)
 
 
-@jax.jit
+@counted_jit
 def _canonical_fn(key_hi, key_lo, stats):
     """Flatten (P, C) partition tables and re-sort into ONE canonical
     globally key-sorted table. Keys are distinct across partitions, so the
@@ -482,7 +518,7 @@ def unpartition_cuboid(pcub: PartitionedCuboid) -> Cuboid:
                   group_valid=gv, treatments=pcub.treatments)
 
 
-@functools.partial(jax.jit, static_argnames=("n_parts",))
+@functools.partial(counted_jit, static_argnames=("n_parts",))
 def route_delta(hi, lo, stats, gv, n_parts: int):
     """Route a delta stat table to its owner partitions (single-device
     path; the mesh path routes with an all-to-all in

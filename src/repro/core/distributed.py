@@ -123,6 +123,34 @@ def make_distributed_cem(mesh, capacity: int = 8192,
 
 
 # ===================== sharded online delta build ===========================
+def _sharded_delta_body(columns, valid, *, codec, specs, treatments,
+                        outcome, capacity, axis):
+    """Per-device shard body of the sharded (replicated-views) delta build:
+    coarsen/pack/locally-aggregate the row shard, truncate to ``capacity``,
+    all-gather the tiny per-device tables, re-combine. Exposed standalone so
+    the fused single-dispatch ingest program (``repro.core.fused``) can
+    compose it under one jit; :func:`make_sharded_delta_build` wraps it for
+    the standalone (planner-path) dispatch."""
+    from repro.core import cube as cube_mod
+    from repro.core.coarsen import coarsen_columns
+
+    buckets = coarsen_columns(columns, specs)
+    hi, lo = codec.pack(buckets, valid)
+    cols = cube_mod.delta_stat_columns(columns, valid, treatments, outcome)
+    lhi, llo, lstats, loverflow = _local_stat_table(hi, lo, cols, capacity)
+    ghi = jax.lax.all_gather(lhi, axis, tiled=True)
+    glo = jax.lax.all_gather(llo, axis, tiled=True)
+    gstats = {k: jax.lax.all_gather(v, axis, tiled=True)
+              for k, v in lstats.items()}
+    # full-length re-combine: the gathered table is tiny, so no second
+    # truncation (hence no combine-side overflow) is needed
+    g = groupby.group_by_key(ghi, glo)
+    sums = groupby.segment_sums(g, gstats)
+    any_overflow = jax.lax.pmax(loverflow.astype(jnp.int32), axis) > 0
+    return (g.group_hi, g.group_lo, sums, g.group_valid, g.n_groups,
+            any_overflow)
+
+
 def make_sharded_delta_build(mesh, specs: Mapping, treatments: Sequence[str],
                              outcome: str, capacity: int,
                              axis: str = "data"):
@@ -143,121 +171,141 @@ def make_sharded_delta_build(mesh, specs: Mapping, treatments: Sequence[str],
     ``capacity`` (the combined table is then incomplete and the caller must
     fall back to an exact host-side build).
     """
-    from repro.core import cube as cube_mod
+    import functools
+
     from repro.core.cem import make_codec
-    from repro.core.coarsen import coarsen_columns
 
     codec = make_codec(specs)
-    specs = dict(specs)
-    treatments = tuple(treatments)
-
-    def shard_body(columns, valid):
-        buckets = coarsen_columns(columns, specs)
-        hi, lo = codec.pack(buckets, valid)
-        cols = cube_mod.delta_stat_columns(columns, valid, treatments,
-                                           outcome)
-        lhi, llo, lstats, loverflow = _local_stat_table(
-            hi, lo, cols, capacity)
-        ghi = jax.lax.all_gather(lhi, axis, tiled=True)
-        glo = jax.lax.all_gather(llo, axis, tiled=True)
-        gstats = {k: jax.lax.all_gather(v, axis, tiled=True)
-                  for k, v in lstats.items()}
-        # full-length re-combine: the gathered table is tiny, so no second
-        # truncation (hence no combine-side overflow) is needed
-        g = groupby.group_by_key(ghi, glo)
-        sums = groupby.segment_sums(g, gstats)
-        any_overflow = jax.lax.pmax(loverflow.astype(jnp.int32), axis) > 0
-        return (g.group_hi, g.group_lo, sums, g.group_valid, g.n_groups,
-                any_overflow)
+    body = functools.partial(_sharded_delta_body, codec=codec,
+                             specs=dict(specs),
+                             treatments=tuple(treatments), outcome=outcome,
+                             capacity=capacity, axis=axis)
 
     from jax.experimental.shard_map import shard_map
-    fn = shard_map(shard_body, mesh=mesh,
+    fn = shard_map(body, mesh=mesh,
                    in_specs=(P(axis), P(axis)),
                    out_specs=(P(), P(), P(), P(), P(), P()),
                    check_rep=False)
-    return jax.jit(fn)
+    from repro.launch.trace import counted_jit
+    return counted_jit(fn)
 
 
 # ===================== routed (partitioned) delta build =====================
+def _routed_delta_body(columns, valid, *, codec, specs, treatments, outcome,
+                       capacity, view_items, n_parts, n_dev, axis):
+    """Per-device shard body of the routed delta build, generalized to
+    ``n_parts = k * n_dev`` key-range partitions (k contiguous ranges per
+    device). Per view: roll the local stat table up to the view's dims,
+    bucket rows by OWNER DEVICE (``partition_ids(...) // k`` — partitions
+    are contiguous hash ranges, so a device's k partitions are one
+    contiguous range too), exchange buckets with one ``all_to_all``, then
+    re-group what arrived into the k local partition tables. Exposed
+    standalone so the fused single-dispatch ingest composes it; wrapped by
+    :func:`make_routed_delta_build` for standalone dispatch."""
+    from repro.core import cube as cube_mod
+    from repro.core.coarsen import coarsen_columns
+    from repro.core.keys import INVALID_HI, INVALID_LO
+
+    base_name = view_items[0][0]
+    k = n_parts // n_dev
+    me = jax.lax.axis_index(axis)
+
+    buckets = coarsen_columns(columns, specs)
+    hi, lo = codec.pack(buckets, valid)
+    cols = cube_mod.delta_stat_columns(columns, valid, treatments, outcome)
+    lhi, llo, lstats, overflow = _local_stat_table(hi, lo, cols, capacity)
+    lgv = ~((lhi == INVALID_HI) & (llo == INVALID_LO))
+    deltas = {}
+    n_full = jnp.int32(0)
+    for name, dims in view_items:
+        if name == base_name:
+            vhi, vlo, vstats, vgv = lhi, llo, lstats, lgv
+        else:
+            roll = cube_mod._rollup_fn(codec, dims)
+            vhi, vlo, vstats, vgv = roll(lhi, llo, lgv, lstats)
+        # bucket by owner DEVICE, exchange buckets with one all-to-all
+        pid = cube_mod.partition_ids(vhi, vlo, n_parts)
+        dev = pid // jnp.int32(k)
+        own = vgv[None, :] & (dev[None, :] == jnp.arange(n_dev)[:, None])
+        bhi = jnp.where(own, vhi[None, :], INVALID_HI)
+        blo = jnp.where(own, vlo[None, :], INVALID_LO)
+        bstats = {c: jnp.where(own, v[None, :], 0.0)
+                  for c, v in vstats.items()}
+        rhi = jax.lax.all_to_all(bhi, axis, 0, 0, tiled=True).reshape(-1)
+        rlo = jax.lax.all_to_all(blo, axis, 0, 0, tiled=True).reshape(-1)
+        rstats = {c: jax.lax.all_to_all(v, axis, 0, 0,
+                                        tiled=True).reshape(-1)
+                  for c, v in bstats.items()}
+        # re-group arrivals into the k LOCAL partition tables (partition
+        # ownership is a pure function of the key, recomputed on arrival)
+        rgv = ~((rhi == INVALID_HI) & (rlo == INVALID_LO))
+        rpid = cube_mod.partition_ids(rhi, rlo, n_parts)
+        parts_hi, parts_lo, parts_gv = [], [], []
+        parts_stats = {c: [] for c in rstats}
+        n_view = jnp.int32(0)
+        for j in range(k):
+            ownj = rgv & (rpid == me * k + j)
+            phi = jnp.where(ownj, rhi, INVALID_HI)
+            plo = jnp.where(ownj, rlo, INVALID_LO)
+            g = groupby.group_by_key(phi, plo)
+            sums = groupby.segment_sums(
+                g, {c: jnp.where(ownj, v, 0.0) for c, v in rstats.items()})
+            overflow = overflow | (g.n_groups > capacity)
+            n_view = n_view + g.n_groups
+            parts_hi.append(g.group_hi[:capacity])
+            parts_lo.append(g.group_lo[:capacity])
+            parts_gv.append(g.group_valid[:capacity])
+            for c in rstats:
+                parts_stats[c].append(sums[c][:capacity])
+        if name == base_name:
+            n_full = jax.lax.psum(n_view, axis)
+        deltas[name] = (jnp.stack(parts_hi), jnp.stack(parts_lo),
+                        {c: jnp.stack(v) for c, v in parts_stats.items()},
+                        jnp.stack(parts_gv))
+    any_overflow = jax.lax.pmax(overflow.astype(jnp.int32), axis) > 0
+    return deltas, n_full, any_overflow
+
+
 def make_routed_delta_build(mesh, specs: Mapping, treatments: Sequence[str],
                             outcome: str, capacity: int,
                             view_dims: Mapping[str, Sequence[str]],
-                            axis: str = "data"):
+                            axis: str = "data", n_parts: int = None):
     """Delta build for PARTITIONED materialized views: instead of
     all-gathering every per-device stat table to every device (the
-    replicated path), each delta row is ROUTED to the single device that
-    owns its key-range partition via one all-to-all.
-
-    Per device: coarsen/pack/locally-aggregate its row shard once at base
-    granularity, roll the local table up to each view's dims (each view has
-    its own key space, so routing happens per view), bucket rows by owner
-    (``cube.partition_ids`` over the view key), exchange buckets with one
-    ``all_to_all`` over ``axis``, and re-combine what arrived — every
-    device then holds ONLY its partition's share of each view's delta.
+    replicated path), each delta row is ROUTED to the device that owns its
+    key-range partition via one all-to-all. ``n_parts`` (default: the
+    data-axis size) may be any multiple of the device count — each device
+    then owns ``k = n_parts / n_dev`` contiguous key ranges.
 
     ``view_dims`` maps view name -> dims; the FIRST entry is the base view
     and must list every dim (the others roll up from it). Returns a jitted
     ``f(columns, valid) -> (deltas, n_full, overflow)`` where
     ``deltas[name]`` is ``(hi, lo, stats, group_valid)`` with leading
-    ``(n_dev, capacity)`` partition axes sharded over ``axis``, ``n_full``
-    is the total distinct base-granularity delta groups, and ``overflow``
-    means some local or routed table was truncated (caller must fall back
-    to the exact host build)."""
+    ``(n_parts, capacity)`` partition axes sharded over ``axis``,
+    ``n_full`` is the total distinct base-granularity delta groups, and
+    ``overflow`` means some local or routed table was truncated (caller
+    must fall back to the exact host build)."""
+    import functools
+
     from repro.core import cube as cube_mod
     from repro.core.cem import make_codec
-    from repro.core.coarsen import coarsen_columns
-    from repro.core.keys import INVALID_HI, INVALID_LO
 
     codec = make_codec(specs)
-    specs = dict(specs)
-    treatments = tuple(treatments)
+    n_dev = int(mesh.shape[axis])
+    if n_parts is None:
+        n_parts = n_dev
+    if n_parts % n_dev != 0:
+        raise ValueError(f"n_parts={n_parts} must be a multiple of the "
+                         f"data-axis size {n_dev}")
     view_items = tuple((name, tuple(dims))
                        for name, dims in view_dims.items())
-    n_dev = int(mesh.shape[axis])
-    base_name = view_items[0][0]
     if set(view_items[0][1]) != set(codec.names):
         raise ValueError("first view_dims entry must cover every dim")
-
-    def shard_body(columns, valid):
-        buckets = coarsen_columns(columns, specs)
-        hi, lo = codec.pack(buckets, valid)
-        cols = cube_mod.delta_stat_columns(columns, valid, treatments,
-                                           outcome)
-        lhi, llo, lstats, overflow = _local_stat_table(hi, lo, cols,
-                                                       capacity)
-        lgv = ~((lhi == INVALID_HI) & (llo == INVALID_LO))
-        deltas = {}
-        n_full = jnp.int32(0)
-        for name, dims in view_items:
-            if name == base_name:
-                vhi, vlo, vstats, vgv = lhi, llo, lstats, lgv
-            else:
-                roll = cube_mod._rollup_fn(codec, dims)
-                vhi, vlo, vstats, vgv = roll(lhi, llo, lgv, lstats)
-            # bucket by owner, exchange buckets, re-combine what arrived
-            pid = cube_mod.partition_ids(vhi, vlo, n_dev)
-            own = vgv[None, :] & (pid[None, :]
-                                  == jnp.arange(n_dev)[:, None])
-            bhi = jnp.where(own, vhi[None, :], INVALID_HI)
-            blo = jnp.where(own, vlo[None, :], INVALID_LO)
-            bstats = {k: jnp.where(own, v[None, :], 0.0)
-                      for k, v in vstats.items()}
-            rhi = jax.lax.all_to_all(bhi, axis, 0, 0, tiled=True)
-            rlo = jax.lax.all_to_all(blo, axis, 0, 0, tiled=True)
-            rstats = {k: jax.lax.all_to_all(v, axis, 0, 0, tiled=True)
-                      for k, v in bstats.items()}
-            g = groupby.group_by_key(rhi.reshape(-1), rlo.reshape(-1))
-            sums = groupby.segment_sums(
-                g, {k: v.reshape(-1) for k, v in rstats.items()})
-            overflow = overflow | (g.n_groups > capacity)
-            if name == base_name:
-                n_full = jax.lax.psum(g.n_groups, axis)
-            deltas[name] = (g.group_hi[:capacity][None],
-                            g.group_lo[:capacity][None],
-                            {k: v[:capacity][None] for k, v in sums.items()},
-                            g.group_valid[:capacity][None])
-        any_overflow = jax.lax.pmax(overflow.astype(jnp.int32), axis) > 0
-        return deltas, n_full, any_overflow
+    body = functools.partial(_routed_delta_body, codec=codec,
+                             specs=dict(specs),
+                             treatments=tuple(treatments), outcome=outcome,
+                             capacity=capacity, view_items=view_items,
+                             n_parts=n_parts, n_dev=n_dev, axis=axis)
 
     from jax.experimental.shard_map import shard_map
     part = P(axis, None)
@@ -265,13 +313,12 @@ def make_routed_delta_build(mesh, specs: Mapping, treatments: Sequence[str],
                          {k: part for k in cube_mod.stat_names(treatments)},
                          part)
                   for name, _ in view_items}
-    fn = shard_map(shard_body, mesh=mesh,
-                   in_specs=({k: P(axis) for k in
-                              set(list(specs) + list(treatments)
-                                  + [outcome])}, P(axis)),
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis), P(axis)),
                    out_specs=(out_deltas, P(), P()),
                    check_rep=False)
-    return jax.jit(fn)
+    from repro.launch.trace import counted_jit
+    return counted_jit(fn)
 
 
 # ============================= ring k-NN ====================================

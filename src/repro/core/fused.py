@@ -1,0 +1,562 @@
+"""Single-dispatch device-resident ingest: the whole delta pipeline of the
+online engines as ONE compiled program per batch.
+
+The PR 3 hot path still issued a Python loop of XLA calls per ingest — a
+delta-build dispatch, a planner dispatch, per-view touch stamps — and fell
+back to the HOST for growth merges and eviction compaction. ZaliQL's core
+argument (PAPER.md §optimizations) is that the maintenance loop must live
+inside the engine so no per-operation round trip leaves the data plane;
+this module is that move for the jax port. One compiled program — a plain
+jit on one device, a single ``shard_map`` over the data axis on a mesh —
+takes the raw batch plus every view's state and internally does
+
+  coarsen -> pack -> group (delta stat table)
+  -> rollup per view -> route to owner partitions (all-to-all on a mesh)
+  -> per-view merge:  lax.cond( every delta key already materialized,
+         scatter-merge fast path,
+         concat + re-sort grow path at the current capacity )
+  -> incremental overlap flip -> touch stamp -> streaming-moments update
+  -> verdict scalars (ok / grew / overflow / neg_min / cache predicate)
+
+with BUFFER DONATION on every cuboid / keep / touch / reservoir array, so
+state updates in place instead of copy-merge-copy. The host fetches one
+fused ``device_get`` of the verdicts and commits by reference swap — the
+steady-state ingest is exactly one compiled dispatch
+(``repro.launch.trace`` counts them; ``tests/test_online_fused.py``
+asserts the invariant). On a mesh, EVERYTHING (including the merges) runs
+inside the one shard_map body: the only cross-device traffic is the
+routing all-to-all / gathering all-gather of the tiny delta tables plus
+scalar verdict reductions — the merge compute itself is per-device local
+code, never GSPMD-partitioned small ops.
+
+Growth is device-resident too: the re-sort branch merges at the CURRENT
+capacity and reports ``grew`` when the merged group count would not fit;
+the engine then pads the (pass-through, unmodified) state and re-dispatches
+the same program compiled at the doubled capacity — a recompile keyed on
+``(granule count, n_parts)``, so a stream that stops growing stops
+recompiling. Only the delta-capacity overflow (more distinct groups in one
+batch than the delta table holds) still falls back to the exact host
+rebuild, exactly as before.
+
+Programs are cached at module level (``functools.lru_cache``) keyed on the
+full schema + capacity signature, so every engine with the same shapes
+shares one compilation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cube as cube_mod
+from repro.core import groupby
+from repro.core.cem import overlap_keep, update_overlap
+from repro.core.keys import INVALID_HI, INVALID_LO
+from repro.core.propensity import _stream_retract, _stream_update
+from repro.launch.trace import counted_jit
+
+BASE_VIEW = "__base__"
+
+# renormalize int32 last-touch stamps when the ingest counter approaches
+# the int32 ceiling (see OnlineEngine._renorm_touch). The shift is at
+# least (counter - TOUCH_CLAMP_AGE): stamps older than that clamp to 0
+# ("at least this old" — exact for every ttl < TOUCH_CLAMP_AGE,
+# conservative beyond), which guarantees each renormalization buys
+# ~TOUCH_CLAMP_AGE further ingests even when a cold live group pins the
+# minimum stamp.
+TOUCH_RENORM_LIMIT = (1 << 31) - (1 << 16)
+TOUCH_CLAMP_AGE = 1 << 30
+
+
+# ------------------------------------------------------------ touch stamps
+def stamp_touch(touch: jnp.ndarray, pos: jnp.ndarray, dvalid: jnp.ndarray,
+                counter) -> jnp.ndarray:
+    """Record the current ingest counter at the touched group slots.
+    Invalid delta rows are routed out of bounds and dropped, so a clipped
+    lookup position can never stamp an unrelated live group."""
+    upd = jnp.where(dvalid, pos, touch.shape[0])
+    return touch.at[upd].set(jnp.int32(counter), mode="drop")
+
+
+def remap_touch(old_hi, old_lo, old_gv, new_hi, new_lo,
+                touch: jnp.ndarray) -> jnp.ndarray:
+    """Carry last-touch stamps across a layout-changing (re-sort) merge."""
+    pos, found = groupby.lookup_rows_in_table(old_hi, old_lo, new_hi, new_lo)
+    upd = jnp.where(old_gv & found, pos, new_hi.shape[0])
+    return jnp.zeros((new_hi.shape[0],), touch.dtype).at[upd].set(
+        touch, mode="drop")
+
+
+# ----------------------------------------------------------- merge kernels
+def _merge_one_view(tname, st, d_hi, d_lo, d_stats, d_gv, counter,
+                    use_pallas: bool):
+    """One view's merge as a device-side branch: scatter fast path when
+    every delta key is already materialized, concat + re-sort grow path at
+    the CURRENT capacity otherwise (``grew`` reports a would-not-fit).
+
+    ``st`` is the view's state dict; ``tname`` is None for the base view
+    (which carries no overlap mask). Returns (new_st, verdicts)."""
+    cap = st["hi"].shape[0]
+    pos, found = groupby.lookup_rows_in_table(d_hi, d_lo, st["hi"], st["lo"])
+    ok = jnp.all(found | ~d_gv)
+    has_keep = st.get("keep") is not None
+
+    def fast(_):
+        mstats = cube_mod.scatter_merge_stats(st["stats"], pos, d_stats,
+                                              use_pallas=use_pallas)
+        if has_keep:
+            nt = mstats[f"t_{tname}"]
+            keep = update_overlap(st["keep"], st["gv"], nt,
+                                  mstats["one"] - nt, pos)
+        else:
+            keep = None
+        touch = stamp_touch(st["touch"], pos, d_gv, counter)
+        return (st["hi"], st["lo"], mstats, st["gv"], keep, touch, pos,
+                jnp.int32(0))
+
+    def slow(_):
+        cat_hi = jnp.concatenate([st["hi"], d_hi])
+        cat_lo = jnp.concatenate([st["lo"], d_lo])
+        g = groupby.group_by_key(cat_hi, cat_lo)
+        sums = groupby.segment_sums(
+            g, {k: jnp.concatenate([st["stats"][k], d_stats[k]])
+                for k in st["stats"]})
+        n_merged = g.n_groups
+        nhi, nlo, ngv = g.group_hi[:cap], g.group_lo[:cap], g.group_valid[:cap]
+        nstats = {k: v[:cap] for k, v in sums.items()}
+        pos2, _ = groupby.lookup_rows_in_table(d_hi, d_lo, nhi, nlo)
+        if has_keep:
+            nt = nstats[f"t_{tname}"]
+            keep = overlap_keep(ngv, nt, nstats["one"] - nt)
+        else:
+            keep = None
+        touch = stamp_touch(
+            remap_touch(st["hi"], st["lo"], st["gv"], nhi, nlo, st["touch"]),
+            pos2, d_gv, counter)
+        return nhi, nlo, nstats, ngv, keep, touch, pos2, n_merged
+
+    hi, lo, stats, gv, keep, touch, pos_out, n_merged = jax.lax.cond(
+        ok, fast, slow, None)
+    new_st = dict(hi=hi, lo=lo, stats=stats, gv=gv, touch=touch)
+    if has_keep:
+        new_st["keep"] = keep
+    return new_st, dict(ok=ok, grew=n_merged > cap, n_merged=n_merged,
+                        pos=pos_out, merged_stats=stats)
+
+
+def _merge_one_view_parts(tname, st, d_hi, d_lo, d_stats, d_gv, counter,
+                          use_pallas: bool, axis=None):
+    """Partitioned analogue of :func:`_merge_one_view`: state is (P, C)
+    (the LOCAL (k, C) slice inside a shard_map body), routed deltas
+    (P, B); the fast/slow decision is GLOBAL per view — one scalar over
+    all partitions on all devices (``axis`` names the mesh axis for the
+    cross-device reduction), matching the PR 3 planner verdicts — so the
+    cond lifts outside the per-partition vmap and the untaken branch never
+    executes."""
+    cap = st["hi"].shape[1]
+    pos, found = jax.vmap(groupby.lookup_rows_in_table)(
+        d_hi, d_lo, st["hi"], st["lo"])
+    ok = jnp.all(found | ~d_gv)
+    if axis is not None:
+        ok = jax.lax.pmin(ok.astype(jnp.int32), axis) > 0
+    has_keep = st.get("keep") is not None
+
+    def fast(_):
+        mstats = cube_mod.scatter_merge_stats_parts(
+            st["stats"], pos, d_stats, use_pallas=use_pallas)
+        if has_keep:
+            nt = mstats[f"t_{tname}"]
+            keep = jax.vmap(update_overlap)(st["keep"], st["gv"], nt,
+                                            mstats["one"] - nt, pos)
+        else:
+            keep = None
+        touch = jax.vmap(stamp_touch, in_axes=(0, 0, 0, None))(
+            st["touch"], pos, d_gv, counter)
+        return (st["hi"], st["lo"], mstats, st["gv"], keep, touch, pos,
+                jnp.int32(0))
+
+    def slow(_):
+        def one(thi, tlo, tstats, tgv, dhi, dlo, dstats, dgv, tch):
+            cat_hi = jnp.concatenate([thi, dhi])
+            cat_lo = jnp.concatenate([tlo, dlo])
+            g = groupby.group_by_key(cat_hi, cat_lo)
+            sums = groupby.segment_sums(
+                g, {k: jnp.concatenate([tstats[k], dstats[k]])
+                    for k in tstats})
+            nhi, nlo = g.group_hi[:cap], g.group_lo[:cap]
+            nstats = {k: v[:cap] for k, v in sums.items()}
+            p2, _ = groupby.lookup_rows_in_table(dhi, dlo, nhi, nlo)
+            tch2 = stamp_touch(remap_touch(thi, tlo, tgv, nhi, nlo, tch),
+                               p2, dgv, counter)
+            return (nhi, nlo, nstats, g.group_valid[:cap], tch2, p2,
+                    g.n_groups)
+
+        nhi, nlo, nstats, ngv, touch, pos2, nm = jax.vmap(one)(
+            st["hi"], st["lo"], st["stats"], st["gv"], d_hi, d_lo, d_stats,
+            d_gv, st["touch"])
+        if has_keep:
+            nt = nstats[f"t_{tname}"]
+            keep = jax.vmap(overlap_keep)(ngv, nt, nstats["one"] - nt)
+        else:
+            keep = None
+        return nhi, nlo, nstats, ngv, keep, touch, pos2, jnp.max(nm)
+
+    hi, lo, stats, gv, keep, touch, pos_out, n_merged = jax.lax.cond(
+        ok, fast, slow, None)
+    if axis is not None:
+        # cond branches hold no collectives; globalize the verdicts after
+        n_merged = jax.lax.pmax(n_merged, axis)
+    new_st = dict(hi=hi, lo=lo, stats=stats, gv=gv, touch=touch)
+    if has_keep:
+        new_st["keep"] = keep
+    return new_st, dict(ok=ok, grew=n_merged > cap, n_merged=n_merged,
+                        pos=pos_out, merged_stats=stats)
+
+
+def _neg_min(stats: Dict[str, jnp.ndarray], tnames, axis=None):
+    """Minimum over every count column — the retraction-negativity probe."""
+    cols = [stats["one"]] + [stats[f"t_{t}"] for t in tnames]
+    m = jnp.min(jnp.stack([jnp.min(c) for c in cols]))
+    return m if axis is None else jax.lax.pmin(m, axis)
+
+
+def _gate(commit, new_tree, old_tree):
+    """Select committed-vs-pass-through state leaf-wise. XLA still aliases
+    the donated input buffers; the untaken value only costs the select."""
+    return jax.tree.map(lambda n, o: jnp.where(commit, n, o),
+                        new_tree, old_tree)
+
+
+def _stream_step(stream, stream_names, columns, valid, retract, seed,
+                 n_batches):
+    """Streaming-propensity update (moments + reservoir) inside the fused
+    program — the last separate dispatch of the PR 3 ingest path.
+
+    Always runs over the FULL, UNPADDED batch (in the mesh programs it
+    therefore sits OUTSIDE the shard_map body, gated by the replicated
+    commit scalar): the stream state is replicated, and the reservoir's
+    uniform priorities depend on the draw SHAPE, so only the original
+    batch length reproduces the host path bit for bit."""
+    cols = {c: columns[c] for c in stream_names}
+    if retract:
+        res, pri, n, sums, sumsqs = _stream_retract(
+            stream_names, stream["res"], stream["pri"], stream["n"],
+            stream["sums"], stream["sumsqs"], cols, valid)
+    else:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), n_batches)
+        res, pri, n, sums, sumsqs = _stream_update(
+            stream_names, stream["res"], stream["pri"], stream["n"],
+            stream["sums"], stream["sumsqs"], cols, valid, key)
+    return dict(res=res, pri=pri, n=n, sums=sums, sumsqs=sumsqs)
+
+
+def _pad_batch(columns, valid, ndev: int):
+    n = valid.shape[0]
+    pad = (-n) % ndev
+    if pad:
+        columns = {k: jnp.pad(v, (0, pad)) for k, v in columns.items()}
+        valid = jnp.pad(valid, (0, pad))
+    return columns, valid
+
+
+# ===================== replicated single-dispatch ingest ====================
+@functools.lru_cache(maxsize=128)
+def get_fused_ingest(codec, specs_items, tnames: Tuple[str, ...],
+                     view_dims: Tuple, outcome: str, caps: Tuple,
+                     delta_cap: int, mesh, mesh_axis: str, use_pallas: bool,
+                     retract: bool, stream_names: Tuple[str, ...],
+                     seed: int):
+    """One-dispatch ingest program for the REPLICATED engine.
+
+    view_dims: ((name, dims), ...) with the base view first; caps:
+    ((name, capacity), ...) — part of the cache key, so capacity growth
+    recompiles and a stable stream reuses one executable. stream_names=()
+    disables the reservoir section. The state argument is DONATED. On a
+    mesh the whole pipeline — sharded build AND merges — is one shard_map
+    body (merges replicated per-device local code; no GSPMD-sharded small
+    ops)."""
+    del caps  # cache key only: capacities are read off the state shapes
+    specs = dict(specs_items)
+    ndev = 1 if mesh is None else int(mesh.shape[mesh_axis])
+    rollups = {name: dims for name, dims in view_dims if name != BASE_VIEW}
+
+    def local_build(columns, valid):
+        hi, lo, sums, gv, n_groups = cube_mod.delta_build_body(
+            columns, valid, codec=codec, specs=specs, treatments=tnames,
+            outcome=outcome)
+        return hi, lo, sums, gv, n_groups, jnp.asarray(False)
+
+    def merge_and_gate(delta, views, counter):
+        """Everything after the delta build except the stream update —
+        pure per-device local compute, shared verbatim by the 1-device and
+        shard_map paths."""
+        hi, lo, stats, gv, n_full, overflow = delta
+        dcap = delta_cap
+        d_hi, d_lo, d_gv = hi[:dcap], lo[:dcap], gv[:dcap]
+        d_stats = {k: v[:dcap] for k, v in stats.items()}
+        overflow = overflow | (n_full > dcap)
+        if retract:
+            d_stats = {k: -v for k, v in d_stats.items()}
+        new_views, verdicts = {}, {}
+        for name in (BASE_VIEW,) + tnames:
+            if name == BASE_VIEW:
+                v_hi, v_lo, v_stats, v_gv = d_hi, d_lo, d_stats, d_gv
+            else:
+                roll = cube_mod._rollup_fn(codec, rollups[name])
+                v_hi, v_lo, v_stats, v_gv = roll(d_hi, d_lo, d_gv, d_stats)
+            tname = None if name == BASE_VIEW else name
+            new_views[name], verdicts[name] = _merge_one_view(
+                tname, views[name], v_hi, v_lo, v_stats, v_gv,
+                counter, use_pallas)
+        all_ok = functools.reduce(
+            jnp.logical_and, [v["ok"] for v in verdicts.values()])
+        any_grew = functools.reduce(
+            jnp.logical_or, [v["grew"] for v in verdicts.values()])
+        neg = _neg_min(verdicts[BASE_VIEW]["merged_stats"], tnames)
+        commit = ~overflow & ~any_grew
+        if retract:
+            commit = commit & all_ok & (neg >= -0.5)
+        out = dict(
+            overflow=overflow, n_full=n_full, commit=commit, neg_min=neg,
+            ok={k: v["ok"] for k, v in verdicts.items()},
+            grew={k: v["grew"] for k, v in verdicts.items()},
+            n_merged={k: v["n_merged"] for k, v in verdicts.items()},
+            n_delta=jnp.sum(d_gv.astype(jnp.int32)),
+            gv=d_gv,
+            buckets={d: codec.extract(d_hi, d_lo, d) for d in codec.names})
+        return _gate(commit, new_views, views), out
+
+    def finish(new_views, out, state, columns, valid, n_batches):
+        """Attach the stream update (full UNPADDED batch — reservoir
+        priorities depend on the draw shape) gated by the commit scalar."""
+        new_state = dict(views=new_views)
+        if stream_names:
+            upd = _stream_step(state["stream"], stream_names, columns,
+                               valid, retract, seed, n_batches)
+            new_state["stream"] = _gate(out["commit"], upd,
+                                        state["stream"])
+        return new_state, out
+
+    if ndev > 1:
+        from jax.experimental.shard_map import shard_map
+
+        from repro.core.distributed import _sharded_delta_body
+        build = functools.partial(_sharded_delta_body, codec=codec,
+                                  specs=specs, treatments=tnames,
+                                  outcome=outcome, capacity=delta_cap,
+                                  axis=mesh_axis)
+
+        def body(columns, valid, views, counter):
+            return merge_and_gate(build(columns, valid), views, counter)
+
+        def program(columns, valid, state, counter, n_batches):
+            pcols, pvalid = _pad_batch(columns, valid, ndev)
+            new_views, out = shard_map(
+                body, mesh=mesh,
+                in_specs=(P(mesh_axis), P(mesh_axis), P(), P()),
+                out_specs=(P(), P()),
+                check_rep=False)(pcols, pvalid, state["views"], counter)
+            return finish(new_views, out, state, columns, valid, n_batches)
+    else:
+        def program(columns, valid, state, counter, n_batches):
+            new_views, out = merge_and_gate(local_build(columns, valid),
+                                            state["views"], counter)
+            return finish(new_views, out, state, columns, valid, n_batches)
+
+    return counted_jit(program, donate_argnums=(2,))
+
+
+# ===================== partitioned single-dispatch ingest ===================
+@functools.lru_cache(maxsize=128)
+def get_fused_ingest_parts(codec, specs_items, tnames: Tuple[str, ...],
+                           view_dims: Tuple, outcome: str, caps: Tuple,
+                           delta_cap: int, n_parts: int, mesh,
+                           mesh_axis: str, use_pallas: bool, retract: bool,
+                           stream_names: Tuple[str, ...], seed: int):
+    """One-dispatch ingest program for the PARTITIONED engine: routed
+    delta build (all-to-all on a mesh, in-program regroup off one) composed
+    with the per-partition merges, overlap flips, touch stamps and verdict
+    scalars — the whole maintenance loop of one batch in one executable,
+    with the (P, C) state donated in place. ``n_parts`` may be any multiple
+    of the mesh data-axis size: each device owns ``k = n_parts / N``
+    contiguous key ranges (k-partitions-per-device). On a mesh the whole
+    pipeline is ONE shard_map body: state enters as the local (k, C)
+    slice, merges are partition-local, and only the delta routing
+    (all-to-all) plus scalar verdict reductions cross devices."""
+    del caps  # cache key only
+    specs = dict(specs_items)
+    ndev = 1 if mesh is None else int(mesh.shape[mesh_axis])
+    view_items = tuple(view_dims)
+
+    def merge_and_gate(deltas, n_full, overflow, views, counter, axis):
+        new_views, verdicts = {}, {}
+        for name, _ in view_items:
+            d_hi, d_lo, d_stats, d_gv = deltas[name]
+            if retract:
+                d_stats = {k: -v for k, v in d_stats.items()}
+                deltas[name] = (d_hi, d_lo, d_stats, d_gv)
+            tname = None if name == BASE_VIEW else name
+            new_views[name], verdicts[name] = _merge_one_view_parts(
+                tname, views[name], d_hi, d_lo, d_stats, d_gv,
+                counter, use_pallas, axis=axis)
+        all_ok = functools.reduce(
+            jnp.logical_and, [v["ok"] for v in verdicts.values()])
+        any_grew = functools.reduce(
+            jnp.logical_or, [v["grew"] for v in verdicts.values()])
+        neg = _neg_min(verdicts[BASE_VIEW]["merged_stats"], tnames,
+                       axis=axis)
+        commit = ~overflow & ~any_grew
+        if retract:
+            commit = commit & all_ok & (neg >= -0.5)
+        b_gv = deltas[BASE_VIEW][3]
+        n_delta = jnp.sum(b_gv.astype(jnp.int32))
+        if axis is not None:
+            n_delta = jax.lax.psum(n_delta, axis)
+        out = dict(
+            overflow=overflow, n_full=n_full, commit=commit, neg_min=neg,
+            ok={k: v["ok"] for k, v in verdicts.items()},
+            grew={k: v["grew"] for k, v in verdicts.items()},
+            n_merged={k: v["n_merged"] for k, v in verdicts.items()},
+            n_delta=n_delta,
+            gv=b_gv,
+            buckets={d: codec.extract(deltas[BASE_VIEW][0],
+                                      deltas[BASE_VIEW][1], d)
+                     for d in codec.names})
+        return _gate(commit, new_views, views), out
+
+    def finish(new_views, out, state, columns, valid, n_batches):
+        new_state = dict(views=new_views)
+        if stream_names:
+            upd = _stream_step(state["stream"], stream_names, columns,
+                               valid, retract, seed, n_batches)
+            new_state["stream"] = _gate(out["commit"], upd,
+                                        state["stream"])
+        return new_state, out
+
+    if ndev > 1:
+        from jax.experimental.shard_map import shard_map
+
+        from repro.core.distributed import _routed_delta_body
+        build = functools.partial(
+            _routed_delta_body, codec=codec, specs=specs,
+            treatments=tnames, outcome=outcome, capacity=delta_cap,
+            view_items=view_items, n_parts=n_parts, n_dev=ndev,
+            axis=mesh_axis)
+
+        def body(columns, valid, views, counter):
+            deltas, n_full, overflow = build(columns, valid)
+            return merge_and_gate(deltas, n_full, overflow, views, counter,
+                                  mesh_axis)
+
+        part = P(mesh_axis, None)
+        out_spec = dict(overflow=P(), n_full=P(), commit=P(), neg_min=P(),
+                        ok=P(), grew=P(), n_merged=P(), n_delta=P(),
+                        gv=part, buckets=part)
+
+        def program(columns, valid, state, counter, n_batches):
+            pcols, pvalid = _pad_batch(columns, valid, ndev)
+            new_views, out = shard_map(
+                body, mesh=mesh,
+                in_specs=(P(mesh_axis), P(mesh_axis), part, P()),
+                out_specs=(part, out_spec),
+                check_rep=False)(pcols, pvalid, state["views"], counter)
+            return finish(new_views, out, state, columns, valid, n_batches)
+    else:
+        def single_build(columns, valid):
+            hi, lo, sums, gv, n_groups = cube_mod.delta_build_body(
+                columns, valid, codec=codec, specs=specs,
+                treatments=tnames, outcome=outcome)
+            dcap = delta_cap
+            b_hi, b_lo, b_gv = hi[:dcap], lo[:dcap], gv[:dcap]
+            b_stats = {k: v[:dcap] for k, v in sums.items()}
+            deltas = {}
+            for name, dims in view_items:
+                if name == BASE_VIEW:
+                    v = (b_hi, b_lo, b_stats, b_gv)
+                else:
+                    roll = cube_mod._rollup_fn(codec, dims)
+                    v = roll(b_hi, b_lo, b_gv, b_stats)
+                deltas[name] = cube_mod.route_delta(*v, n_parts)
+            return deltas, n_groups, n_groups > dcap
+
+        def program(columns, valid, state, counter, n_batches):
+            deltas, n_full, overflow = single_build(columns, valid)
+            new_views, out = merge_and_gate(deltas, n_full, overflow,
+                                            state["views"], counter, None)
+            return finish(new_views, out, state, columns, valid, n_batches)
+
+    return counted_jit(program, donate_argnums=(2,))
+
+
+# ===================== device-resident eviction compaction ==================
+def _compact_one(hi, lo, stats, gv, touch, keep_mask):
+    """Capacity-preserving device compaction of one sorted stat table:
+    dropped groups take the invalid-key marker, a stable re-sort pushes
+    them to the tail, and stats/touch are carried by exact GATHER (keys are
+    unique, so no float re-summation — surviving groups are bit-identical,
+    in the same canonical key order the host compaction produced)."""
+    new_gv = gv & keep_mask
+    chi = jnp.where(new_gv, hi, INVALID_HI)
+    clo = jnp.where(new_gv, lo, INVALID_LO)
+    g = groupby.group_by_key(chi, clo)
+    out_stats = {k: jnp.where(new_gv, v, 0.0)[g.perm]
+                 for k, v in stats.items()}
+    out_touch = jnp.where(g.group_valid, touch[g.perm], 0)
+    return g.group_hi, g.group_lo, out_stats, g.group_valid, out_touch
+
+
+@functools.lru_cache(maxsize=128)
+def get_fused_evict(tnames: Tuple[str, ...], caps: Tuple, n_parts: int,
+                    mesh, mesh_axis: str, has_stream: bool):
+    """One-dispatch TTL eviction for every view at once: keep-mask from the
+    touch stamps, per-partition device compaction (n_parts == 0 marks the
+    replicated (C,) layout), overlap recompute, per-view evicted counts as
+    the only fetched scalars. State is DONATED — eviction, like ingest,
+    updates in place. On a mesh, runs as one shard_map body over the local
+    partition slices (replicated state: local full copy). Closes ROADMAP
+    open item "eviction compaction runs on the host per partition"."""
+    del caps  # part of the cache key only (shapes differ per capacity)
+    ndev = 1 if mesh is None else int(mesh.shape[mesh_axis])
+    on_mesh = ndev > 1
+
+    def body(state, cutoff):
+        new_views, counts = {}, {}
+        for name, st in state["views"].items():
+            keep_mask = st["touch"] >= cutoff
+            n_evict = jnp.sum((st["gv"] & ~keep_mask).astype(jnp.int32))
+            if on_mesh and n_parts:
+                n_evict = jax.lax.psum(n_evict, mesh_axis)
+            counts[name] = n_evict
+            fn = _compact_one if n_parts == 0 else jax.vmap(_compact_one)
+            hi, lo, stats, gv, touch = fn(st["hi"], st["lo"], st["stats"],
+                                          st["gv"], st["touch"], keep_mask)
+            new_st = dict(hi=hi, lo=lo, stats=stats, gv=gv, touch=touch)
+            if st.get("keep") is not None:
+                nt = stats[f"t_{name}"]
+                ov = (overlap_keep if n_parts == 0
+                      else jax.vmap(overlap_keep))
+                new_st["keep"] = ov(gv, nt, stats["one"] - nt)
+            new_views[name] = new_st
+        new_state = dict(state)
+        new_state["views"] = new_views
+        return new_state, counts
+
+    if on_mesh:
+        from jax.experimental.shard_map import shard_map
+        view_spec = P(mesh_axis, None) if n_parts else P()
+        state_spec = dict(views=view_spec)
+        if has_stream:
+            state_spec["stream"] = P()
+
+        def program(state, cutoff):
+            return shard_map(body, mesh=mesh,
+                             in_specs=(state_spec, P()),
+                             out_specs=(state_spec, P()),
+                             check_rep=False)(state, cutoff)
+    else:
+        program = body
+
+    return counted_jit(program, donate_argnums=(0,))

@@ -146,7 +146,10 @@ def scatter_add_stats(stats: Mapping[str, jnp.ndarray], pos: jnp.ndarray,
             for k, v in stats.items()}
 
 
-@jax.jit
+from repro.launch.trace import counted_jit  # noqa: E402
+
+
+@counted_jit
 def lookup_rows_in_table(hi: jnp.ndarray, lo: jnp.ndarray,
                          table_hi: jnp.ndarray, table_lo: jnp.ndarray
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -43,6 +43,18 @@ under streaming INSERTs with work proportional to the DELTA, not the data:
      invalidation predicate all come back from the device in a single
      ``device_get`` (:func:`_plan_ingest`), instead of one blocking
      device->host read per merge serializing dispatch every batch.
+  7. ONE COMPILED DISPATCH PER INGEST (``pipeline="fused1"``, the default)
+     — the whole maintenance loop of a batch (delta build, rollups,
+     routing, merges incl. the re-sort grow path, overlap flips, touch
+     stamps, streaming-propensity update, verdict scalars) is one donated
+     device program (:mod:`repro.core.fused`): state updates in place, the
+     host fetches one verdict ``device_get`` and commits by reference
+     swap. Growth recompiles the program at a doubled capacity (keyed on
+     the granule count) and re-dispatches; only delta-capacity overflow
+     still falls back to the exact host rebuild. ``pipeline="planner"``
+     keeps the PR 3 two-dispatch planner path and ``pipeline="unfused"``
+     the legacy per-merge-sync loop, both measurable in
+     ``benchmarks/bench_online.py``.
 
 The maintained state is EXACT: after any number of ingested batches, every
 cuboid stat, CEM matched set and ATE equals the offline computation over
@@ -64,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cube as cube_mod
+from repro.core import fused as fused_mod
 from repro.core import groupby
 from repro.core.ate import ATEEstimate, estimate_ate_from_stats
 from repro.core.cem import (CEMGroups, make_codec, overlap_keep, pack_keys,
@@ -72,8 +85,9 @@ from repro.core.coarsen import CoarsenSpec
 from repro.core.propensity import (LogisticModel, StreamStats, design_matrix,
                                    fit_logistic)
 from repro.data.columnar import GrowableTable, Table, _round_capacity
+from repro.launch.trace import counted_jit
 
-BASE_VIEW = "__base__"
+BASE_VIEW = fused_mod.BASE_VIEW
 
 # Canonical capacity granule of the query path: estimates are computed over
 # a key-sorted stat vector compacted to a capacity derived from CONTENT
@@ -117,6 +131,9 @@ class _View:
         """Uniform accessor over replicated/partitioned view state."""
         return self.cuboid
 
+    def set_table(self, tab) -> None:
+        self.cuboid = tab
+
 
 @dataclasses.dataclass
 class _PartView:
@@ -130,6 +147,9 @@ class _PartView:
     @property
     def table(self):
         return self.pcub
+
+    def set_table(self, tab) -> None:
+        self.pcub = tab
 
 
 def _estimate_view(cub: cube_mod.Cuboid, keep: jnp.ndarray, treatment: str,
@@ -162,31 +182,23 @@ def _estimate_view(cub: cube_mod.Cuboid, keep: jnp.ndarray, treatment: str,
                                    sum_yy_t=yyt, sum_yy_c=yyc)
 
 
-def _stamp_touch(touch: jnp.ndarray, pos: jnp.ndarray, dvalid: jnp.ndarray,
-                 counter: int) -> jnp.ndarray:
-    """Record the current ingest counter at the touched group slots.
-    Invalid delta rows are routed out of bounds and dropped, so a clipped
-    lookup position can never stamp an unrelated live group."""
-    upd = jnp.where(dvalid, pos, touch.shape[0])
-    return touch.at[upd].set(jnp.int32(counter), mode="drop")
+# Touch-stamp helpers: the pure bodies live in ``repro.core.fused`` (the
+# single-dispatch program traces them inline); these counted-jit wrappers
+# are the standalone dispatches the planner/unfused paths still issue, so
+# the dispatch counter (repro.launch.trace) accounts for them.
+_stamp_touch = counted_jit(fused_mod.stamp_touch)
+_remap_touch_arrays = counted_jit(fused_mod.remap_touch)
+_stamp_touch_parts = counted_jit(
+    jax.vmap(fused_mod.stamp_touch, in_axes=(0, 0, 0, None)))
+_remap_touch_parts_arrays = counted_jit(jax.vmap(fused_mod.remap_touch))
 
 
 def _remap_touch(old_cub: cube_mod.Cuboid, new_cub: cube_mod.Cuboid,
                  touch: jnp.ndarray) -> jnp.ndarray:
     """Carry last-touch stamps across a layout-changing (re-sort) merge."""
-    pos, found = groupby.lookup_rows_in_table(
-        old_cub.key_hi, old_cub.key_lo, new_cub.key_hi, new_cub.key_lo)
-    upd = jnp.where(old_cub.group_valid & found, pos, new_cub.capacity)
-    return jnp.zeros((new_cub.capacity,), touch.dtype).at[upd].set(
-        touch, mode="drop")
-
-
-def _stamp_touch_parts(touch: jnp.ndarray, pos: jnp.ndarray,
-                       dvalid: jnp.ndarray, counter: int) -> jnp.ndarray:
-    """Per-partition :func:`_stamp_touch` over (P, C) touch tables: routed
-    delta positions index their own partition's table only."""
-    return jax.vmap(_stamp_touch, in_axes=(0, 0, 0, None))(
-        touch, pos, dvalid, counter)
+    return _remap_touch_arrays(old_cub.key_hi, old_cub.key_lo,
+                               old_cub.group_valid, new_cub.key_hi,
+                               new_cub.key_lo, touch)
 
 
 def _remap_touch_parts(old: cube_mod.PartitionedCuboid,
@@ -195,23 +207,17 @@ def _remap_touch_parts(old: cube_mod.PartitionedCuboid,
     """Carry (P, C) last-touch stamps across a per-partition re-sort merge
     or compaction. Keys never change partition (the owner is a pure
     function of the key), so the remap is partition-local."""
-
-    def one(ohi, olo, ogv, nhi, nlo, t):
-        pos, found = groupby.lookup_rows_in_table(ohi, olo, nhi, nlo)
-        upd = jnp.where(ogv & found, pos, nhi.shape[0])
-        return jnp.zeros((nhi.shape[0],), t.dtype).at[upd].set(
-            t, mode="drop")
-
-    return jax.vmap(one)(old.key_hi, old.key_lo, old.group_valid,
-                         new.key_hi, new.key_lo, touch)
+    return _remap_touch_parts_arrays(old.key_hi, old.key_lo, old.group_valid,
+                                     new.key_hi, new.key_lo, touch)
 
 
 @functools.partial(
-    jax.jit,
-    static_argnames=("codec", "tnames", "vdims", "retract", "use_pallas"))
+    counted_jit,
+    static_argnames=("codec", "tnames", "vdims", "retract", "use_pallas",
+                     "dcap"))
 def _plan_ingest(d_hi, d_lo, d_stats, d_gv, base_hi, base_lo, base_stats,
                  view_hi, view_lo, view_stats, view_gv, view_keep, *,
-                 codec, tnames, vdims, retract, use_pallas):
+                 codec, tnames, vdims, retract, use_pallas, dcap):
     """Everything one ingest must know, computed in ONE device program.
 
     Produces, without any host round-trip: the per-view rolled-up deltas,
@@ -222,6 +228,8 @@ def _plan_ingest(d_hi, d_lo, d_stats, d_gv, base_hi, base_lo, base_stats,
     scalars/small vectors it needs to branch on — replacing the one-sync-
     per-merge pattern that serialized device dispatch on every batch.
     """
+    d_hi, d_lo, d_gv = d_hi[:dcap], d_lo[:dcap], d_gv[:dcap]
+    d_stats = {k: v[:dcap] for k, v in d_stats.items()}
     if retract:
         d_stats = {k: -v for k, v in d_stats.items()}
     pos_b, found_b = groupby.lookup_rows_in_table(d_hi, d_lo,
@@ -246,13 +254,14 @@ def _plan_ingest(d_hi, d_lo, d_stats, d_gv, base_hi, base_lo, base_stats,
         views[t] = dict(delta=(v_hi, v_lo, v_stats, v_gv), pos=pos_v,
                         ok=ok_v, stats=m_stats, keep=new_keep)
     buckets = {d: codec.extract(d_hi, d_lo, d) for d in codec.names}
-    return dict(d_stats=d_stats, pos_b=pos_b, ok_b=ok_b, merged_b=merged_b,
+    return dict(d_stats=d_stats, d_keys=(d_hi, d_lo), pos_b=pos_b,
+                ok_b=ok_b, merged_b=merged_b,
                 neg_min=neg_min, views=views, buckets=buckets,
-                n_delta=jnp.sum(d_gv.astype(jnp.int32)))
+                gv=d_gv, n_delta=jnp.sum(d_gv.astype(jnp.int32)))
 
 
 @functools.partial(
-    jax.jit, static_argnames=("codec", "tnames", "retract", "use_pallas"))
+    counted_jit, static_argnames=("codec", "tnames", "retract", "use_pallas"))
 def _plan_ingest_parts(deltas, base_hi, base_lo, base_stats, view_hi,
                        view_lo, view_stats, view_gv, view_keep, *,
                        codec, tnames, retract, use_pallas):
@@ -321,10 +330,17 @@ class OnlineEngine:
                  are row-sharded across it and per-device delta stat tables
                  combined via all-gather. None = single-device build.
     use_pallas:  route fast-path merges through the MXU scatter kernel.
-    fused_host_sync: plan every merge on device and fetch ONE fused result
-                 per ingest (default). False restores the legacy
-                 one-blocking-read-per-merge path (kept measurable in
-                 ``benchmarks/bench_online.py``).
+    pipeline:    "fused1" (default) runs the WHOLE ingest as one donated
+                 compiled dispatch (delta build + merges + overlap + touch
+                 + reservoir in one program, state updated in place — see
+                 :mod:`repro.core.fused`); "planner" keeps the two-dispatch
+                 on-device planner; "unfused" the legacy
+                 one-blocking-read-per-merge loop. All three maintain
+                 bit-identical state; the non-default modes exist as
+                 measurable baselines (``benchmarks/bench_online.py``).
+    fused_host_sync: legacy alias — ``False`` selects
+                 ``pipeline="unfused"``; ignored when ``pipeline`` is
+                 passed explicitly.
     """
 
     def __init__(self, specs: Mapping[str, CoarsenSpec],
@@ -334,7 +350,14 @@ class OnlineEngine:
                  row_granule: int = 4096, use_pallas: bool = False,
                  reservoir_size: int = 8192, mesh=None,
                  mesh_axis: str = "data", seed: int = 0,
-                 fused_host_sync: bool = True):
+                 fused_host_sync: bool = True, pipeline: str = None):
+        if pipeline is None:
+            pipeline = "fused1" if fused_host_sync else "unfused"
+        if pipeline not in ("fused1", "planner", "unfused"):
+            raise ValueError(f"unknown pipeline {pipeline!r}")
+        self.pipeline = pipeline
+        self.fused_host_sync = pipeline != "unfused"
+        self.seed = seed
         self.treatments = {t: tuple(sorted(c)) for t, c in treatments.items()}
         self.outcome = outcome
         self.query_dims = tuple(query_dims)
@@ -348,7 +371,6 @@ class OnlineEngine:
         self.granule = granule
         self.delta_granule = delta_granule
         self.use_pallas = use_pallas
-        self.fused_host_sync = fused_host_sync
         self.row_granule = row_granule
         self.mesh = mesh
         self.mesh_axis = mesh_axis
@@ -458,12 +480,201 @@ class OnlineEngine:
         ``ValueError`` BEFORE any state is committed.
         """
         self._guard_retract_rows(retract)
+        self._maybe_renorm_touch()
+        if self.pipeline == "fused1":
+            return self._ingest_fused1(batch, retract)
         hi, lo, stats, gv, n_full, overflow = self._build_delta(batch)
-        if self.fused_host_sync:
+        if self.pipeline == "planner":
             return self._ingest_fused(batch, hi, lo, stats, gv, n_full,
                                       overflow, retract)
         return self._ingest_unfused(batch, hi, lo, stats, gv, n_full,
                                     overflow, retract)
+
+    # ------------------------------------------- single-dispatch pipeline
+    def _view_table(self, name: str):
+        """The stat table backing ``name`` (base or a view), in whichever
+        layout (replicated Cuboid / PartitionedCuboid) the engine runs."""
+        return self.base if name == BASE_VIEW else self.views[name].table
+
+    def _pack_view_state(self):
+        """The fused program's DONATED state pytree, built by reference
+        from the engine's materialized views (zero copies)."""
+        views = {}
+        for name in (BASE_VIEW, *sorted(self.treatments)):
+            tab = self._view_table(name)
+            st = dict(hi=tab.key_hi, lo=tab.key_lo, stats=dict(tab.stats),
+                      gv=tab.group_valid, touch=self._touch[name])
+            if name != BASE_VIEW:
+                st["keep"] = self.views[name].keep
+            views[name] = st
+        state = dict(views=views)
+        if self.stream is not None:
+            s = self.stream
+            state["stream"] = dict(res=dict(s.columns), pri=s.priority,
+                                   n=s.n, sums=dict(s.sums),
+                                   sumsqs=dict(s.sumsqs))
+        return state
+
+    def _unpack_view_state(self, state) -> None:
+        """Install a fused program's output state by reference swap. MUST
+        run for every return (donation invalidated the old buffers, even
+        when the program left the values unchanged)."""
+        for name, st in state["views"].items():
+            tab = dataclasses.replace(
+                self._view_table(name), key_hi=st["hi"], key_lo=st["lo"],
+                stats=st["stats"], group_valid=st["gv"])
+            if name == BASE_VIEW:
+                self.base = tab
+            else:
+                view = self.views[name]
+                view.set_table(tab)
+                view.keep = st["keep"]
+            self._touch[name] = st["touch"]
+        if "stream" in state:
+            s = state["stream"]
+            self.stream = dataclasses.replace(
+                self.stream, columns=s["res"], priority=s["pri"], n=s["n"],
+                sums=s["sums"], sumsqs=s["sumsqs"])
+        self._post_state_swap()
+
+    def _post_state_swap(self) -> None:
+        """Hook for layout-specific caches (partitioned reassembly memo)."""
+
+    def _fused_caps(self) -> Tuple:
+        return tuple(sorted(
+            (name, self._view_table(name).capacity)
+            for name in (BASE_VIEW, *self.treatments)))
+
+    def _fused_view_dims(self) -> Tuple:
+        return ((BASE_VIEW, tuple(self.codec.names)),
+                *((t, self.views[t].dims) for t in sorted(self.treatments)))
+
+    def _stream_names(self) -> Tuple[str, ...]:
+        return self._row_cols if self.stream is not None else ()
+
+    def _fused_program(self, retract: bool):
+        mesh = self.mesh if self._mesh_ndev > 1 else None
+        return fused_mod.get_fused_ingest(
+            self.codec, tuple(sorted(self.specs.items())),
+            tuple(sorted(self.treatments)), self._fused_view_dims(),
+            self.outcome, self._fused_caps(), self._delta_cap, mesh,
+            self.mesh_axis, self.use_pallas, retract, self._stream_names(),
+            self.seed)
+
+    def _fallback_overflow(self, batch: Table, retract: bool) -> DeltaReport:
+        """Delta-capacity overflow: the in-program delta table missed
+        groups. ``_delta_cap`` has already been grown; rebuild the delta
+        (now at the larger capacity) and take the exact legacy path."""
+        hi, lo, stats, gv, n_full, overflow = self._build_delta(batch)
+        return self._ingest_unfused(batch, hi, lo, stats, gv, n_full,
+                                    overflow, retract)
+
+    def _grow_views(self, n_merged: Dict[str, int],
+                    grew: Dict[str, bool]) -> None:
+        """Capacity-doubling growth between fused dispatches: pad every
+        overflowing view (invalid-key padding keeps tables sorted and
+        binary-searchable) so the re-dispatched program — recompiled at the
+        new granule count — fits the merged table."""
+        for name, g in grew.items():
+            if not g:
+                continue
+            tab = self._view_table(name)
+            new_cap = _round_capacity(max(n_merged[name], 2 * tab.capacity),
+                                      self.granule)
+            padded = cube_mod._pad_cuboid(tab, new_cap)
+            pad = new_cap - tab.capacity
+            if name == BASE_VIEW:
+                self.base = padded
+            else:
+                view = self.views[name]
+                view.set_table(padded)
+                view.keep = jnp.pad(view.keep, (0, pad))
+            self._touch[name] = jnp.pad(self._touch[name], (0, pad))
+
+    def _ingest_fused1(self, batch: Table, retract: bool) -> DeltaReport:
+        """ONE compiled dispatch per steady-state batch: run the fused
+        program (state donated), fetch the verdict scalars once, commit by
+        reference swap. Growth re-dispatches at a doubled capacity; only
+        delta overflow leaves the device-resident path."""
+        cols = {c: batch.columns[c] for c in self._row_cols}
+        valid = batch.valid
+        counter = np.int32(self._ingest_count + 1)
+        for _ in range(32):
+            prog = self._fused_program(retract)
+            n_batches = np.int32(0 if self.stream is None
+                                 else self.stream.n_batches)
+            new_state, verdicts = prog(cols, valid, self._pack_view_state(),
+                                       counter, n_batches)
+            self._unpack_view_state(new_state)
+            f = jax.device_get(verdicts)
+            if bool(f["overflow"]):
+                self._delta_cap = _round_capacity(
+                    max(int(f["n_full"]), 2 * self._delta_cap),
+                    self.delta_granule)
+                return self._fallback_overflow(batch, retract)
+            if retract and (not all(map(bool, f["ok"].values()))
+                            or f["neg_min"] < -0.5):
+                self._raise_bad_retraction()
+            if not any(map(bool, f["grew"].values())):
+                break
+            self._grow_views({k: int(v) for k, v in f["n_merged"].items()},
+                             {k: bool(v) for k, v in f["grew"].items()})
+        else:
+            raise RuntimeError("fused ingest: capacity growth diverged")
+        # committed on device; mirror the host-side bookkeeping
+        if self.rows is not None:
+            self.rows = self.rows.append(
+                batch.select(list(self.rows.table.columns)),
+                granule=self.row_granule)
+        if self.stream is not None:
+            self.stream = dataclasses.replace(
+                self.stream, n_batches=self.stream.n_batches + 1)
+        self.n_rows_ingested += -batch.nrows if retract else batch.nrows
+        self._ingest_count += 1
+        invalidated = self._invalidate(
+            np.asarray(f["gv"]).reshape(-1),
+            lambda d: np.asarray(f["buckets"][d]).reshape(-1))
+        return DeltaReport(n_rows=batch.nrows,
+                           n_delta_groups=int(f["n_delta"]),
+                           fast_path={k: bool(v) for k, v in f["ok"].items()},
+                           invalidated=invalidated)
+
+    # -------------------------------------------------- touch-stamp renorm
+    def _maybe_renorm_touch(self) -> None:
+        """int32 wraparound guard for the eviction stamps: when the ingest
+        counter nears 2^31, shift every live stamp (and the counter) down.
+        Eviction compares differences only, so TTL semantics are unchanged
+        — exactly for ``ttl < TOUCH_CLAMP_AGE`` (~2^30 ingests), and
+        conservatively (groups kept, never spuriously evicted) beyond."""
+        if self._ingest_count < fused_mod.TOUCH_RENORM_LIMIT:
+            return
+        self._renorm_touch()
+
+    def _renorm_touch(self) -> None:
+        touch = {k: np.asarray(v) for k, v in self._touch.items()}
+        gvs = {name: np.asarray(self._view_table(name).group_valid)
+               for name in touch}
+        mins = [int(t[gvs[n]].min()) for n, t in touch.items()
+                if gvs[n].any()]
+        # shift by the min live stamp (exact), but at least down to
+        # TOUCH_CLAMP_AGE: a cold group stamped ages ago must not pin the
+        # shift at ~0 and turn renormalization into a per-ingest full
+        # host sync. Stamps older than the clamp window collapse to 0 =
+        # "at least TOUCH_CLAMP_AGE ingests old".
+        m = min(mins + [self._ingest_count])
+        m = max(m, self._ingest_count - fused_mod.TOUCH_CLAMP_AGE)
+        if m <= 0:
+            return
+        self._touch = {
+            n: self._place(jnp.asarray(
+                np.where(gvs[n], np.maximum(t - m, 0), 0).astype(np.int32)))
+            for n, t in touch.items()}
+        self._ingest_count -= m
+
+    def _place(self, tree):
+        """State placement hook — identity for the replicated layout; the
+        partitioned engine shards (P, ...) leaves over the mesh."""
+        return tree
 
     def _commit_rows(self, batch: Table, retract: bool) -> None:
         """Row log / streaming-propensity / counter updates shared by both
@@ -493,11 +704,9 @@ class OnlineEngine:
     def _ingest_fused(self, batch: Table, hi, lo, stats, gv, n_full,
                       overflow, retract: bool) -> DeltaReport:
         dcap = self._delta_cap
-        d_hi, d_lo, d_gv = hi[:dcap], lo[:dcap], gv[:dcap]
-        d_stats = {k: v[:dcap] for k, v in stats.items()}
         tnames = tuple(sorted(self.treatments))
         plan = _plan_ingest(
-            d_hi, d_lo, d_stats, d_gv,
+            hi, lo, stats, gv,
             self.base.key_hi, self.base.key_lo, self.base.stats,
             {t: self.views[t].cuboid.key_hi for t in tnames},
             {t: self.views[t].cuboid.key_lo for t in tnames},
@@ -506,13 +715,17 @@ class OnlineEngine:
             {t: self.views[t].keep for t in tnames},
             codec=self.codec, tnames=tnames,
             vdims=tuple(self.views[t].dims for t in tnames),
-            retract=retract, use_pallas=self.use_pallas)
+            retract=retract, use_pallas=self.use_pallas, dcap=dcap)
         # THE one host sync of a fast-path ingest: every decision at once
         fetched = jax.device_get(dict(
-            overflow=overflow | (n_full > dcap), ok_b=plan["ok_b"],
+            overflow=overflow, n_full=n_full, ok_b=plan["ok_b"],
             ok_v={t: plan["views"][t]["ok"] for t in tnames},
             neg_min=plan["neg_min"], n_delta=plan["n_delta"],
-            gv=d_gv, buckets=plan["buckets"]))
+            gv=plan["gv"], buckets=plan["buckets"]))
+        fetched["overflow"] = bool(fetched["overflow"]) or (
+            int(fetched["n_full"]) > dcap)
+        d_hi, d_lo = plan["d_keys"]
+        d_gv = plan["gv"]
         if fetched["overflow"]:
             # the sliced delta missed groups: fall back to the exact
             # host-compacted path and grow the delta capacity geometrically
@@ -680,6 +893,11 @@ class OnlineEngine:
         return tuple(dropped)
 
     # ----------------------------------------------------------- eviction
+    def _evict_n_parts(self) -> int:
+        """Partition count handed to the fused eviction program: 0 marks
+        the replicated (C,) layout, >0 the (P, C) partitioned one."""
+        return 0
+
     def evict(self, ttl: int) -> Dict[str, int]:
         """Drop every group whose last delta touch is more than ``ttl``
         ingests old — the bounded-state escape hatch for streams whose key
@@ -688,31 +906,21 @@ class OnlineEngine:
         the offline-equivalence guarantee for bounded memory; re-ingesting
         an evicted key later resurrects it as a fresh group.
 
-        Returns {view name: groups evicted}.
+        Runs as ONE donated device program over every view (per-partition
+        compaction kernels on the partitioned layout — no host round trip
+        per view; the compaction is an exact re-sort GATHER at the current
+        capacity, so surviving stats are bit-identical and slot capacity
+        never shrinks). Returns {view name: groups evicted}.
         """
-        cutoff = self._ingest_count - ttl
-        evicted: Dict[str, int] = {}
-        for name in (BASE_VIEW, *sorted(self.treatments)):
-            cub = (self.base if name == BASE_VIEW
-                   else self.views[name].cuboid)
-            keep_mask = np.asarray(self._touch[name]) >= cutoff
-            gv = np.asarray(cub.group_valid)
-            n_evict = int((gv & ~keep_mask).sum())
-            evicted[name] = n_evict
-            if n_evict == 0:
-                continue
-            new_cub = cube_mod.compact_cuboid(cub, granule=self.granule,
-                                              keep_mask=keep_mask)
-            new_touch = _remap_touch(cub, new_cub, self._touch[name])
-            if name == BASE_VIEW:
-                self.base = new_cub
-            else:
-                view = self.views[name]
-                nt = new_cub.stats[f"t_{name}"]
-                view.keep = overlap_keep(new_cub.group_valid, nt,
-                                         new_cub.stats["one"] - nt)
-                view.cuboid = new_cub
-            self._touch[name] = new_touch
+        mesh = self.mesh if self._mesh_ndev > 1 else None
+        prog = fused_mod.get_fused_evict(
+            tuple(sorted(self.treatments)), self._fused_caps(),
+            self._evict_n_parts(), mesh, self.mesh_axis,
+            self.stream is not None)
+        new_state, counts = prog(self._pack_view_state(),
+                                 np.int32(self._ingest_count - ttl))
+        self._unpack_view_state(new_state)
+        evicted = {k: int(v) for k, v in jax.device_get(counts).items()}
         if any(evicted.values()):
             self._cache.clear()
         return evicted
@@ -873,12 +1081,15 @@ class PartitionedOnlineEngine(OnlineEngine):
     bit-identical to the replicated engine's on any device count.
 
     n_parts: number of key-range partitions. With a mesh attached it must
-    equal the data-axis size (one partition per device); without one, any
-    ``n_parts >= 1`` runs the same layout on a single device (the
-    differential test harness exercises this). All other arguments match
-    :class:`OnlineEngine`; ``fused_host_sync=False`` is not supported (the
-    partitioned path is fused-only, with the exact host fallback on delta
-    overflow).
+    be a MULTIPLE of the data-axis size: each device owns
+    ``k = n_parts / N`` contiguous hash ranges (k-partitions-per-device),
+    so per-partition capacity — and with it the unit of growth and
+    compaction — is bounded independently of the mesh size. Without a
+    mesh, any ``n_parts >= 1`` runs the same layout on a single device
+    (the differential test harness exercises this). All other arguments
+    match :class:`OnlineEngine`; ``fused_host_sync=False`` /
+    ``pipeline="unfused"`` are not supported (the partitioned path is
+    fused-only, with the exact host fallback on delta overflow).
     """
 
     def __init__(self, specs: Mapping[str, CoarsenSpec],
@@ -897,10 +1108,11 @@ class PartitionedOnlineEngine(OnlineEngine):
         if self.mesh is not None and self._mesh_ndev > 1:
             if n_parts is None:
                 n_parts = self._mesh_ndev
-            if n_parts != self._mesh_ndev:
+            if n_parts % self._mesh_ndev != 0:
                 raise ValueError(
-                    f"n_parts={n_parts} must equal the mesh data-axis size "
-                    f"{self._mesh_ndev} (one partition per device)")
+                    f"n_parts={n_parts} must be a multiple of the mesh "
+                    f"data-axis size {self._mesh_ndev} (k contiguous "
+                    f"partitions per device)")
         self.n_parts = 1 if n_parts is None else int(n_parts)
         if self.n_parts < 1:
             raise ValueError(f"n_parts must be >= 1, got {self.n_parts}")
@@ -947,7 +1159,8 @@ class PartitionedOnlineEngine(OnlineEngine):
                 view_dims[t] = self.views[t].dims
             self._routed_builds[capacity] = make_routed_delta_build(
                 self.mesh, self.specs, sorted(self.treatments),
-                self.outcome, capacity, view_dims, axis=self.mesh_axis)
+                self.outcome, capacity, view_dims, axis=self.mesh_axis,
+                n_parts=self.n_parts)
         return self._routed_builds[capacity]
 
     def _route_from_base(self, hi, lo, stats, gv):
@@ -990,13 +1203,69 @@ class PartitionedOnlineEngine(OnlineEngine):
     # ------------------------------------------------------------- ingest
     def ingest(self, batch: Table, retract: bool = False) -> DeltaReport:
         """Fold one streamed batch into every partitioned view: route the
-        delta to owner partitions, plan every merge on device, fetch ONE
-        fused verdict, commit per partition. Semantics (including the
+        delta to owner partitions, merge/flip/stamp per partition, fetch
+        ONE fused verdict. ``pipeline="fused1"`` (default) does ALL of it —
+        routing included — in one donated compiled dispatch; "planner"
+        keeps the PR 3 two-dispatch path. Semantics (including the
         retraction guard and the delta-overflow exact fallback) match
         :meth:`OnlineEngine.ingest` bit for bit."""
         self._guard_retract_rows(retract)
+        self._maybe_renorm_touch()
+        if self.pipeline == "fused1":
+            return self._ingest_fused1(batch, retract)
         deltas, n_full, overflow = self._build_delta_parts(batch)
         return self._ingest_parts(batch, deltas, n_full, overflow, retract)
+
+    # --------------------------------------- single-dispatch (fused1) hooks
+    def _post_state_swap(self) -> None:
+        self._assembled.clear()
+
+    def _fused_program(self, retract: bool):
+        mesh = self.mesh if self._mesh_ndev > 1 else None
+        return fused_mod.get_fused_ingest_parts(
+            self.codec, tuple(sorted(self.specs.items())),
+            tuple(sorted(self.treatments)), self._fused_view_dims(),
+            self.outcome, self._fused_caps(), self._delta_cap,
+            self.n_parts, mesh, self.mesh_axis, self.use_pallas, retract,
+            self._stream_names(), self.seed)
+
+    def _fallback_overflow(self, batch: Table, retract: bool) -> DeltaReport:
+        """Exact host fallback on delta overflow: rebuild the delta at the
+        (already grown) capacity, re-route, run the planner commit path."""
+        tnames = tuple(sorted(self.treatments))
+        d = cube_mod.delta_cuboid(batch, self.specs, tnames, self.outcome,
+                                  granule=self._delta_cap)
+        deltas = self._route_from_base(d.key_hi, d.key_lo, dict(d.stats),
+                                       d.group_valid)
+        return self._ingest_parts(batch, deltas, jnp.asarray(0),
+                                  jnp.asarray(False), retract)
+
+    def _grow_views(self, n_merged: Dict[str, int],
+                    grew: Dict[str, bool]) -> None:
+        """Per-partition capacity doubling: pad every (P, C) array of an
+        overflowing view along the slot axis (keys stay sorted — invalid
+        padding is the largest key) and let the next dispatch recompile at
+        the new per-partition granule count."""
+        for name, g in grew.items():
+            if not g:
+                continue
+            tab = self._view_table(name)
+            new_cap = _round_capacity(max(n_merged[name], 2 * tab.capacity),
+                                      self._part_granule)
+            padded = self._place(cube_mod.pad_partitioned(tab, new_cap))
+            pad = new_cap - tab.capacity
+            if name == BASE_VIEW:
+                self.base = padded
+            else:
+                view = self.views[name]
+                view.set_table(padded)
+                view.keep = self._place(
+                    jnp.pad(view.keep, ((0, 0), (0, pad))))
+            self._touch[name] = self._place(
+                jnp.pad(self._touch[name], ((0, 0), (0, pad))))
+
+    def _evict_n_parts(self) -> int:
+        return self.n_parts
 
     def _ingest_parts(self, batch: Table, deltas, n_full, overflow,
                       retract: bool) -> DeltaReport:
@@ -1071,40 +1340,6 @@ class PartitionedOnlineEngine(OnlineEngine):
         return DeltaReport(n_rows=batch.nrows,
                            n_delta_groups=int(fetched["n_delta"]),
                            fast_path=fast, invalidated=invalidated)
-
-    # ----------------------------------------------------------- eviction
-    def evict(self, ttl: int) -> Dict[str, int]:
-        """Per-partition TTL eviction — same semantics as the replicated
-        :meth:`OnlineEngine.evict` (same touch stamps, same cutoff), run
-        independently inside each key-range partition."""
-        cutoff = self._ingest_count - ttl
-        evicted: Dict[str, int] = {}
-        for name in (BASE_VIEW, *sorted(self.treatments)):
-            pcub = (self.base if name == BASE_VIEW
-                    else self.views[name].pcub)
-            keep_mask = np.asarray(self._touch[name]) >= cutoff
-            gv = np.asarray(pcub.group_valid)
-            n_evict = int((gv & ~keep_mask).sum())
-            evicted[name] = n_evict
-            if n_evict == 0:
-                continue
-            new_p = self._place(cube_mod.compact_partitioned(
-                pcub, granule=self._part_granule, keep_mask=keep_mask))
-            new_touch = self._place(
-                _remap_touch_parts(pcub, new_p, self._touch[name]))
-            if name == BASE_VIEW:
-                self.base = new_p
-            else:
-                view = self.views[name]
-                nt = new_p.stats[f"t_{name}"]
-                view.keep = overlap_keep(new_p.group_valid, nt,
-                                         new_p.stats["one"] - nt)
-                view.pcub = new_p
-            self._touch[name] = new_touch
-        if any(evicted.values()):
-            self._cache.clear()
-        self._assembled.clear()
-        return evicted
 
     # ------------------------------------------------------------ queries
     def _view_state(self, treatment: str

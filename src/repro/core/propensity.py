@@ -105,7 +105,10 @@ def _signed_moments(names, n, sums, sumsqs, batch_cols, valid, sign):
     return new_n, new_sums, new_sumsqs
 
 
-@functools.partial(jax.jit, static_argnames=("names",))
+from repro.launch.trace import counted_jit  # noqa: E402
+
+
+@functools.partial(counted_jit, static_argnames=("names",))
 def _stream_update(names: Tuple[str, ...], res_cols, priority, n, sums,
                    sumsqs, batch_cols, valid, key):
     """One streamed batch into (moments, reservoir). Fully on device: no
@@ -156,7 +159,7 @@ def _row_tags(names: Tuple[str, ...], cols, alive) -> Tuple[jnp.ndarray,
             jnp.where(alive, h2, INVALID_LO))
 
 
-@functools.partial(jax.jit, static_argnames=("names",))
+@functools.partial(counted_jit, static_argnames=("names",))
 def _stream_retract(names: Tuple[str, ...], res_cols, priority, n, sums,
                     sumsqs, batch_cols, valid):
     """Exact retraction: reverse the moments AND delete the exact sampled
@@ -237,13 +240,18 @@ class StreamStats:
     def empty(cls, names: Sequence[str], capacity: int = 8192,
               seed: int = 0) -> "StreamStats":
         names = tuple(names)
-        zero = jnp.float32(0.0)
+
+        # distinct zero buffers per accumulator: the fused ingest DONATES
+        # the whole state tree, and XLA rejects donating one buffer twice
+        def zero():
+            return jnp.zeros((), jnp.float32)
+
         return cls(
             names=names,
             columns={c: jnp.zeros((capacity,), jnp.float32) for c in names},
             priority=jnp.full((capacity,), -jnp.inf, jnp.float32),
-            n=zero, sums={c: zero for c in names},
-            sumsqs={c: zero for c in names}, seed=seed)
+            n=zero(), sums={c: zero() for c in names},
+            sumsqs={c: zero() for c in names}, seed=seed)
 
     @property
     def capacity(self) -> int:

@@ -20,6 +20,7 @@ from repro.kernels.knn_topk import knn_topk_pallas
 from repro.kernels.logistic_grad import logistic_newton_terms_pallas
 from repro.kernels.segment_stats import (combine_partials,
                                          scatter_merge_pallas,
+                                         scatter_merge_parts_pallas,
                                          segment_partials_pallas)
 
 
@@ -106,13 +107,25 @@ def scatter_merge_parts_op(tables: jnp.ndarray, pos: jnp.ndarray,
     """Scatter-merge over a PARTITION-LOCAL key space: ``tables`` is
     (P, C, S) — one stat table per key-range partition — ``pos``/``vals``
     are (P, B)/(P, B, S) routed delta rows whose positions index their own
-    partition's table only. Each partition runs the MXU one-hot kernel
-    independently (unrolled; P is the mesh's data-axis size, so small), so
-    on a sharded leading axis the merge stays device-local."""
-    n_parts = tables.shape[0]
-    return jnp.stack([scatter_merge_op(tables[p], pos[p], vals[p],
-                                       block=block)
-                      for p in range(n_parts)])
+    partition's table only. ONE fused kernel launch over a (P, blocks)
+    grid (``scatter_merge_parts_pallas``) with the table buffer donated
+    in place, replacing the per-partition python loop of kernel calls; on
+    a sharded leading axis the merge stays device-local."""
+    if pos.shape[1] == 0:  # empty delta: at[].add semantics -> no-op
+        return tables.astype(jnp.float32)
+    interp = _interpret()
+    n_parts, c, s = tables.shape
+    pad_b = (-pos.shape[1]) % block
+    pp = jnp.pad(pos.astype(jnp.int32), ((0, 0), (0, pad_b)))
+    vp = jnp.pad(vals.astype(jnp.float32), ((0, 0), (0, pad_b), (0, 0)))
+    t = tables.astype(jnp.float32)
+    pad_s = 0 if interp else (-s) % 128
+    if pad_s:
+        t = jnp.pad(t, ((0, 0), (0, 0), (0, pad_s)))
+        vp = jnp.pad(vp, ((0, 0), (0, 0), (0, pad_s)))
+    out = scatter_merge_parts_pallas(t, pp, vp, block=block,
+                                     interpret=interp)
+    return out[:, :, :s] if pad_s else out
 
 
 def knn_topk_op(Q: jnp.ndarray, C: jnp.ndarray, c_valid: jnp.ndarray,

@@ -93,6 +93,53 @@ def scatter_merge_pallas(table: jnp.ndarray, pos: jnp.ndarray,
     )(pos, table, vals)
 
 
+def _scatter_parts_kernel(pos_ref, table_ref, vals_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = table_ref[...]
+
+    pos = pos_ref[0]                   # (B,) int32, in [0, C)
+    vals = vals_ref[0]                 # (B, S) f32
+    c = out_ref.shape[1]
+    b = pos.shape[0]
+    onehot = (pos[None, :] == jax.lax.broadcasted_iota(jnp.int32, (c, b), 0)
+              ).astype(vals.dtype)     # (C, B): rows = destination slot
+    out_ref[0] += jnp.dot(onehot, vals,
+                          preferred_element_type=jnp.float32)
+
+
+def scatter_merge_parts_pallas(tables: jnp.ndarray, pos: jnp.ndarray,
+                               vals: jnp.ndarray, block: int = 256,
+                               interpret: bool = True) -> jnp.ndarray:
+    """Fused partition-local scatter merge: ONE kernel launch over a
+    (n_parts, n_delta_blocks) grid instead of one :func:`scatter_merge_pallas`
+    call per partition — each grid row p accumulates its partition's delta
+    blocks into its own (C, S) stat table via the one-hot MXU matmul.
+
+    tables: (P, C, S); pos: (P, B) destination slots (B % block == 0);
+    vals: (P, B, S). ``input_output_aliases`` donates the table buffer, so
+    on TPU the merged stats are written IN PLACE — the kernel-level analogue
+    of the fused ingest program's buffer donation.
+    """
+    n_parts, c, s = tables.shape
+    nb = pos.shape[1] // block
+    return pl.pallas_call(
+        _scatter_parts_kernel,
+        grid=(n_parts, nb),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda p, j: (p, j)),
+            pl.BlockSpec((1, c, s), lambda p, j: (p, 0, 0)),
+            pl.BlockSpec((1, block, s), lambda p, j: (p, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, s), lambda p, j: (p, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_parts, c, s), jnp.float32),
+        input_output_aliases={1: 0},   # table buffer updates in place
+        interpret=interpret,
+    )(pos, tables, vals)
+
+
 def combine_partials(partials: jnp.ndarray, block_base: jnp.ndarray,
                      num_segments: int) -> jnp.ndarray:
     """Merge per-block partials into global per-segment sums.

@@ -35,11 +35,24 @@ def make_data_mesh(n_devices: int = None, axis: str = "data"):
 
 def partition_sharding(mesh, axis: str = "data"):
     """NamedSharding that lays a ``(n_parts, capacity)`` partitioned stat
-    table out with one key-range partition per device along ``axis`` — the
-    placement the partitioned online engine uses for every materialized
-    view, so resident state per device is 1/n_parts of the total."""
+    table out along ``axis``. With ``n_parts == k * n_devices`` each device
+    receives k CONTIGUOUS rows — and because key-range partitions are
+    contiguous ranges of the hash space, a device's k partitions form one
+    contiguous hash range too (k-partitions-per-device: partition capacity
+    is bounded independently of the mesh size). ``n_parts`` must be a
+    multiple of the axis size; the partitioned online engine enforces
+    that."""
     from jax.sharding import NamedSharding, PartitionSpec
     return NamedSharding(mesh, PartitionSpec(axis, None))
+
+
+def parts_per_device(mesh, n_parts: int, axis: str = "data") -> int:
+    """k = n_parts / axis size (validating divisibility)."""
+    n_dev = int(mesh.shape[axis])
+    if n_parts % n_dev != 0:
+        raise ValueError(f"n_parts={n_parts} not a multiple of the "
+                         f"'{axis}' axis size {n_dev}")
+    return n_parts // n_dev
 
 
 def shard_partitions(mesh, tree, axis: str = "data"):

@@ -1,0 +1,81 @@
+"""Dispatch accounting for the online ingest hot path.
+
+The single-dispatch claim of the fused ingest pipeline ("one compiled
+program per steady-state batch") is load-bearing: every extra launch is a
+host round-trip that serializes the stream. jax 0.4.x executes jitted
+calls through a C++ fastpath that no python-level hook observes, so the
+counter here instruments the call sites we own instead: every compiled
+entry point of the engine hot paths is wrapped with :func:`counted_jit`,
+which bumps a process-global counter on each invocation of the compiled
+callable.
+
+Scope: the counter sees every program launch issued through a
+``counted_jit``-wrapped callable (all of ``repro.core.fused``,
+``repro.core.online``'s planner helpers, and the cached build/rollup
+programs). It does not see eager ``jnp`` operations — the fused pipeline
+is written so its steady-state path performs none (pure-numpy host logic
+on fetched verdicts only), and ``tests/test_online_fused.py`` additionally
+asserts the jit trace cache stays cold (no retrace) across steady-state
+ingests.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from typing import Callable
+
+_state = threading.local()
+
+
+def _counter() -> list:
+    if not hasattr(_state, "count"):
+        _state.count = [0]
+    return _state.count
+
+
+def dispatch_count() -> int:
+    """Total compiled-program launches observed so far (this thread)."""
+    return _counter()[0]
+
+
+def record_dispatch(n: int = 1) -> None:
+    """Manually account ``n`` launches (for call sites that cannot wrap)."""
+    _counter()[0] += n
+
+
+def counted_jit(fn: Callable = None, **jit_kwargs) -> Callable:
+    """``jax.jit`` that bumps the dispatch counter once per call.
+
+    Drop-in replacement: ``counted_jit(f, static_argnames=...)`` or as a
+    decorator. The wrapper preserves the jitted callable's AOT/trace
+    attributes that the engines rely on (``_cache_size`` for the
+    no-retrace assertion)."""
+    import jax
+
+    def wrap(f):
+        jitted = jax.jit(f, **jit_kwargs)
+
+        @functools.wraps(f)
+        def call(*args, **kwargs):
+            _counter()[0] += 1
+            return jitted(*args, **kwargs)
+
+        call._jitted = jitted
+        call._cache_size = jitted._cache_size
+        call.lower = jitted.lower
+        return call
+
+    return wrap if fn is None else wrap(fn)
+
+
+@contextlib.contextmanager
+def count_dispatches():
+    """Context manager yielding a zero-based live counter:
+
+    >>> with count_dispatches() as n:
+    ...     eng.ingest(batch)
+    >>> assert n() == 1
+    """
+    start = dispatch_count()
+    yield lambda: dispatch_count() - start

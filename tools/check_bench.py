@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Benchmark regression guard: compare a fresh BENCH_smoke.json against the
+committed baseline and fail on ingest-latency regressions.
+
+Usage:
+    python tools/check_bench.py BENCH_smoke.json benchmarks/baseline.json \
+        [--tolerance 1.5]
+
+Only rows whose name starts with one of the GUARDED prefixes are compared
+(latency rows of the online ingest hot path — the rows this repo makes
+performance claims about). A row regresses when
+
+    current_us > baseline_us * tolerance
+
+Rows present in only one file are reported but never fail the job (new
+benchmarks may land before the baseline is refreshed). The diff table is
+printed to stdout and, when ``GITHUB_STEP_SUMMARY`` is set, appended to the
+job summary. Exit code 1 on any regression.
+
+To refresh the baseline after an intentional change:
+    PYTHONPATH=src:. REPRO_BENCH_SMOKE=1 python benchmarks/run.py \
+        --only bench_e2e,bench_online --json BENCH_smoke.json
+    python tools/check_bench.py --update BENCH_smoke.json \
+        benchmarks/baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+GUARDED = ("online_ingest", "online_dispatches")
+
+
+def load_rows(path: str):
+    with open(path) as f:
+        data = json.load(f)
+    rows = data["results"] if isinstance(data, dict) else data
+    return {r["name"]: r for r in rows}
+
+
+def update_baseline(bench_path: str, baseline_path: str) -> None:
+    rows = load_rows(bench_path)
+    keep = [r for name, r in sorted(rows.items())
+            if name.startswith(GUARDED)]
+    with open(baseline_path, "w") as f:
+        json.dump({"results": keep}, f, indent=2)
+        f.write("\n")
+    print(f"baseline refreshed: {len(keep)} guarded rows "
+          f"-> {baseline_path}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench")
+    ap.add_argument("baseline")
+    ap.add_argument("--tolerance", type=float, default=1.5)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the bench file")
+    args = ap.parse_args()
+    if args.update:
+        update_baseline(args.bench, args.baseline)
+        return 0
+
+    current = load_rows(args.bench)
+    baseline = load_rows(args.baseline)
+    lines = ["| row | baseline us | current us | ratio | verdict |",
+             "|---|---|---|---|---|"]
+    regressions = []
+    for name in sorted(set(baseline) | set(current)):
+        if not name.startswith(GUARDED):
+            continue
+        b = baseline.get(name)
+        c = current.get(name)
+        if b is None or c is None:
+            lines.append(f"| {name} | {'-' if b is None else b['us_per_call']}"
+                         f" | {'-' if c is None else c['us_per_call']}"
+                         f" | - | only in one file (ignored) |")
+            continue
+        bu, cu = float(b["us_per_call"]), float(c["us_per_call"])
+        if bu <= 0:
+            ratio = 1.0
+        else:
+            ratio = cu / bu
+        ok = ratio <= args.tolerance
+        verdict = "ok" if ok else f"REGRESSION (> {args.tolerance}x)"
+        if not ok:
+            regressions.append((name, bu, cu, ratio))
+        lines.append(f"| {name} | {bu:.1f} | {cu:.1f} | {ratio:.2f}x "
+                     f"| {verdict} |")
+    report = "\n".join(
+        ["### Benchmark regression guard "
+         f"(tolerance {args.tolerance:.2f}x)", ""] + lines + [""])
+    print(report)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(report + "\n")
+    if regressions:
+        print(f"{len(regressions)} ingest row(s) regressed beyond "
+              f"{args.tolerance}x:", file=sys.stderr)
+        for name, bu, cu, ratio in regressions:
+            print(f"  {name}: {bu:.1f}us -> {cu:.1f}us ({ratio:.2f}x)",
+                  file=sys.stderr)
+        return 1
+    print("benchmark guard: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
