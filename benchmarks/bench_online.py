@@ -16,17 +16,26 @@ Emits, per batch size B:
                               fused single-dispatch pipeline (default)
   online_ingest_planner_bB    same stream, PR 3 two-dispatch planner path
   online_ingest_unfused_bB    same, legacy one-blocking-sync-per-merge loop
-  online_query_bB             uncached ATE from materialized state
-  online_cached_query_bB      repeat ATE (estimate cache hit)
+  online_query_bB             uncached ATE from materialized state (fused
+                              one-dispatch query pipeline)
+  online_cached_query_bB      repeat ATE (estimate cache hit: 0 dispatches)
   offline_recompute_bB        full CEM + ATE over the N+B-row table
-plus a dispatch-count row (jit-launch counter, repro.launch.trace):
-  online_dispatches           compiled launches per steady-state ingest,
+plus dispatch-count rows (jit-launch counter, repro.launch.trace):
+  online_dispatches_*         compiled launches per steady-state ingest,
                               fused1 vs planner vs unfused
+  online_query_dispatches_*   compiled launches per UNCACHED ate() on the
+                              partitioned engine, fused (=1) vs the
+                              assemble host-path baseline (reassembly +
+                              estimate)
 and, per device count D (subprocess with host-platform device forcing):
   online_ingest_fused1_dD         fused single-dispatch, replicated views
   online_ingest_fused1_part_dD    fused single-dispatch, partitioned views
   online_ingest_dD                planner path, replicated views
   online_ingest_part_dD           planner path, partitioned views
+  online_query_fused_dD           uncached fused ate() on the partitioned
+                                  engine (per-device masking ~1/D)
+  online_rowlookup_part_dD        fused matched_rows probe (routed lookup
+                                  on a mesh) on the partitioned engine
   online_state_bytes_dD           per-device resident bytes, partitioned
                                   (must show ~1/D scaling)
   online_state_bytes_replicated_dD  same accounting on the replicated
@@ -42,7 +51,8 @@ import textwrap
 import numpy as np
 
 from benchmarks.common import emit, smoke, timeit
-from repro.core import CoarsenSpec, OnlineEngine, cem, estimate_ate
+from repro.core import (CoarsenSpec, OnlineEngine, PartitionedOnlineEngine,
+                        cem, estimate_ate)
 from repro.data.columnar import Table
 
 SPECS = {"x0": CoarsenSpec.categorical(8), "x1": CoarsenSpec.categorical(6),
@@ -97,6 +107,7 @@ from repro.launch.mesh import make_data_mesh
 
 mesh = make_data_mesh({ndev}) if {ndev} > 1 else None
 out = {{}}
+engines = {{}}
 for label, cls, kw in (
         ("fused1", OnlineEngine, dict()),
         ("fused1_part", PartitionedOnlineEngine,
@@ -106,6 +117,7 @@ for label, cls, kw in (
          dict(pipeline="planner", n_parts=None if {ndev} > 1 else 1))):
     eng = cls.from_table(Table.from_numpy(_gen({n}, seed=0)),
                          SPECS, TREATMENTS, "y", mesh=mesh, **kw)
+    engines[label] = eng
     feed = [Table.from_numpy(_gen({bs}, seed=1 + i))
             for i in range({warmup} + {iters})]
     for b in feed[:{warmup}]:
@@ -116,6 +128,30 @@ for label, cls, kw in (
         eng.ingest(b)
         ts.append(time.perf_counter() - t0)
     out[label] = dict(secs=float(np.median(ts)), **eng.state_bytes())
+# device-resident query pipeline on the partitioned fused engine:
+# uncached fused ate() (one dispatch + one scalar fetch) and the fused
+# row-lookup probe (routed over the mesh when {ndev} > 1)
+qeng = engines["fused1_part"]
+probe = Table.from_numpy(_gen(4096, seed=777))
+for _ in range({warmup}):
+    qeng._cache.clear()
+    qeng.ate("t")
+    m = qeng.matched_rows("t", probe)
+    m.block_until_ready()
+ts = []
+for _ in range({iters}):
+    qeng._cache.clear()
+    t0 = time.perf_counter()
+    qeng.ate("t")
+    ts.append(time.perf_counter() - t0)
+out["query_fused_part"] = dict(secs=float(np.median(ts)))
+ts = []
+for _ in range({iters}):
+    t0 = time.perf_counter()
+    m = qeng.matched_rows("t", probe)
+    m.block_until_ready()
+    ts.append(time.perf_counter() - t0)
+out["rowlookup_part"] = dict(secs=float(np.median(ts)))
 print("SWEEP_RESULT", json.dumps(out))
 """
 
@@ -163,6 +199,13 @@ def sharded_sweep(n: int, bs: int, device_counts, warmup=WARMUP,
         emit(f"online_ingest_part_d{ndev}", part["secs"],
              f"n={n} batch={bs} vs_replicated="
              f"{part['secs'] / max(rep['secs'], 1e-12):.2f}x")
+        emit(f"online_query_fused_d{ndev}", res["query_fused_part"]["secs"],
+             f"n={n} uncached fused ate() on partitioned views "
+             f"(1 dispatch + 1 scalar fetch)")
+        emit(f"online_rowlookup_part_d{ndev}",
+             res["rowlookup_part"]["secs"],
+             "fused matched_rows, 4096 probe rows "
+             f"({'routed all-to-all' if ndev > 1 else 'partition-local'})")
         # state scaling rows: seconds slot carries no latency — emit 0-cost
         # with the bytes in the derived column (JSON artifact keeps both)
         emit(f"online_state_bytes_d{ndev}", 0.0,
@@ -238,6 +281,27 @@ def main() -> None:
     for name, d in (("fused1", d_f), ("planner", d_p), ("unfused", d_u)):
         emit(f"online_dispatches_{name}", d / 1e6,
              "compiled launches per steady ingest (value slot = count)")
+
+    # query dispatch-count rows: uncached ate() on the PARTITIONED engine,
+    # fused one-dispatch pipeline vs the assemble host-path baseline
+    # (canonical reassembly + estimate). Same value-slot convention.
+    from repro.launch.trace import count_dispatches
+    part = PartitionedOnlineEngine.from_table(
+        Table.from_numpy(_gen(1 << 14 if smoke() else 1 << 16, seed=7)),
+        SPECS, TREATMENTS, "y", n_parts=4)
+    part.ate("t")
+    part._estimate("t", None, pipeline="assemble")      # warm both paths
+    part._cache.clear()
+    with count_dispatches() as nq:
+        part.ate("t")
+    d_qf = nq()
+    part._assembled.clear()                             # cold reassembly
+    with count_dispatches() as nq:
+        part._estimate("t", None, pipeline="assemble")
+    d_qa = nq()
+    for name, d in (("fused", d_qf), ("assemble", d_qa)):
+        emit(f"online_query_dispatches_{name}", d / 1e6,
+             "compiled launches per uncached ate() (value slot = count)")
 
     # sharded ingest: per-batch latency per device-mesh size
     sweep_n = 1 << 15 if smoke() else 1 << 18

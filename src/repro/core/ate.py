@@ -37,46 +37,56 @@ def _group_means(groups: CEMGroups):
     return nt, nc, mean_t, mean_c
 
 
-def _neyman_variance(keep, nt, nc, mean_t, mean_c, sum_yy_t, sum_yy_c):
+def _neyman_variance(keep, nt, nc, mean_t, mean_c, sum_yy_t, sum_yy_c,
+                     sum_fn=jnp.sum):
     """Conservative within-group (Neyman) variance of the ATE from
     decomposable per-arm first and second moments."""
     var_t = sum_yy_t / jnp.maximum(nt, 1e-9) - mean_t ** 2
     var_c = sum_yy_c / jnp.maximum(nc, 1e-9) - mean_c ** 2
     n_b = nt + nc
-    n_tot = jnp.maximum(jnp.sum(n_b), 1e-9)
+    n_tot = jnp.maximum(sum_fn(n_b), 1e-9)
     se2_b = (var_t / jnp.maximum(nt, 1.0) + var_c / jnp.maximum(nc, 1.0))
-    return jnp.sum(jnp.where(keep, (n_b / n_tot) ** 2 * se2_b, 0.0))
+    return sum_fn(jnp.where(keep, (n_b / n_tot) ** 2 * se2_b, 0.0))
 
 
 def estimate_ate_from_stats(keep: jnp.ndarray, n_treated: jnp.ndarray,
                             n_control: jnp.ndarray, sum_y_t: jnp.ndarray,
                             sum_y_c: jnp.ndarray,
                             sum_yy_t: jnp.ndarray = None,
-                            sum_yy_c: jnp.ndarray = None) -> ATEEstimate:
+                            sum_yy_c: jnp.ndarray = None,
+                            sum_fn=jnp.sum) -> ATEEstimate:
     """ATE/ATT straight from decomposable group stats (no row access).
 
     This is the estimator the online engine runs over materialized cuboid
     stat tables: O(#groups), independent of data size. With per-arm second
     moments (``sum_yy_t``/``sum_yy_c`` — the cuboid's ``yy``-family columns)
-    the Neyman within-group variance is included; without them it is 0."""
+    the Neyman within-group variance is included; without them it is 0.
+
+    ``sum_fn`` is the cross-group reduction. The online query pipelines
+    pass the capacity-invariant canonical sum
+    (:func:`repro.kernels.segment_stats.chunked_sum`), which makes the
+    estimate a bitwise-deterministic function of the key-sorted group
+    content ALONE — independent of padded vector length, partition count
+    or capacity-growth history — so replicated, partitioned and fused
+    query paths return identical f32 bits for identical group stats."""
     nt = jnp.where(keep, n_treated, 0.0)
     nc = jnp.where(keep, n_control, 0.0)
     mean_t = jnp.where(nt > 0, sum_y_t / jnp.maximum(nt, 1e-9), 0.0)
     mean_c = jnp.where(nc > 0, sum_y_c / jnp.maximum(nc, 1e-9), 0.0)
     diff = mean_t - mean_c
     n_b = nt + nc
-    n_tot = jnp.maximum(jnp.sum(n_b), 1e-9)
-    ate = jnp.sum(jnp.where(keep, n_b * diff, 0.0)) / n_tot
-    t_tot = jnp.maximum(jnp.sum(nt), 1e-9)
-    att = jnp.sum(jnp.where(keep, nt * diff, 0.0)) / t_tot
+    n_tot = jnp.maximum(sum_fn(n_b), 1e-9)
+    ate = sum_fn(jnp.where(keep, n_b * diff, 0.0)) / n_tot
+    t_tot = jnp.maximum(sum_fn(nt), 1e-9)
+    att = sum_fn(jnp.where(keep, nt * diff, 0.0)) / t_tot
     if sum_yy_t is None or sum_yy_c is None:
         var = jnp.float32(0.0)
     else:
         var = _neyman_variance(keep, nt, nc, mean_t, mean_c,
-                               sum_yy_t, sum_yy_c)
+                               sum_yy_t, sum_yy_c, sum_fn=sum_fn)
     return ATEEstimate(ate=ate, att=att,
-                       n_matched_treated=jnp.sum(nt),
-                       n_matched_control=jnp.sum(nc),
+                       n_matched_treated=sum_fn(nt),
+                       n_matched_control=sum_fn(nc),
                        n_groups=jnp.sum(keep.astype(jnp.int32)),
                        variance=var)
 

@@ -518,6 +518,64 @@ def unpartition_cuboid(pcub: PartitionedCuboid) -> Cuboid:
                   group_valid=gv, treatments=pcub.treatments)
 
 
+@functools.partial(counted_jit, static_argnames=("treatment",))
+def _canonical_view_fn(key_hi, key_lo, stats, *, treatment):
+    """One-dispatch canonical assembly of a partitioned VIEW: flatten +
+    re-sort the (P, C) partition tables AND recompute the overlap mask in
+    the same program — the planner-era (``query_pipeline="assemble"``)
+    baseline, now free of the eager ``overlap_keep`` ops that used to
+    trail the reassembly dispatch."""
+    hi = key_hi.reshape(-1)
+    lo = key_lo.reshape(-1)
+    g = groupby.group_by_key(hi, lo)
+    sums = groupby.segment_sums(g, {k: v.reshape(-1)
+                                    for k, v in stats.items()})
+    nt = sums[f"t_{treatment}"]
+    keep = overlap_keep(g.group_valid, nt, sums["one"] - nt)
+    return g.group_hi, g.group_lo, sums, g.group_valid, keep
+
+
+def unpartition_view(pcub: PartitionedCuboid, treatment: str
+                     ) -> Tuple[Cuboid, jnp.ndarray]:
+    """(canonical cuboid, overlap keep) of one partitioned view in ONE
+    compiled dispatch — the assembled form ``cem_groups`` and the
+    ``assemble`` query baseline run on."""
+    hi, lo, sums, gv, keep = _canonical_view_fn(
+        pcub.key_hi, pcub.key_lo, dict(pcub.stats), treatment=treatment)
+    return Cuboid(codec=pcub.codec, key_hi=hi, key_lo=lo, stats=sums,
+                  group_valid=gv, treatments=pcub.treatments), keep
+
+
+def slice_cuboid(cuboid: Cuboid, capacity: int) -> Cuboid:
+    """Shrink a COMPACTED cuboid (valid groups in a key-sorted prefix —
+    what the fused eviction program leaves behind) to ``capacity`` slots.
+    The capacity-shrink pass after TTL eviction uses this to reclaim the
+    memory of long-lived streams whose live set collapsed; the next fused
+    ingest recompiles at the smaller granule count."""
+    if capacity >= cuboid.capacity:
+        return cuboid
+    return Cuboid(
+        codec=cuboid.codec,
+        key_hi=cuboid.key_hi[:capacity], key_lo=cuboid.key_lo[:capacity],
+        stats={k: v[:capacity] for k, v in cuboid.stats.items()},
+        group_valid=cuboid.group_valid[:capacity],
+        treatments=cuboid.treatments)
+
+
+def slice_partitioned(pcub: PartitionedCuboid,
+                      capacity: int) -> PartitionedCuboid:
+    """Per-partition analogue of :func:`slice_cuboid`: shrink every
+    partition's slot axis of a compacted (P, C) table to ``capacity``."""
+    if capacity >= pcub.capacity:
+        return pcub
+    return PartitionedCuboid(
+        codec=pcub.codec,
+        key_hi=pcub.key_hi[:, :capacity], key_lo=pcub.key_lo[:, :capacity],
+        stats={k: v[:, :capacity] for k, v in pcub.stats.items()},
+        group_valid=pcub.group_valid[:, :capacity],
+        treatments=pcub.treatments)
+
+
 @functools.partial(counted_jit, static_argnames=("n_parts",))
 def route_delta(hi, lo, stats, gv, n_parts: int):
     """Route a delta stat table to its owner partitions (single-device

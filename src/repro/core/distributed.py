@@ -321,6 +321,81 @@ def make_routed_delta_build(mesh, specs: Mapping, treatments: Sequence[str],
     return counted_jit(fn)
 
 
+# ===================== routed row lookup (partitioned views) ================
+def _routed_lookup_body(columns, valid, t_hi, t_lo, keep, *, codec, specs,
+                        n_parts, n_dev, axis):
+    """Per-device shard body of the ROUTED row lookup: the device-resident
+    ``matched_rows`` probe against key-range partitioned views with no
+    full reassembly. Each device packs its row shard's (coarsened) keys,
+    hashes every row to its OWNER partition, exchanges probe keys with one
+    ``all_to_all``, answers the arrivals with a partition-local binary
+    search in its k resident tables (``groupby.lookup_rows_in_parts``) and
+    routes the boolean answers back with a second ``all_to_all`` — so
+    RESIDENT state stays ~1/N per device and no device ever materializes
+    the whole view. Probe buffers are currently dense per destination
+    (each device searches all n_dev * n_local arrival slots, most of
+    them masked invalid), so per-device probe COMPUTE is O(total probe
+    rows); compacting probes per destination before routing is the
+    documented ROADMAP follow-up. Exposed standalone so the fused query
+    programs (:func:`repro.core.fused.get_fused_rowlookup`) compose it
+    under one jit."""
+    from repro.core import cube as cube_mod
+    from repro.core.coarsen import coarsen_columns
+    from repro.core.keys import INVALID_HI, INVALID_LO
+
+    k = n_parts // n_dev
+    me = jax.lax.axis_index(axis)
+    buckets = coarsen_columns(columns, specs)
+    hi, lo = codec.pack(buckets, valid)
+    pid = cube_mod.partition_ids(hi, lo, n_parts)
+    dev = pid // jnp.int32(k)
+    own = valid[None, :] & (dev[None, :] == jnp.arange(n_dev)[:, None])
+    bhi = jnp.where(own, hi[None, :], INVALID_HI)
+    blo = jnp.where(own, lo[None, :], INVALID_LO)
+    rhi = jax.lax.all_to_all(bhi, axis, 0, 0, tiled=True).reshape(-1)
+    rlo = jax.lax.all_to_all(blo, axis, 0, 0, tiled=True).reshape(-1)
+    rvalid = ~((rhi == INVALID_HI) & (rlo == INVALID_LO))
+    rpid = cube_mod.partition_ids(rhi, rlo, n_parts)
+    j = jnp.clip(rpid - me * jnp.int32(k), 0, k - 1)
+    pos, found = groupby.lookup_rows_in_parts(rhi, rlo, j, t_hi, t_lo)
+    matched = rvalid & found & keep[j, pos]
+    back = jax.lax.all_to_all(matched.reshape(n_dev, -1), axis, 0, 0,
+                              tiled=True)
+    # row d of `back` = this device's rows as answered by owner device d;
+    # every probe row was routed to exactly one owner
+    return jnp.any(back.reshape(n_dev, -1), axis=0)
+
+
+def make_routed_row_lookup(mesh, specs: Mapping, view_dims: Sequence[str],
+                           n_parts: int, axis: str = "data"):
+    """Standalone jitted routed row lookup (the fused query pipeline wraps
+    :func:`_routed_lookup_body` itself; this factory serves benchmarks and
+    ad-hoc probes). Returns ``f(columns, valid, t_hi, t_lo, keep) ->
+    matched`` with rows sharded over ``axis`` and the (n_parts, C) view
+    state sharded per partition. Row count must divide the axis size (the
+    engine pads)."""
+    import functools
+
+    from repro.core.cem import make_codec
+
+    vspecs = {d: specs[d] for d in view_dims}
+    codec = make_codec(vspecs)
+    n_dev = int(mesh.shape[axis])
+    if n_parts % n_dev != 0:
+        raise ValueError(f"n_parts={n_parts} must be a multiple of the "
+                         f"data-axis size {n_dev}")
+    body = functools.partial(_routed_lookup_body, codec=codec, specs=vspecs,
+                             n_parts=n_parts, n_dev=n_dev, axis=axis)
+    from jax.experimental.shard_map import shard_map
+    part = P(axis, None)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis), P(axis), part, part, part),
+                   out_specs=P(axis),
+                   check_rep=False)
+    from repro.launch.trace import counted_jit
+    return counted_jit(fn, label="query")
+
+
 # ============================= ring k-NN ====================================
 def make_ring_knn(mesh, k: int, axis: str = "data"):
     """Returns jitted f(Q, C, c_valid) -> (dist, idx): for each query row,

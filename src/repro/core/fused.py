@@ -41,6 +41,15 @@ rebuild, exactly as before.
 Programs are cached at module level (``functools.lru_cache``) keyed on the
 full schema + capacity signature, so every engine with the same shapes
 shares one compilation.
+
+QUERIES get the same treatment (PR 5): :func:`get_fused_query` answers an
+uncached ``ate()`` with ONE compiled dispatch straight on the raw
+(replicated or partitioned) view state — subpopulation filter + keep mask
+per partition, in-program canonical key-sort, capacity-invariant chunked
+reductions — and :func:`get_fused_rowlookup` answers ``matched_rows``
+with one dispatch (routed all-to-all probe on a partitioned mesh). Query
+programs take state BY REFERENCE (never donated) and return only scalars
+or a per-row mask; the host fetches once and caches.
 """
 from __future__ import annotations
 
@@ -53,12 +62,20 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import cube as cube_mod
 from repro.core import groupby
+from repro.core.ate import estimate_ate_from_stats
 from repro.core.cem import overlap_keep, update_overlap
 from repro.core.keys import INVALID_HI, INVALID_LO
 from repro.core.propensity import _stream_retract, _stream_update
+from repro.kernels.segment_stats import chunked_sum
 from repro.launch.trace import counted_jit
 
 BASE_VIEW = "__base__"
+
+
+def query_stat_names(treatment: str) -> Tuple[str, ...]:
+    """The stat columns one treatment's causal query consumes."""
+    return ("one", "y", "yy", f"t_{treatment}", f"yt_{treatment}",
+            f"yyt_{treatment}")
 
 # renormalize int32 last-touch stamps when the ingest counter approaches
 # the int32 ceiling (see OnlineEngine._renorm_touch). The shift is at
@@ -253,13 +270,20 @@ def _stream_step(stream, stream_names, columns, valid, retract, seed,
     return dict(res=res, pri=pri, n=n, sums=sums, sumsqs=sumsqs)
 
 
-def _pad_batch(columns, valid, ndev: int):
-    n = valid.shape[0]
-    pad = (-n) % ndev
+def pad_tail(columns, valid, pad: int):
+    """Append ``pad`` invalid rows to a columnar batch — THE one
+    definition of row padding (mesh divisibility, power-of-two batch
+    buckets) shared by the engines and the fused program bodies, so
+    padding semantics can never diverge between call sites."""
     if pad:
-        columns = {k: jnp.pad(v, (0, pad)) for k, v in columns.items()}
+        columns = {k: jnp.pad(v, [(0, pad)] + [(0, 0)] * (v.ndim - 1))
+                   for k, v in columns.items()}
         valid = jnp.pad(valid, (0, pad))
     return columns, valid
+
+
+def _pad_batch(columns, valid, ndev: int):
+    return pad_tail(columns, valid, (-valid.shape[0]) % ndev)
 
 
 # ===================== replicated single-dispatch ingest ====================
@@ -491,6 +515,172 @@ def get_fused_ingest_parts(codec, specs_items, tnames: Tuple[str, ...],
     return counted_jit(program, donate_argnums=(2,))
 
 
+# ===================== device-resident query pipeline =======================
+def _query_mask(hi, lo, gv, keep, codec, subpop):
+    """Subpopulation filter + overlap keep as ONE elementwise mask — the
+    per-partition (per-device-local, 1/N) stage of a query. ``subpop`` is
+    the frozen ((dim, (bucket, ...)), ...) predicate, static per program."""
+    m = gv & keep
+    if subpop:
+        for dim, allowed in subpop:
+            vals = codec.extract(hi, lo, dim)
+            ok = jnp.zeros_like(m)
+            for b in allowed:
+                ok = ok | (vals == b)
+            m = m & ok
+    return m
+
+
+def _estimate_from_masked(hi, lo, stats, m, treatment):
+    """Canonical estimate over the masked groups: re-sort the surviving
+    keys into the canonical (globally key-sorted, valid-prefix) order —
+    keys are unique across partitions, so the segment sums are exact
+    gathers — then reduce with the capacity-invariant canonical sum
+    (:func:`repro.kernels.segment_stats.chunked_sum`). The result is a
+    bitwise-deterministic function of the surviving group stats alone:
+    identical for replicated/partitioned layouts, any partition count, any
+    capacity history, and identical to the ``assemble`` baseline path."""
+    hi = hi.reshape(-1)
+    lo = lo.reshape(-1)
+    m = m.reshape(-1)
+    chi = jnp.where(m, hi, INVALID_HI)
+    clo = jnp.where(m, lo, INVALID_LO)
+    g = groupby.group_by_key(chi, clo)
+    sums = groupby.segment_sums(
+        g, {k: jnp.where(m, v.reshape(-1), 0.0) for k, v in stats.items()})
+    keep = g.group_valid
+    nt = sums[f"t_{treatment}"]
+    nc = sums["one"] - nt
+    yt = sums[f"yt_{treatment}"]
+    yc = sums["y"] - yt
+    yyt = sums[f"yyt_{treatment}"]
+    yyc = sums["yy"] - yyt
+    est = estimate_ate_from_stats(keep, nt, nc, yt, yc, sum_yy_t=yyt,
+                                  sum_yy_c=yyc, sum_fn=chunked_sum)
+    return dict(ate=est.ate, att=est.att,
+                n_matched_treated=est.n_matched_treated,
+                n_matched_control=est.n_matched_control,
+                n_groups=est.n_groups, variance=est.variance)
+
+
+def estimate_view_body(hi, lo, stats, gv, keep, *, codec, treatment,
+                       subpop):
+    """Whole causal query as pure traced compute: mask then canonical
+    estimate. Shared verbatim by the fused one-dispatch query program and
+    the ``assemble`` baseline (which feeds it the reassembled view) — one
+    definition of the estimator across every query pipeline."""
+    m = _query_mask(hi, lo, gv, keep, codec, subpop)
+    return _estimate_from_masked(hi, lo, stats, m, treatment)
+
+
+@functools.lru_cache(maxsize=512)
+def get_fused_query(codec, treatment: str, subpop, mesh, mesh_axis: str,
+                    partitioned: bool):
+    """One-dispatch causal query program: ``f(hi, lo, stats, gv, keep) ->
+    {ate, att, n_matched_*, n_groups, variance}`` over a view's raw
+    materialized state — replicated ``(C,)`` or partitioned ``(P, C)`` —
+    with NO host-side reassembly or compaction anywhere on the path. The
+    engine fetches the scalar dict with one ``device_get`` and caches it;
+    steady state is exactly one compiled dispatch per uncached query.
+
+    On a mesh with partitioned state the program is a single ``shard_map``
+    body: subpopulation filtering and keep masking run PER PARTITION on
+    the owning device (per-device work/state ~1/N), then only the tiny
+    masked key+stat vectors cross the interconnect (one ``all_gather``)
+    and every device runs the identical canonical reduce. The final
+    reduce is deliberately replicated rather than ``psum``-composed:
+    a psum's float association would depend on the partition count, while
+    the canonical chunked reduction is what keeps the estimate bit-
+    identical across 1/2/4-device meshes, any ``n_parts``, and the
+    replicated engine. ``subpop`` is the frozen subpopulation predicate
+    (part of the program cache key, like every shape/schema input)."""
+    ndev = 1 if mesh is None else int(mesh.shape[mesh_axis])
+
+    if partitioned and ndev > 1:
+        from jax.experimental.shard_map import shard_map
+
+        def body(hi, lo, stats, gv, keep):
+            # local (k, C) slices: mask per partition, gather the masked
+            # tables, estimate replicated (same bits on every device)
+            m = _query_mask(hi, lo, gv, keep, codec, subpop)
+            chi = jnp.where(m, hi, INVALID_HI)
+            clo = jnp.where(m, lo, INVALID_LO)
+            cstats = {k: jnp.where(m, v, 0.0) for k, v in stats.items()}
+            ghi = jax.lax.all_gather(chi, mesh_axis, tiled=True)
+            glo = jax.lax.all_gather(clo, mesh_axis, tiled=True)
+            gstats = {k: jax.lax.all_gather(v, mesh_axis, tiled=True)
+                      for k, v in cstats.items()}
+            gm = ~((ghi == INVALID_HI) & (glo == INVALID_LO))
+            return _estimate_from_masked(ghi, glo, gstats, gm, treatment)
+
+        part = P(mesh_axis, None)
+
+        def program(hi, lo, stats, gv, keep):
+            return shard_map(body, mesh=mesh,
+                             in_specs=(part, part, part, part, part),
+                             out_specs=P(),
+                             check_rep=False)(hi, lo, stats, gv, keep)
+    else:
+        def program(hi, lo, stats, gv, keep):
+            return estimate_view_body(hi, lo, stats, gv, keep, codec=codec,
+                                      treatment=treatment, subpop=subpop)
+
+    return counted_jit(program, label="query")
+
+
+@functools.lru_cache(maxsize=256)
+def get_fused_rowlookup(codec, specs_items: Tuple, n_parts: int, mesh,
+                        mesh_axis: str):
+    """One-dispatch ``matched_rows`` program: ``f(columns, valid, t_hi,
+    t_lo, keep) -> matched`` — coarsen + pack the probe rows, look each
+    key up in the materialized view, and apply the overlap mask, all in
+    one compiled program. ``n_parts == 0`` marks the replicated ``(C,)``
+    layout (plain binary search in the broadcast table); ``n_parts > 0``
+    the partitioned ``(P, C)`` one, where each probe row hashes to its
+    owning partition and binary-searches ONLY that partition's table. On
+    a mesh the partitioned variant is the ROUTED lookup
+    (:func:`repro.core.distributed._routed_lookup_body`): probe keys hash
+    to owner devices, cross with one all-to-all, answer with a local
+    search, and route back — no device ever reassembles the view."""
+    specs = dict(specs_items)
+    ndev = 1 if mesh is None else int(mesh.shape[mesh_axis])
+
+    if n_parts > 0 and ndev > 1:
+        from jax.experimental.shard_map import shard_map
+
+        from repro.core.distributed import _routed_lookup_body
+        body = functools.partial(_routed_lookup_body, codec=codec,
+                                 specs=specs, n_parts=n_parts, n_dev=ndev,
+                                 axis=mesh_axis)
+        part = P(mesh_axis, None)
+
+        def program(columns, valid, t_hi, t_lo, keep):
+            n = valid.shape[0]
+            pcols, pvalid = _pad_batch(columns, valid, ndev)
+            matched = shard_map(
+                body, mesh=mesh,
+                in_specs=(P(mesh_axis), P(mesh_axis), part, part, part),
+                out_specs=P(mesh_axis),
+                check_rep=False)(pcols, pvalid, t_hi, t_lo, keep)
+            return matched[:n]
+    else:
+        from repro.core.coarsen import coarsen_columns
+
+        def program(columns, valid, t_hi, t_lo, keep):
+            buckets = coarsen_columns(columns, specs)
+            hi, lo = codec.pack(buckets, valid)
+            if n_parts == 0:
+                pos, found = groupby.lookup_rows_in_table(hi, lo, t_hi,
+                                                          t_lo)
+                return valid & found & keep[pos]
+            pid = cube_mod.partition_ids(hi, lo, n_parts)
+            pos, found = groupby.lookup_rows_in_parts(hi, lo, pid, t_hi,
+                                                      t_lo)
+            return valid & found & keep[pid, pos]
+
+    return counted_jit(program, label="query")
+
+
 # ===================== device-resident eviction compaction ==================
 def _compact_one(hi, lo, stats, gv, touch, keep_mask):
     """Capacity-preserving device compaction of one sorted stat table:
@@ -513,17 +703,19 @@ def get_fused_evict(tnames: Tuple[str, ...], caps: Tuple, n_parts: int,
                     mesh, mesh_axis: str, has_stream: bool):
     """One-dispatch TTL eviction for every view at once: keep-mask from the
     touch stamps, per-partition device compaction (n_parts == 0 marks the
-    replicated (C,) layout), overlap recompute, per-view evicted counts as
-    the only fetched scalars. State is DONATED — eviction, like ingest,
-    updates in place. On a mesh, runs as one shard_map body over the local
-    partition slices (replicated state: local full copy). Closes ROADMAP
-    open item "eviction compaction runs on the host per partition"."""
+    replicated (C,) layout), overlap recompute, per-view evicted counts
+    AND post-compaction live occupancy (max per partition — the input of
+    the capacity-shrink pass) as the only fetched scalars. State is
+    DONATED — eviction, like ingest, updates in place. On a mesh, runs as
+    one shard_map body over the local partition slices (replicated state:
+    local full copy). Closes ROADMAP open item "eviction compaction runs
+    on the host per partition"."""
     del caps  # part of the cache key only (shapes differ per capacity)
     ndev = 1 if mesh is None else int(mesh.shape[mesh_axis])
     on_mesh = ndev > 1
 
     def body(state, cutoff):
-        new_views, counts = {}, {}
+        new_views, counts, live_max = {}, {}, {}
         for name, st in state["views"].items():
             keep_mask = st["touch"] >= cutoff
             n_evict = jnp.sum((st["gv"] & ~keep_mask).astype(jnp.int32))
@@ -533,6 +725,15 @@ def get_fused_evict(tnames: Tuple[str, ...], caps: Tuple, n_parts: int,
             fn = _compact_one if n_parts == 0 else jax.vmap(_compact_one)
             hi, lo, stats, gv, touch = fn(st["hi"], st["lo"], st["stats"],
                                           st["gv"], st["touch"], keep_mask)
+            # live occupancy after compaction — per partition on the
+            # (P, C) layout, whose MAX bounds the shrink-pass capacity
+            if n_parts == 0:
+                n_live = jnp.sum(gv.astype(jnp.int32))
+            else:
+                n_live = jnp.max(jnp.sum(gv.astype(jnp.int32), axis=1))
+                if on_mesh:
+                    n_live = jax.lax.pmax(n_live, mesh_axis)
+            live_max[name] = n_live
             new_st = dict(hi=hi, lo=lo, stats=stats, gv=gv, touch=touch)
             if st.get("keep") is not None:
                 nt = stats[f"t_{name}"]
@@ -542,7 +743,7 @@ def get_fused_evict(tnames: Tuple[str, ...], caps: Tuple, n_parts: int,
             new_views[name] = new_st
         new_state = dict(state)
         new_state["views"] = new_views
-        return new_state, counts
+        return new_state, counts, live_max
 
     if on_mesh:
         from jax.experimental.shard_map import shard_map
@@ -554,7 +755,7 @@ def get_fused_evict(tnames: Tuple[str, ...], caps: Tuple, n_parts: int,
         def program(state, cutoff):
             return shard_map(body, mesh=mesh,
                              in_specs=(state_spec, P()),
-                             out_specs=(state_spec, P()),
+                             out_specs=(state_spec, P(), P()),
                              check_rep=False)(state, cutoff)
     else:
         program = body

@@ -183,3 +183,40 @@ def lookup_rows_in_table(hi: jnp.ndarray, lo: jnp.ndarray,
     pos = jnp.clip(pos, 0, n_table - 1)
     found = (table_hi[pos] == hi) & (table_lo[pos] == lo)
     return pos, found
+
+
+def lookup_rows_in_parts(hi: jnp.ndarray, lo: jnp.ndarray, pid: jnp.ndarray,
+                         table_hi: jnp.ndarray, table_lo: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row lookup against a STACK of sorted key tables: row i is searched
+    in partition ``pid[i]`` of the ``(P, C)`` tables. This is the
+    partition-local probe of the routed row lookup — each row's owning
+    partition is a pure function of its key (``cube.partition_ids``), so
+    one binary search in the right partition replaces a search over the
+    reassembled view. Plain traceable function (no jit wrapper): it runs
+    inline inside the fused query/row-lookup programs.
+
+    Returns (pos, found) like :func:`lookup_rows_in_table`, with ``pos``
+    indexing into partition ``pid[i]``'s slot axis."""
+    n_table = table_hi.shape[1]
+
+    def search_one(key_hi, key_lo, p):
+        def body(state, _):
+            lo_b, hi_b = state
+            mid = (lo_b + hi_b) // 2
+            thi = table_hi[p, mid]
+            tlo = table_lo[p, mid]
+            less = (thi < key_hi) | ((thi == key_hi) & (tlo < key_lo))
+            lo_b = jnp.where(less, mid + 1, lo_b)
+            hi_b = jnp.where(less, hi_b, mid)
+            return (lo_b, hi_b), None
+
+        n_iter = max(1, math.ceil(math.log2(max(2, n_table))) + 1)
+        (lo_b, _), _ = jax.lax.scan(body, (jnp.int32(0), jnp.int32(n_table)),
+                                    None, length=n_iter)
+        return lo_b
+
+    pos = jax.vmap(search_one)(hi, lo, pid)
+    pos = jnp.clip(pos, 0, n_table - 1)
+    found = (table_hi[pid, pos] == hi) & (table_lo[pid, pos] == lo)
+    return pos, found

@@ -55,6 +55,20 @@ under streaming INSERTs with work proportional to the DELTA, not the data:
      keeps the PR 3 two-dispatch planner path and ``pipeline="unfused"``
      the legacy per-merge-sync loop, both measurable in
      ``benchmarks/bench_online.py``.
+  8. ONE COMPILED DISPATCH PER QUERY (``query_pipeline="fused"``, the
+     default) — an uncached ``ate()`` runs subpopulation filtering, keep
+     masking and the sufficient-stat reductions inside one device program
+     straight on the raw materialized state (per-partition/1-per-device
+     on a mesh), fetches one scalar dict, and caches it host-side
+     (delta-predicate invalidation, item 5): repeated dashboard queries
+     are zero dispatches and zero transfers, and the partitioned
+     engine's canonical-reassembly memo is keyed on a state version
+     bumped per commit. ``matched_rows`` is a one-dispatch
+     routed row lookup on the partitioned layout. The canonical chunked
+     reduction (:func:`repro.kernels.segment_stats.chunked_sum`) makes
+     every estimate a bitwise-deterministic function of the group content
+     alone, so the fused path, the ``query_pipeline="assemble"``
+     baseline and both engine layouts agree exactly.
 
 The maintained state is EXACT: after any number of ingested batches, every
 cuboid stat, CEM matched set and ATE equals the offline computation over
@@ -78,7 +92,7 @@ import numpy as np
 from repro.core import cube as cube_mod
 from repro.core import fused as fused_mod
 from repro.core import groupby
-from repro.core.ate import ATEEstimate, estimate_ate_from_stats
+from repro.core.ate import ATEEstimate
 from repro.core.cem import (CEMGroups, make_codec, overlap_keep, pack_keys,
                             update_overlap)
 from repro.core.coarsen import CoarsenSpec
@@ -89,13 +103,31 @@ from repro.launch.trace import counted_jit
 
 BASE_VIEW = fused_mod.BASE_VIEW
 
-# Canonical capacity granule of the query path: estimates are computed over
-# a key-sorted stat vector compacted to a capacity derived from CONTENT
-# (n_groups rounded up to this), never from an engine's growth history or
-# partition count — so float reductions see identical vectors and the same
-# state yields bit-identical estimates from replicated and partitioned
-# engines on any device count.
-_QUERY_GRANULE = 1024
+# The query reductions run at a fixed canonical chunk width
+# (repro.kernels.segment_stats.CANONICAL_BLOCK, via chunked_sum): the
+# key-sorted group stats reduce in fixed 1024-wide chunks combined
+# strictly sequentially, so estimates are a function of the canonical
+# group CONTENT alone — never of an engine's capacity, growth history or
+# partition count — and the same state yields bit-identical results from
+# every engine layout and query pipeline on any device count.
+
+# Streamed batches are padded to power-of-two row buckets (floor below)
+# before they reach the compiled ingest pipeline: the fused program traces
+# per row-count, so bucketing caps the trace count of an irregular stream
+# at ~log2(max batch) instead of one trace per distinct size. Padding rows
+# are invalid (masked everywhere, including the streaming-propensity
+# update, which sees the same padded draw shape in every engine — that is
+# what keeps reservoir states bit-identical across engines and pipelines).
+BATCH_BUCKET_GRANULE = 64
+
+
+def _bucket_rows(n: int) -> int:
+    """Power-of-two row bucket (>= BATCH_BUCKET_GRANULE) a batch pads to."""
+    b = BATCH_BUCKET_GRANULE
+    while b < n:
+        b <<= 1
+    return b
+
 
 SubPop = Optional[Mapping[str, Sequence[int]]]
 
@@ -152,34 +184,45 @@ class _PartView:
         self.pcub = tab
 
 
+def _run_fused_query(tab, keep: jnp.ndarray, treatment: str,
+                     subpopulation: SubPop, *, mesh=None,
+                     mesh_axis: str = "data",
+                     partitioned: bool = False) -> ATEEstimate:
+    """THE one construction of a fused query call: resolve the cached
+    program for (codec, treatment, frozen subpopulation, mesh layout),
+    select the stat columns the estimator consumes, dispatch once.
+    ``tab`` is any stat table with the cuboid field names — a replicated
+    ``Cuboid``, a ``(P, C)`` ``PartitionedCuboid``, or an assembled
+    canonical view — so every query pipeline and both engine layouts
+    share this single entry point."""
+    prog = fused_mod.get_fused_query(tab.codec, treatment,
+                                     _freeze_subpop(subpopulation),
+                                     mesh, mesh_axis, partitioned)
+    stats = {k: tab.stats[k]
+             for k in fused_mod.query_stat_names(treatment)}
+    return ATEEstimate(**prog(tab.key_hi, tab.key_lo, stats,
+                              tab.group_valid, keep))
+
+
 def _estimate_view(cub: cube_mod.Cuboid, keep: jnp.ndarray, treatment: str,
                    subpopulation: SubPop) -> ATEEstimate:
-    """Causal estimate over one materialized view's stat table.
+    """Causal estimate over one materialized view's stat table — ONE
+    compiled dispatch, no host round trip anywhere on the path.
 
-    The estimate is computed over the CANONICAL form of the view — matched
-    groups in key-sorted order, compacted to a content-derived capacity
-    (:data:`_QUERY_GRANULE`) — so the float reductions are deterministic
-    functions of the maintained state alone: replicated and partitioned
-    engines (any partition count, any capacity-growth history) return
-    bit-identical ATE, ATT and Neyman variance for identical group stats.
-    """
-    if subpopulation:
-        for dim, allowed in subpopulation.items():
-            cub = cube_mod.filter_cuboid(cub, dim, allowed)
-        # population restriction leaves per-group stats (hence overlap)
-        # of surviving groups unchanged
-        keep = keep & cub.group_valid
-    cub = cube_mod.compact_cuboid(cub, granule=_QUERY_GRANULE,
-                                  keep_mask=np.asarray(keep))
-    keep = cub.group_valid
-    nt = cub.stats[f"t_{treatment}"]
-    nc = cub.stats["one"] - nt
-    yt = cub.stats[f"yt_{treatment}"]
-    yc = cub.stats["y"] - yt
-    yyt = cub.stats[f"yyt_{treatment}"]
-    yyc = cub.stats["yy"] - yyt
-    return estimate_ate_from_stats(keep, nt, nc, yt, yc,
-                                   sum_yy_t=yyt, sum_yy_c=yyc)
+    The subpopulation filter, the keep mask and the estimate reductions
+    all run inside the same device program
+    (:func:`repro.core.fused.estimate_view_body`): the surviving groups
+    are re-sorted into canonical key order in-program and reduced with the
+    capacity-invariant canonical sum, so the float reductions are
+    deterministic functions of the maintained group stats alone —
+    replicated and partitioned engines (any partition count, any
+    capacity-growth history) return bit-identical ATE, ATT and Neyman
+    variance for identical state. The former host-side
+    ``compact_cuboid`` + blocking ``np.asarray(keep)`` transfer are gone
+    from the query path entirely; this shared body is also the
+    ``query_pipeline="assemble"`` baseline and the differential oracle's
+    estimator."""
+    return _run_fused_query(cub, keep, treatment, subpopulation)
 
 
 # Touch-stamp helpers: the pure bodies live in ``repro.core.fused`` (the
@@ -338,6 +381,14 @@ class OnlineEngine:
                  one-blocking-read-per-merge loop. All three maintain
                  bit-identical state; the non-default modes exist as
                  measurable baselines (``benchmarks/bench_online.py``).
+    query_pipeline: "fused" (default) answers ``ate()`` /
+                 ``matched_rows()`` with ONE compiled dispatch straight on
+                 the raw materialized state (filter + keep + canonical
+                 reduce in-program; routed row lookup on partitioned
+                 views); "assemble" keeps the planner-era baseline that
+                 first reassembles the canonical view. Both return
+                 bit-identical results (the shared canonical estimator);
+                 "assemble" exists as the measurable baseline.
     fused_host_sync: legacy alias — ``False`` selects
                  ``pipeline="unfused"``; ignored when ``pipeline`` is
                  passed explicitly.
@@ -350,12 +401,17 @@ class OnlineEngine:
                  row_granule: int = 4096, use_pallas: bool = False,
                  reservoir_size: int = 8192, mesh=None,
                  mesh_axis: str = "data", seed: int = 0,
-                 fused_host_sync: bool = True, pipeline: str = None):
+                 fused_host_sync: bool = True, pipeline: str = None,
+                 query_pipeline: str = "fused"):
         if pipeline is None:
             pipeline = "fused1" if fused_host_sync else "unfused"
         if pipeline not in ("fused1", "planner", "unfused"):
             raise ValueError(f"unknown pipeline {pipeline!r}")
+        if query_pipeline not in ("fused", "assemble"):
+            raise ValueError(f"unknown query_pipeline {query_pipeline!r}")
         self.pipeline = pipeline
+        self.query_pipeline = query_pipeline
+        self._state_version = 0
         self.fused_host_sync = pipeline != "unfused"
         self.seed = seed
         self.treatments = {t: tuple(sorted(c)) for t, c in treatments.items()}
@@ -450,10 +506,8 @@ class OnlineEngine:
         cols = {c: batch.columns[c] for c in self._row_cols}
         valid = batch.valid
         if self.mesh is not None and self._mesh_ndev > 1:
-            pad = (-batch.nrows) % self._mesh_ndev
-            if pad:
-                cols = {k: jnp.pad(v, (0, pad)) for k, v in cols.items()}
-                valid = jnp.pad(valid, (0, pad))
+            cols, valid = fused_mod.pad_tail(
+                cols, valid, (-batch.nrows) % self._mesh_ndev)
             fn = self._get_sharded_build(self._delta_cap)
             return fn(cols, valid)
         fn = cube_mod._build_fn(self.codec,
@@ -478,17 +532,46 @@ class OnlineEngine:
         group counts negative and silently corrupt overlap masks, so it is
         detected (new keys, or any post-merge count below zero) and raises
         ``ValueError`` BEFORE any state is committed.
+
+        The batch is padded to a power-of-two row bucket before it reaches
+        any compiled pipeline (invalid padding rows contribute nothing),
+        capping the fused program's retrace count for irregular streams at
+        ~log2(max batch). Row accounting (``DeltaReport.n_rows``,
+        ``n_rows_ingested``, the optional row log) stays on the original
+        batch.
         """
         self._guard_retract_rows(retract)
         self._maybe_renorm_touch()
+        padded = self._bucket_pad(batch)
         if self.pipeline == "fused1":
-            return self._ingest_fused1(batch, retract)
-        hi, lo, stats, gv, n_full, overflow = self._build_delta(batch)
+            return self._ingest_fused1(padded, retract, orig=batch)
+        hi, lo, stats, gv, n_full, overflow = self._build_delta(padded)
         if self.pipeline == "planner":
-            return self._ingest_fused(batch, hi, lo, stats, gv, n_full,
-                                      overflow, retract)
-        return self._ingest_unfused(batch, hi, lo, stats, gv, n_full,
-                                    overflow, retract)
+            return self._ingest_fused(padded, hi, lo, stats, gv, n_full,
+                                      overflow, retract, orig=batch)
+        return self._ingest_unfused(padded, hi, lo, stats, gv, n_full,
+                                    overflow, retract, orig=batch)
+
+    @staticmethod
+    def _bucket_pad(batch: Table) -> Table:
+        """Pad a streamed batch to its power-of-two row bucket with
+        invalid rows. Every engine and pipeline pads identically (the
+        bucket is a pure function of the row count), so the streaming-
+        propensity reservoir — whose uniform priorities depend on the
+        padded draw SHAPE — stays bit-identical across engines, pipelines
+        and mesh sizes; power-of-two buckets also absorb the mesh
+        divisibility padding.
+
+        Cost note: a non-bucket-sized batch pays one eager ``jnp.pad``
+        per column here, OUTSIDE the fused program (the pads are async
+        copies, no host sync, and invisible to the dispatch counter) —
+        streams that deliver bucket-sized batches skip them entirely and
+        keep the pure one-launch ingest."""
+        pad = _bucket_rows(batch.nrows) - batch.nrows
+        if pad == 0:
+            return batch
+        cols, valid = fused_mod.pad_tail(batch.columns, batch.valid, pad)
+        return Table(columns=cols, valid=valid)
 
     # ------------------------------------------- single-dispatch pipeline
     def _view_table(self, name: str):
@@ -538,7 +621,14 @@ class OnlineEngine:
         self._post_state_swap()
 
     def _post_state_swap(self) -> None:
-        """Hook for layout-specific caches (partitioned reassembly memo)."""
+        """Invalidate layout-derived memos after ANY state mutation: the
+        state version keys the partitioned canonical-reassembly memo
+        (``_view_state``). The estimate cache is NOT version-checked —
+        its validity is delta-predicate-based (:meth:`_invalidate` drops
+        exactly the entries a committed delta touched, eviction clears
+        it), so untouched subpopulation entries deliberately survive
+        commits and keep serving with zero dispatches."""
+        self._state_version += 1
 
     def _fused_caps(self) -> Tuple:
         return tuple(sorted(
@@ -561,13 +651,14 @@ class OnlineEngine:
             self.mesh_axis, self.use_pallas, retract, self._stream_names(),
             self.seed)
 
-    def _fallback_overflow(self, batch: Table, retract: bool) -> DeltaReport:
+    def _fallback_overflow(self, batch: Table, retract: bool,
+                           orig: Table) -> DeltaReport:
         """Delta-capacity overflow: the in-program delta table missed
         groups. ``_delta_cap`` has already been grown; rebuild the delta
         (now at the larger capacity) and take the exact legacy path."""
         hi, lo, stats, gv, n_full, overflow = self._build_delta(batch)
         return self._ingest_unfused(batch, hi, lo, stats, gv, n_full,
-                                    overflow, retract)
+                                    overflow, retract, orig=orig)
 
     def _grow_views(self, n_merged: Dict[str, int],
                     grew: Dict[str, bool]) -> None:
@@ -591,11 +682,15 @@ class OnlineEngine:
                 view.keep = jnp.pad(view.keep, (0, pad))
             self._touch[name] = jnp.pad(self._touch[name], (0, pad))
 
-    def _ingest_fused1(self, batch: Table, retract: bool) -> DeltaReport:
+    def _ingest_fused1(self, batch: Table, retract: bool,
+                       orig: Table = None) -> DeltaReport:
         """ONE compiled dispatch per steady-state batch: run the fused
         program (state donated), fetch the verdict scalars once, commit by
         reference swap. Growth re-dispatches at a doubled capacity; only
-        delta overflow leaves the device-resident path."""
+        delta overflow leaves the device-resident path. ``batch`` is the
+        bucket-padded table the program consumes; ``orig`` the caller's
+        batch, which row accounting reports."""
+        orig = batch if orig is None else orig
         cols = {c: batch.columns[c] for c in self._row_cols}
         valid = batch.valid
         counter = np.int32(self._ingest_count + 1)
@@ -611,7 +706,7 @@ class OnlineEngine:
                 self._delta_cap = _round_capacity(
                     max(int(f["n_full"]), 2 * self._delta_cap),
                     self.delta_granule)
-                return self._fallback_overflow(batch, retract)
+                return self._fallback_overflow(batch, retract, orig)
             if retract and (not all(map(bool, f["ok"].values()))
                             or f["neg_min"] < -0.5):
                 self._raise_bad_retraction()
@@ -624,17 +719,17 @@ class OnlineEngine:
         # committed on device; mirror the host-side bookkeeping
         if self.rows is not None:
             self.rows = self.rows.append(
-                batch.select(list(self.rows.table.columns)),
+                orig.select(list(self.rows.table.columns)),
                 granule=self.row_granule)
         if self.stream is not None:
             self.stream = dataclasses.replace(
                 self.stream, n_batches=self.stream.n_batches + 1)
-        self.n_rows_ingested += -batch.nrows if retract else batch.nrows
+        self.n_rows_ingested += -orig.nrows if retract else orig.nrows
         self._ingest_count += 1
         invalidated = self._invalidate(
             np.asarray(f["gv"]).reshape(-1),
             lambda d: np.asarray(f["buckets"][d]).reshape(-1))
-        return DeltaReport(n_rows=batch.nrows,
+        return DeltaReport(n_rows=orig.nrows,
                            n_delta_groups=int(f["n_delta"]),
                            fast_path={k: bool(v) for k, v in f["ok"].items()},
                            invalidated=invalidated)
@@ -676,18 +771,23 @@ class OnlineEngine:
         partitioned engine shards (P, ...) leaves over the mesh."""
         return tree
 
-    def _commit_rows(self, batch: Table, retract: bool) -> None:
+    def _commit_rows(self, batch: Table, retract: bool,
+                     orig: Table = None) -> None:
         """Row log / streaming-propensity / counter updates shared by both
-        ingest paths. Called only after the retraction guard has passed."""
+        ingest paths. Called only after the retraction guard has passed.
+        ``batch`` is the bucket-padded table (the streaming-propensity
+        update MUST see the padded draw shape — same as the fused1
+        in-program update); row accounting uses ``orig``."""
+        orig = batch if orig is None else orig
         if self.rows is not None:
             self.rows = self.rows.append(
-                batch.select(list(self.rows.table.columns)),
+                orig.select(list(self.rows.table.columns)),
                 granule=self.row_granule)
         if self.stream is not None:
             self.stream = self.stream.update(
                 {c: batch.columns[c] for c in self._row_cols},
                 batch.valid, retract=retract)
-        self.n_rows_ingested += -batch.nrows if retract else batch.nrows
+        self.n_rows_ingested += -orig.nrows if retract else orig.nrows
         self._ingest_count += 1
 
     def _guard_retract_rows(self, retract: bool) -> None:
@@ -702,7 +802,9 @@ class OnlineEngine:
             "negative; engine state is unchanged")
 
     def _ingest_fused(self, batch: Table, hi, lo, stats, gv, n_full,
-                      overflow, retract: bool) -> DeltaReport:
+                      overflow, retract: bool,
+                      orig: Table = None) -> DeltaReport:
+        orig = batch if orig is None else orig
         dcap = self._delta_cap
         tnames = tuple(sorted(self.treatments))
         plan = _plan_ingest(
@@ -732,7 +834,7 @@ class OnlineEngine:
             self._delta_cap = _round_capacity(
                 max(int(n_full), 2 * self._delta_cap), self.delta_granule)
             return self._ingest_unfused(batch, hi, lo, stats, gv, n_full,
-                                        overflow, retract)
+                                        overflow, retract, orig=orig)
         all_fast = bool(fetched["ok_b"]) and all(
             bool(v) for v in fetched["ok_v"].values())
         if retract and (not all_fast or fetched["neg_min"] < -0.5):
@@ -783,19 +885,22 @@ class OnlineEngine:
                     _remap_touch(old_v, merged, self._touch[t]),
                     pos_v, v_gv, counter)
             fast[t] = bool(fetched["ok_v"][t])
-        self._commit_rows(batch, retract)
+        self._commit_rows(batch, retract, orig=orig)
+        self._post_state_swap()
         invalidated = self._invalidate(
             fetched["gv"], lambda d: fetched["buckets"][d])
-        return DeltaReport(n_rows=batch.nrows,
+        return DeltaReport(n_rows=orig.nrows,
                            n_delta_groups=int(fetched["n_delta"]),
                            fast_path=fast, invalidated=invalidated)
 
     def _ingest_unfused(self, batch: Table, hi, lo, stats, gv, n_full,
-                        overflow, retract: bool) -> DeltaReport:
+                        overflow, retract: bool,
+                        orig: Table = None) -> DeltaReport:
         """Legacy merge loop: one blocking device->host read per merge (the
         fast/slow decision), plus host-side delta compaction. Kept as the
         exact fallback for delta-capacity overflow and as the measurable
         baseline for the fused path (``bench_online.py``)."""
+        orig = batch if orig is None else orig
         tnames = tuple(sorted(self.treatments))
         if bool(overflow):
             # a local shard overflowed: the gathered table is incomplete,
@@ -853,7 +958,8 @@ class OnlineEngine:
             self._touch[t] = _stamp_touch(touch_v, pos,
                                           d_view.group_valid, counter)
             fast[t] = was_fast
-        self._commit_rows(batch, retract)
+        self._commit_rows(batch, retract, orig=orig)
+        self._post_state_swap()
         gv_host = np.asarray(d_base.group_valid)
         buckets: Dict[str, np.ndarray] = {}
 
@@ -864,7 +970,7 @@ class OnlineEngine:
             return buckets[dim]
 
         invalidated = self._invalidate(gv_host, dim_buckets)
-        return DeltaReport(n_rows=batch.nrows,
+        return DeltaReport(n_rows=orig.nrows,
                            n_delta_groups=int(np.sum(gv_host)),
                            fast_path=fast, invalidated=invalidated)
 
@@ -909,47 +1015,131 @@ class OnlineEngine:
         Runs as ONE donated device program over every view (per-partition
         compaction kernels on the partitioned layout — no host round trip
         per view; the compaction is an exact re-sort GATHER at the current
-        capacity, so surviving stats are bit-identical and slot capacity
-        never shrinks). Returns {view name: groups evicted}.
+        capacity, so surviving stats are bit-identical). When the live
+        occupancy of a view falls below 1/4 of its (grown) capacity, a
+        shrink pass slices the compacted tables down to a halved-or-
+        smaller capacity and the next ingest recompiles at the smaller
+        granule count — long-lived streams whose live set collapses
+        reclaim device memory (``state_bytes()`` decreases). Returns
+        {view name: groups evicted}.
         """
         mesh = self.mesh if self._mesh_ndev > 1 else None
         prog = fused_mod.get_fused_evict(
             tuple(sorted(self.treatments)), self._fused_caps(),
             self._evict_n_parts(), mesh, self.mesh_axis,
             self.stream is not None)
-        new_state, counts = prog(self._pack_view_state(),
-                                 np.int32(self._ingest_count - ttl))
+        new_state, counts, live = prog(self._pack_view_state(),
+                                       np.int32(self._ingest_count - ttl))
         self._unpack_view_state(new_state)
-        evicted = {k: int(v) for k, v in jax.device_get(counts).items()}
+        fetched = jax.device_get(dict(counts=counts, live=live))
+        evicted = {k: int(v) for k, v in fetched["counts"].items()}
         if any(evicted.values()):
             self._cache.clear()
+        self._maybe_shrink({k: int(v) for k, v in fetched["live"].items()})
         return evicted
+
+    # ------------------------------------------------ capacity shrink pass
+    def _shrink_granule(self) -> int:
+        """Capacity floor of the shrink pass (per partition when the
+        layout is partitioned)."""
+        return self.granule
+
+    def _shrink_view(self, name: str, new_cap: int) -> None:
+        """Slice one view's compacted tables (valid groups are a sorted
+        prefix after eviction, so slicing is lossless) down to
+        ``new_cap`` slots."""
+        tab = self._view_table(name)
+        sliced = cube_mod.slice_cuboid(tab, new_cap)
+        if name == BASE_VIEW:
+            self.base = sliced
+        else:
+            view = self.views[name]
+            view.set_table(sliced)
+            view.keep = view.keep[:new_cap]
+        self._touch[name] = self._touch[name][:new_cap]
+
+    def _maybe_shrink(self, live_max: Dict[str, int]) -> None:
+        """Reclaim capacity after eviction: when a view's live occupancy
+        (max per partition on the (P, C) layout) fell below 1/4 of its
+        grown capacity, compact into a halved-or-smaller capacity (floor:
+        the allocation granule, headroom: 2x live rounded up) so the next
+        fused dispatch recompiles at the smaller shape and device memory
+        is actually returned."""
+        shrunk = False
+        for name, live in live_max.items():
+            cap = self._view_table(name).capacity
+            gran = self._shrink_granule()
+            if cap <= gran or 4 * live > cap:
+                continue
+            new_cap = max(gran, _round_capacity(max(2 * live, 1), gran))
+            if new_cap >= cap:
+                continue
+            self._shrink_view(name, new_cap)
+            shrunk = True
+        if shrunk:
+            self._post_state_swap()
 
     # ------------------------------------------------------------ queries
     def _view_state(self, treatment: str
                     ) -> Tuple[cube_mod.Cuboid, jnp.ndarray]:
-        """(stat table, overlap mask) a query runs on — the replicated
-        view directly; the partitioned engine overrides this with the
-        canonical cross-partition reassembly."""
+        """(stat table, overlap mask) an ``assemble``-path query runs on —
+        the replicated view directly; the partitioned engine overrides
+        this with the canonical cross-partition reassembly (one compiled
+        dispatch, memoized per state version)."""
         view = self.views[treatment]
         return view.cuboid, view.keep
 
+    def _fused_estimate(self, treatment: str,
+                        subpopulation: SubPop) -> ATEEstimate:
+        """One-dispatch fused query over the RAW materialized state. The
+        replicated layout feeds the (C,) view arrays straight in; the
+        partitioned engine overrides this with the (P, C) state
+        (shard_map body on a mesh)."""
+        view = self.views[treatment]
+        return _run_fused_query(view.cuboid, view.keep, treatment,
+                                subpopulation)
+
+    def _estimate(self, treatment: str, subpopulation: SubPop,
+                  pipeline: str = None) -> ATEEstimate:
+        """Uncached estimate through the chosen query pipeline (device
+        scalars). Both pipelines share the canonical estimator body, so
+        they return bit-identical results — the differential harness
+        cross-checks them against the oracle on every stream."""
+        pipeline = pipeline or self.query_pipeline
+        if pipeline == "fused":
+            return self._fused_estimate(treatment, subpopulation)
+        cub, keep = self._view_state(treatment)
+        return _estimate_view(cub, keep, treatment, subpopulation)
+
     def ate(self, treatment: str, subpopulation: SubPop = None
             ) -> ATEEstimate:
-        """Online causal query from materialized state: O(view capacity),
-        independent of rows ingested. Repeated queries hit the cache.
+        """Online causal query from materialized state: ONE compiled
+        dispatch + one scalar-sized ``device_get`` (the fused query
+        program — subpopulation filter, keep mask and canonical reduction
+        all in-program, per-partition/1-per-device work on a mesh), or the
+        ``assemble`` baseline when selected. Repeated queries hit the
+        host-resident cache with ZERO dispatches and zero transfers;
+        validity is delta-predicate-based (a committed batch drops
+        exactly the entries whose subpopulation it touched, eviction
+        clears the cache — see :meth:`_invalidate`).
         Includes the Neyman within-group variance, carried by the cuboid's
-        second-moment (``yy``) stat columns. Estimates are computed over
-        the canonical (key-sorted, content-compacted) form of the view, so
+        second-moment (``yy``) stat columns. Estimates are a deterministic
+        function of the canonical (key-sorted) group content alone, so
         identical maintained stats give bit-identical results regardless
-        of engine layout (see :func:`_estimate_view`)."""
+        of engine layout, query pipeline or mesh size (see
+        :func:`_estimate_view`)."""
         key = (treatment, _freeze_subpop(subpopulation))
         if key in self._cache:
             self.cache_hits += 1
             return self._cache[key]
         self.cache_misses += 1
-        cub, keep = self._view_state(treatment)
-        est = _estimate_view(cub, keep, treatment, subpopulation)
+        est = self._estimate(treatment, subpopulation)
+        # THE one host sync of an uncached query: every scalar at once
+        est = ATEEstimate(**jax.device_get(dict(
+            ate=est.ate, att=est.att,
+            n_matched_treated=est.n_matched_treated,
+            n_matched_control=est.n_matched_control,
+            n_groups=est.n_groups, variance=est.variance)))
         self._cache[key] = est
         return est
 
@@ -970,16 +1160,42 @@ class OnlineEngine:
                          n_control=nc, sum_y_t=yt,
                          sum_y_c=cub.stats["y"] - yt)
 
-    def matched_rows(self, treatment: str, table: Table) -> jnp.ndarray:
-        """Row-level matched mask for ``table`` against current state
-        (binary-search lookup into the broadcast stat table, exactly like
-        the distributed engine's row mask)."""
-        cub, keep = self._view_state(treatment)
-        vspecs = {d: self.specs[d] for d in self.views[treatment].dims}
-        _, hi, lo = pack_keys(table, vspecs, codec=cub.codec)
-        pos, found = groupby.lookup_rows_in_table(
-            hi, lo, cub.key_hi, cub.key_lo)
-        return table.valid & found & keep[pos]
+    def _rowlookup_query(self, treatment: str):
+        """(program, state args) of the one-dispatch row lookup over the
+        RAW materialized state (replicated layout: broadcast binary
+        search; partitioned override: per-partition probe, routed over the
+        mesh)."""
+        view = self.views[treatment]
+        tab = view.table
+        vspecs = tuple(sorted((d, self.specs[d]) for d in view.dims))
+        prog = fused_mod.get_fused_rowlookup(tab.codec, vspecs, 0, None,
+                                             self.mesh_axis)
+        return prog, (tab.key_hi, tab.key_lo, view.keep)
+
+    def matched_rows(self, treatment: str, table: Table,
+                     pipeline: str = None) -> jnp.ndarray:
+        """Row-level matched mask for ``table`` against current state.
+
+        The fused pipeline (default) runs coarsen + pack + lookup + keep
+        mask as ONE compiled dispatch straight on the materialized state;
+        on the partitioned layout each probe row hashes to its owning
+        partition and binary-searches only that partition's table — on a
+        mesh via the ROUTED lookup (one all-to-all out, local search, one
+        all-to-all back), so no device ever reassembles the view. The
+        ``assemble`` baseline keeps the broadcast-table search of the
+        planner era. Both return identical masks (exact boolean
+        semantics)."""
+        pipeline = pipeline or self.query_pipeline
+        if pipeline == "assemble":
+            cub, keep = self._view_state(treatment)
+            vspecs = {d: self.specs[d] for d in self.views[treatment].dims}
+            _, hi, lo = pack_keys(table, vspecs, codec=cub.codec)
+            pos, found = groupby.lookup_rows_in_table(
+                hi, lo, cub.key_hi, cub.key_lo)
+            return table.valid & found & keep[pos]
+        prog, state_args = self._rowlookup_query(treatment)
+        cols = {d: table.columns[d] for d in self.views[treatment].dims}
+        return prog(cols, table.valid, *state_args)
 
     # --------------------------------------------------------- propensity
     def refresh_propensity(self, treatment: str, features: Sequence[str],
@@ -1074,11 +1290,17 @@ class PartitionedOnlineEngine(OnlineEngine):
     compaction run per partition. Per-device resident state is ~1/N of the
     total (``state_bytes()``).
 
-    Queries reassemble the tiny per-partition stat vectors into ONE
-    canonically sorted table (:func:`repro.core.cube.unpartition_cuboid`)
-    — partition-local masking/overlap plus a deterministic cross-partition
-    reduce — so ``ate()``, ``cem_groups()`` and ``matched_rows()`` are
-    bit-identical to the replicated engine's on any device count.
+    Queries run straight on the partitioned state
+    (``query_pipeline="fused"``, the default): ``ate()`` is one compiled
+    dispatch whose per-partition masking is device-local and whose
+    canonical reduction is capacity/partition-count invariant, and
+    ``matched_rows()`` is a routed row lookup (hash probes to owner
+    partitions, all-to-all, partition-local binary search) — no full
+    reassembly anywhere, and every result bit-identical to the replicated
+    engine's on any device count. ``query_pipeline="assemble"`` keeps the
+    planner-era reassembly baseline
+    (:func:`repro.core.cube.unpartition_view`, memoized per state
+    version), which ``cem_groups()`` also serves from.
 
     n_parts: number of key-range partitions. With a mesh attached it must
     be a MULTIPLE of the data-axis size: each device owns
@@ -1139,7 +1361,9 @@ class PartitionedOnlineEngine(OnlineEngine):
             jnp.zeros((self.n_parts, self._part_granule), jnp.int32))
             for name in (BASE_VIEW, *tnames)}
         self._routed_builds: Dict[int, Callable] = {}
-        self._assembled: Dict[str, Tuple[cube_mod.Cuboid, jnp.ndarray]] = {}
+        # treatment -> (state version, canonical cuboid, keep): the
+        # assemble-path / cem_groups reassembly memo
+        self._assembled: Dict[str, Tuple] = {}
 
     # ----------------------------------------------------- state placement
     def _place(self, tree):
@@ -1183,10 +1407,8 @@ class PartitionedOnlineEngine(OnlineEngine):
         cols = {c: batch.columns[c] for c in self._row_cols}
         valid = batch.valid
         if self.mesh is not None and self._mesh_ndev > 1:
-            pad = (-batch.nrows) % self._mesh_ndev
-            if pad:
-                cols = {k: jnp.pad(v, (0, pad)) for k, v in cols.items()}
-                valid = jnp.pad(valid, (0, pad))
+            cols, valid = fused_mod.pad_tail(
+                cols, valid, (-batch.nrows) % self._mesh_ndev)
             fn = self._get_routed_build(self._delta_cap)
             return fn(cols, valid)
         fn = cube_mod._build_fn(self.codec,
@@ -1211,15 +1433,14 @@ class PartitionedOnlineEngine(OnlineEngine):
         :meth:`OnlineEngine.ingest` bit for bit."""
         self._guard_retract_rows(retract)
         self._maybe_renorm_touch()
+        padded = self._bucket_pad(batch)
         if self.pipeline == "fused1":
-            return self._ingest_fused1(batch, retract)
-        deltas, n_full, overflow = self._build_delta_parts(batch)
-        return self._ingest_parts(batch, deltas, n_full, overflow, retract)
+            return self._ingest_fused1(padded, retract, orig=batch)
+        deltas, n_full, overflow = self._build_delta_parts(padded)
+        return self._ingest_parts(padded, deltas, n_full, overflow, retract,
+                                  orig=batch)
 
     # --------------------------------------- single-dispatch (fused1) hooks
-    def _post_state_swap(self) -> None:
-        self._assembled.clear()
-
     def _fused_program(self, retract: bool):
         mesh = self.mesh if self._mesh_ndev > 1 else None
         return fused_mod.get_fused_ingest_parts(
@@ -1229,7 +1450,8 @@ class PartitionedOnlineEngine(OnlineEngine):
             self.n_parts, mesh, self.mesh_axis, self.use_pallas, retract,
             self._stream_names(), self.seed)
 
-    def _fallback_overflow(self, batch: Table, retract: bool) -> DeltaReport:
+    def _fallback_overflow(self, batch: Table, retract: bool,
+                           orig: Table) -> DeltaReport:
         """Exact host fallback on delta overflow: rebuild the delta at the
         (already grown) capacity, re-route, run the planner commit path."""
         tnames = tuple(sorted(self.treatments))
@@ -1238,7 +1460,7 @@ class PartitionedOnlineEngine(OnlineEngine):
         deltas = self._route_from_base(d.key_hi, d.key_lo, dict(d.stats),
                                        d.group_valid)
         return self._ingest_parts(batch, deltas, jnp.asarray(0),
-                                  jnp.asarray(False), retract)
+                                  jnp.asarray(False), retract, orig=orig)
 
     def _grow_views(self, n_merged: Dict[str, int],
                     grew: Dict[str, bool]) -> None:
@@ -1268,7 +1490,8 @@ class PartitionedOnlineEngine(OnlineEngine):
         return self.n_parts
 
     def _ingest_parts(self, batch: Table, deltas, n_full, overflow,
-                      retract: bool) -> DeltaReport:
+                      retract: bool, orig: Table = None) -> DeltaReport:
+        orig = batch if orig is None else orig
         tnames = tuple(sorted(self.treatments))
         plan = _plan_ingest_parts(
             deltas, self.base.key_hi, self.base.key_lo, self.base.stats,
@@ -1295,7 +1518,8 @@ class PartitionedOnlineEngine(OnlineEngine):
             deltas = self._route_from_base(d.key_hi, d.key_lo,
                                            dict(d.stats), d.group_valid)
             return self._ingest_parts(batch, deltas, n_full,
-                                      jnp.asarray(False), retract)
+                                      jnp.asarray(False), retract,
+                                      orig=orig)
         all_fast = all(bool(v) for v in fetched["ok"].values())
         if retract and (not all_fast or fetched["neg_min"] < -0.5):
             self._raise_bad_retraction()
@@ -1332,29 +1556,71 @@ class PartitionedOnlineEngine(OnlineEngine):
                                              merged.stats["one"] - nt)
                 view.pcub = merged
             fast[name] = ok
-        self._assembled.clear()
-        self._commit_rows(batch, retract)
+        self._commit_rows(batch, retract, orig=orig)
+        self._post_state_swap()
         invalidated = self._invalidate(
             fetched["gv"].reshape(-1),
             lambda d: fetched["buckets"][d].reshape(-1))
-        return DeltaReport(n_rows=batch.nrows,
+        return DeltaReport(n_rows=orig.nrows,
                            n_delta_groups=int(fetched["n_delta"]),
                            fast_path=fast, invalidated=invalidated)
+
+    # ------------------------------------------------ capacity shrink pass
+    def _shrink_granule(self) -> int:
+        return self._part_granule
+
+    def _shrink_view(self, name: str, new_cap: int) -> None:
+        tab = self._view_table(name)
+        sliced = self._place(cube_mod.slice_partitioned(tab, new_cap))
+        if name == BASE_VIEW:
+            self.base = sliced
+        else:
+            view = self.views[name]
+            view.set_table(sliced)
+            view.keep = self._place(view.keep[:, :new_cap])
+        self._touch[name] = self._place(self._touch[name][:, :new_cap])
 
     # ------------------------------------------------------------ queries
     def _view_state(self, treatment: str
                     ) -> Tuple[cube_mod.Cuboid, jnp.ndarray]:
-        """Canonical reassembly of a partitioned view: flatten the (tiny)
-        per-partition stat vectors, re-sort by key, recompute overlap from
-        the (exact) stats. Memoized until the next state mutation."""
-        if treatment not in self._assembled:
+        """Canonical reassembly of a partitioned view in ONE compiled
+        dispatch (:func:`repro.core.cube.unpartition_view`): flatten the
+        (tiny) per-partition stat vectors, re-sort by key, recompute
+        overlap from the (exact) stats. Memoized per STATE VERSION — the
+        memo survives until the next committed mutation, so dashboards
+        repeating ``cem_groups``/assemble-path queries pay zero extra
+        dispatches."""
+        entry = self._assembled.get(treatment)
+        if entry is None or entry[0] != self._state_version:
             pv = self.views[treatment]
-            cub = cube_mod.unpartition_cuboid(pv.pcub)
-            nt = cub.stats[f"t_{treatment}"]
-            keep = overlap_keep(cub.group_valid, nt,
-                                cub.stats["one"] - nt)
-            self._assembled[treatment] = (cub, keep)
-        return self._assembled[treatment]
+            cub, keep = cube_mod.unpartition_view(pv.pcub, treatment)
+            entry = (self._state_version, cub, keep)
+            self._assembled[treatment] = entry
+        return entry[1], entry[2]
+
+    def _fused_estimate(self, treatment: str,
+                        subpopulation: SubPop) -> ATEEstimate:
+        """Fused one-dispatch query straight on the (P, C) partitioned
+        state: per-partition masking (sharded over the mesh when one is
+        attached — per-device work 1/N), canonical reduce in-program."""
+        pv = self.views[treatment]
+        mesh = self.mesh if self._mesh_ndev > 1 else None
+        return _run_fused_query(pv.pcub, pv.keep, treatment, subpopulation,
+                                mesh=mesh, mesh_axis=self.mesh_axis,
+                                partitioned=True)
+
+    def _rowlookup_query(self, treatment: str):
+        """Partitioned row lookup: hash each probe row to its owning
+        partition, binary-search only that partition's table — ROUTED over
+        the mesh (all-to-all out and back) when one is attached."""
+        view = self.views[treatment]
+        tab = view.pcub
+        mesh = self.mesh if self._mesh_ndev > 1 else None
+        vspecs = tuple(sorted((d, self.specs[d]) for d in view.dims))
+        prog = fused_mod.get_fused_rowlookup(tab.codec, vspecs,
+                                             self.n_parts, mesh,
+                                             self.mesh_axis)
+        return prog, (tab.key_hi, tab.key_lo, view.keep)
 
     # -------------------------------------------------------------- state
     def stats(self) -> Dict[str, Dict[str, int]]:

@@ -140,6 +140,66 @@ def scatter_merge_parts_pallas(tables: jnp.ndarray, pos: jnp.ndarray,
     )(pos, tables, vals)
 
 
+# canonical chunk width of the capacity-invariant query reductions — the
+# single source of truth for the device-resident query path's fixed
+# reduce window (historically the online engine's host-compaction
+# granule)
+CANONICAL_BLOCK = 1024
+
+
+def chunked_sum(x: jnp.ndarray, block: int = CANONICAL_BLOCK) -> jnp.ndarray:
+    """Capacity-invariant canonical sum of a zero-tail-padded stat vector.
+
+    The device-resident query pipeline reduces per-group statistics whose
+    VALID content is a key-sorted prefix and whose tail is exact zeros —
+    but whose total length depends on engine layout (view capacity,
+    partition count, growth history). A plain ``jnp.sum`` associates
+    differently per length, so the same groups could reduce to different
+    f32 bits on different engines. This sum is bitwise INVARIANT to
+    trailing zero padding: the vector is padded to a multiple of ``block``,
+    each ``block``-wide chunk is reduced with a fixed-shape ``jnp.sum``
+    (identical lowering for every chunk, in every program), and the chunk
+    partials are combined STRICTLY SEQUENTIALLY in order — appending zero
+    chunks appends exact ``+ 0.0`` steps, which cannot change the result.
+    Replicated / partitioned / assembled layouts therefore all reduce to
+    the same bits whenever their canonical key-sorted content matches.
+    """
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    total = jnp.sum(x[:block])
+    for i in range(1, x.shape[0] // block):
+        total = total + jnp.sum(x[i * block:(i + 1) * block])
+    return total
+
+
+def _chunk_sums_kernel(vals_ref, out_ref):
+    out_ref[...] = jnp.sum(vals_ref[...], axis=0, keepdims=True)
+
+
+def chunk_sums_pallas(values: jnp.ndarray, block: int = CANONICAL_BLOCK,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Per-chunk partial sums of a (N, S) stat bundle as ONE Pallas launch
+    over the chunk grid — the MXU/VPU hot path of the canonical query
+    reduction for very large group tables (N % block == 0). Returns
+    (nb, S) chunk partials; the caller combines them sequentially exactly
+    like :func:`chunked_sum`. The pure-jnp :func:`chunked_sum` is the
+    bit-exactness reference the query pipeline ships with; this kernel is
+    benchmarked/parity-tested (``tests/test_kernels.py``) for accelerator
+    deployments where the chunk reduce dominates."""
+    n, s = values.shape
+    nb = n // block
+    return pl.pallas_call(
+        _chunk_sums_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block, s), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, s), jnp.float32),
+        interpret=interpret,
+    )(values)
+
+
 def combine_partials(partials: jnp.ndarray, block_base: jnp.ndarray,
                      num_segments: int) -> jnp.ndarray:
     """Merge per-block partials into global per-segment sums.

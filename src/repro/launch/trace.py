@@ -1,29 +1,36 @@
-"""Dispatch accounting for the online ingest hot path.
+"""Dispatch accounting for the online ingest AND query hot paths.
 
-The single-dispatch claim of the fused ingest pipeline ("one compiled
-program per steady-state batch") is load-bearing: every extra launch is a
-host round-trip that serializes the stream. jax 0.4.x executes jitted
-calls through a C++ fastpath that no python-level hook observes, so the
-counter here instruments the call sites we own instead: every compiled
-entry point of the engine hot paths is wrapped with :func:`counted_jit`,
-which bumps a process-global counter on each invocation of the compiled
-callable.
+The single-dispatch claim of the fused pipelines ("one compiled program
+per steady-state batch; one compiled program per uncached query") is
+load-bearing: every extra launch is a host round-trip that serializes the
+stream. jax 0.4.x executes jitted calls through a C++ fastpath that no
+python-level hook observes, so the counter here instruments the call sites
+we own instead: every compiled entry point of the engine hot paths is
+wrapped with :func:`counted_jit`, which bumps a process-global counter on
+each invocation of the compiled callable.
 
 Scope: the counter sees every program launch issued through a
-``counted_jit``-wrapped callable (all of ``repro.core.fused``,
-``repro.core.online``'s planner helpers, and the cached build/rollup
-programs). It does not see eager ``jnp`` operations — the fused pipeline
-is written so its steady-state path performs none (pure-numpy host logic
-on fetched verdicts only), and ``tests/test_online_fused.py`` additionally
-asserts the jit trace cache stays cold (no retrace) across steady-state
-ingests.
+``counted_jit``-wrapped callable (all of ``repro.core.fused`` — ingest,
+eviction, query and row-lookup programs — ``repro.core.online``'s planner
+helpers, and the cached build/rollup programs). Launches can additionally
+be LABELED (``counted_jit(fn, label="query")``) so tests can assert on one
+entry-point family — e.g. "a cached ``ate()`` issues zero dispatches, an
+uncached one exactly one". It does not see eager ``jnp`` operations — the
+fused pipelines are written so their steady-state paths perform none
+(pure-numpy host logic on fetched verdicts only), with ONE documented
+exception: a batch whose row count is not already a power-of-two bucket
+pays per-column eager ``jnp.pad`` copies before the ingest program
+(``online.OnlineEngine._bucket_pad`` — async, no host sync, skipped
+entirely for bucket-sized batches). ``tests/test_online_fused.py``
+additionally asserts the jit trace cache stays cold (no retrace) across
+steady-state ingests.
 """
 from __future__ import annotations
 
 import contextlib
 import functools
 import threading
-from typing import Callable
+from typing import Callable, Optional
 
 _state = threading.local()
 
@@ -34,23 +41,40 @@ def _counter() -> list:
     return _state.count
 
 
-def dispatch_count() -> int:
-    """Total compiled-program launches observed so far (this thread)."""
-    return _counter()[0]
+def _labels() -> dict:
+    if not hasattr(_state, "labels"):
+        _state.labels = {}
+    return _state.labels
 
 
-def record_dispatch(n: int = 1) -> None:
+def dispatch_count(label: Optional[str] = None) -> int:
+    """Total compiled-program launches observed so far (this thread).
+
+    ``label`` restricts the count to launches issued through
+    ``counted_jit(..., label=label)`` wrappers (e.g. ``"query"`` for the
+    fused query / row-lookup programs)."""
+    if label is None:
+        return _counter()[0]
+    return _labels().get(label, 0)
+
+
+def record_dispatch(n: int = 1, label: Optional[str] = None) -> None:
     """Manually account ``n`` launches (for call sites that cannot wrap)."""
     _counter()[0] += n
+    if label is not None:
+        lab = _labels()
+        lab[label] = lab.get(label, 0) + n
 
 
-def counted_jit(fn: Callable = None, **jit_kwargs) -> Callable:
+def counted_jit(fn: Callable = None, label: Optional[str] = None,
+                **jit_kwargs) -> Callable:
     """``jax.jit`` that bumps the dispatch counter once per call.
 
     Drop-in replacement: ``counted_jit(f, static_argnames=...)`` or as a
-    decorator. The wrapper preserves the jitted callable's AOT/trace
-    attributes that the engines rely on (``_cache_size`` for the
-    no-retrace assertion)."""
+    decorator. ``label`` additionally attributes the launch to a named
+    entry-point family (see :func:`dispatch_count`). The wrapper preserves
+    the jitted callable's AOT/trace attributes that the engines rely on
+    (``_cache_size`` for the no-retrace assertion)."""
     import jax
 
     def wrap(f):
@@ -58,7 +82,7 @@ def counted_jit(fn: Callable = None, **jit_kwargs) -> Callable:
 
         @functools.wraps(f)
         def call(*args, **kwargs):
-            _counter()[0] += 1
+            record_dispatch(1, label=label)
             return jitted(*args, **kwargs)
 
         call._jitted = jitted
@@ -70,12 +94,18 @@ def counted_jit(fn: Callable = None, **jit_kwargs) -> Callable:
 
 
 @contextlib.contextmanager
-def count_dispatches():
+def count_dispatches(label: Optional[str] = None):
     """Context manager yielding a zero-based live counter:
 
     >>> with count_dispatches() as n:
     ...     eng.ingest(batch)
     >>> assert n() == 1
+
+    ``label`` restricts the live counter to one entry-point family:
+
+    >>> with count_dispatches(label="query") as n:
+    ...     eng.ate("t")
+    >>> assert n() == 1
     """
-    start = dispatch_count()
-    yield lambda: dispatch_count() - start
+    start = dispatch_count(label)
+    yield lambda: dispatch_count(label) - start

@@ -156,6 +156,54 @@ def test_in_program_growth_and_capacity_doubling_recompile():
     assert n() == 1
 
 
+def test_bucketed_batch_padding_bounds_retraces():
+    # an irregular stream (every batch a different row count) must NOT
+    # trace the fused program once per size: batches pad to power-of-two
+    # row buckets, so the trace count is bounded by log2(max batch)
+    from repro.core.online import BATCH_BUCKET_GRANULE, _bucket_rows
+    assert _bucket_rows(1) == BATCH_BUCKET_GRANULE
+    assert _bucket_rows(BATCH_BUCKET_GRANULE) == BATCH_BUCKET_GRANULE
+    assert _bucket_rows(BATCH_BUCKET_GRANULE + 1) == 2 * BATCH_BUCKET_GRANULE
+    assert _bucket_rows(1000) == 1024
+
+    # programs are cached module-wide per schema: start from a fresh one
+    # so the trace count below belongs to THIS stream alone
+    fused.get_fused_ingest.cache_clear()
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    rng = np.random.default_rng(0)
+    sizes = [int(s) for s in rng.integers(1, 1000, 24)]
+    for i, sz in enumerate(sizes):
+        cols, valid = _frame(sz, seed=200 + i)
+        eng.ingest(Table.from_numpy(cols, valid))
+    prog = eng._fused_program(False)
+    # sizes in [1, 1000) span at most the 5 buckets {64,128,256,512,1024}
+    n_buckets = len({_bucket_rows(s) for s in sizes})
+    assert prog._cache_size() <= n_buckets <= 5, (
+        prog._cache_size(), sorted(set(sizes)))
+    # padding rows are invisible to the maintained state: same stream,
+    # one engine fed exact-bucket batches, bit-identical stats
+    ref = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    for i, sz in enumerate(sizes):
+        cols, valid = _frame(sz, seed=200 + i)
+        pad = _bucket_rows(sz) - sz
+        cols = {k: np.pad(v, (0, pad)) for k, v in cols.items()}
+        ref.ingest(Table.from_numpy(cols, np.pad(valid, (0, pad))))
+    assert _stat_map(eng.base) == _stat_map(ref.base)
+    # reservoir state is bit-identical across PIPELINES too (all pad to
+    # the same bucket before the streaming-propensity update)
+    legacy = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                          pipeline="planner")
+    eng2 = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
+    for i, sz in enumerate(sizes[:6]):
+        cols, valid = _frame(sz, seed=200 + i)
+        b = Table.from_numpy(cols, valid)
+        legacy.ingest(b)
+        eng2.ingest(b)
+    np.testing.assert_array_equal(np.asarray(eng2.stream.priority),
+                                  np.asarray(legacy.stream.priority))
+    assert float(eng2.stream.n) == float(legacy.stream.n)
+
+
 def test_touch_renormalization_before_int32_wraparound():
     eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256)
     feed = _batches(3, 300)

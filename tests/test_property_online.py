@@ -225,22 +225,42 @@ def _check_state(oracle, engines, history):
             assert _engine_stat_map(cub) == oracle.stat_map(t), (label, t)
             if history:
                 probe = Table.from_numpy(probe_cols, probe_valid)
+                want_mask = oracle.matched_mask(t, probe_cols, probe_valid)
+                # fused (routed on the partitioned layout) AND assemble
+                # row lookups must both reproduce the oracle's row mask
                 np.testing.assert_array_equal(
-                    np.asarray(eng.matched_rows(t, probe)),
-                    oracle.matched_mask(t, probe_cols, probe_valid),
-                    err_msg=f"{label}/{t} matched rows")
+                    np.asarray(eng.matched_rows(t, probe)), want_mask,
+                    err_msg=f"{label}/{t} matched rows (fused)")
+                np.testing.assert_array_equal(
+                    np.asarray(eng.matched_rows(t, probe,
+                                                pipeline="assemble")),
+                    want_mask,
+                    err_msg=f"{label}/{t} matched rows (assemble)")
 
 
 def _check_query(oracle, engines, treatment, subpop):
+    """Every interleaved query is answered THREE ways per engine — the
+    cached ``ate()`` entry point, the uncached fused one-dispatch program
+    and the planner-era assemble baseline — and all must be bit-identical
+    to the oracle's estimate (incl. post-eviction and subpopulation
+    queries; the CI device matrix replays this at 1/2/4 forced host
+    devices)."""
     want = oracle.ate(treatment, subpop)
     for label, eng in engines.items():
-        got = eng.ate(treatment, subpopulation=subpop)
-        assert float(got.ate) == float(want.ate), (label, treatment, subpop)
-        assert float(got.att) == float(want.att), (label, treatment, subpop)
-        assert float(got.variance) == float(want.variance), (
-            label, treatment, subpop)
-        assert int(got.n_groups) == int(want.n_groups)
-        assert float(got.n_matched_treated) == float(want.n_matched_treated)
+        paths = {
+            "ate": eng.ate(treatment, subpopulation=subpop),
+            "fused": eng._estimate(treatment, subpop, pipeline="fused"),
+            "assemble": eng._estimate(treatment, subpop,
+                                      pipeline="assemble"),
+        }
+        for pname, got in paths.items():
+            where = (label, pname, treatment, subpop)
+            assert float(got.ate) == float(want.ate), where
+            assert float(got.att) == float(want.att), where
+            assert float(got.variance) == float(want.variance), where
+            assert int(got.n_groups) == int(want.n_groups), where
+            assert float(got.n_matched_treated) == float(
+                want.n_matched_treated), where
 
 
 def run_stream(ops, n_parts: int):
@@ -329,6 +349,8 @@ def test_differential_stream_forced_paths():
         (0, 7, 4, 13),      # wide 460-row batch -> delta overflow fallback
         (3, 1, 2, 0),
         (2, 1, 0, 0),       # evict ttl=1
+        (3, 0, 1, 0),       # post-eviction query (subpop), pre-resurrect
+        (3, 1, 0, 0),       # post-eviction unrestricted query
         (0, 3, 4, 14),      # resurrection after evict
         (3, 0, 0, 0),
         (3, 1, 3, 0),

@@ -7,8 +7,8 @@ Usage:
         [--tolerance 1.5]
 
 Only rows whose name starts with one of the GUARDED prefixes are compared
-(latency rows of the online ingest hot path — the rows this repo makes
-performance claims about). A row regresses when
+(latency and dispatch-count rows of the online ingest AND query hot paths
+— the rows this repo makes performance claims about). A row regresses when
 
     current_us > baseline_us * tolerance
 
@@ -30,7 +30,8 @@ import json
 import os
 import sys
 
-GUARDED = ("online_ingest", "online_dispatches")
+GUARDED = ("online_ingest", "online_dispatches", "online_query",
+           "online_rowlookup")
 
 
 def load_rows(path: str):
@@ -98,7 +99,7 @@ def main() -> int:
         with open(summary, "a") as f:
             f.write(report + "\n")
     if regressions:
-        print(f"{len(regressions)} ingest row(s) regressed beyond "
+        print(f"{len(regressions)} guarded row(s) regressed beyond "
               f"{args.tolerance}x:", file=sys.stderr)
         for name, bu, cu, ratio in regressions:
             print(f"  {name}: {bu:.1f}us -> {cu:.1f}us ({ratio:.2f}x)",
