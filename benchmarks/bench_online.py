@@ -41,6 +41,16 @@ and, per device count D (subprocess with host-platform device forcing):
   online_state_bytes_replicated_dD  same accounting on the replicated
                               engine, so memory claims are comparable
 
+Serving rows (batched heterogeneous-spec query path, PR 6):
+  online_serve_qps_bB         B distinct uncached subpopulation queries
+                              answered as ONE batched dispatch; value
+                              slot = seconds PER QUERY (wave latency / B)
+                              so the guard trips when batching stops
+                              amortizing; qps rides in the derived field
+  online_serve_p50 / _p99     per-query latency under Poisson arrivals
+                              through the ServingEngine continuous
+                              batcher (completion - arrival)
+
 REPRO_BENCH_SMOKE=1 shrinks N for CI smoke runs (full mode: N = 2^20).
 """
 import os
@@ -74,6 +84,29 @@ def _gen(n, seed):
     cols["y"] = (2.0 * cols["t"] + 1.5 * cols["x0"]
                  + rng.normal(0, 0.5, n)).astype(np.float32)
     return cols
+
+
+def _mixed_subpops(n, seed=0):
+    """n DISTINCT subpopulation predicates over the bench schema (random
+    per-dim bucket subsets). Distinctness matters: ``ate_batch`` collapses
+    duplicate in-flight specs onto one slot, so a batch of repeats would
+    measure a smaller dispatch than the row name claims."""
+    rng = np.random.default_rng(seed)
+    dims = [("x0", 8), ("x1", 6), ("x2", 5)]
+    out, seen = [], set()
+    while len(out) < n:
+        sub = {}
+        for d, card in dims:
+            if rng.random() < 0.6:
+                k = int(rng.integers(1, card))
+                sub[d] = sorted(int(v) for v in
+                                rng.choice(card, size=k, replace=False))
+        key = tuple((d, tuple(v)) for d, v in sorted(sub.items()))
+        if not sub or key in seen:
+            continue
+        seen.add(key)
+        out.append(sub)
+    return out
 
 
 def _ingest_latency(eng, bs, seed0):
@@ -302,6 +335,41 @@ def main() -> None:
     for name, d in (("fused", d_qf), ("assemble", d_qa)):
         emit(f"online_query_dispatches_{name}", d / 1e6,
              "compiled launches per uncached ate() (value slot = count)")
+
+    # serving rows: B DISTINCT uncached subpopulation queries as ONE
+    # batched dispatch (cache cleared per iteration so the batched
+    # program really computes). Value slot = seconds per query so the
+    # 1.5x guard catches the batch path losing its amortization.
+    from repro.core.serving import ServingEngine, run_poisson_load
+    for bsz in (1, 32, 256):
+        specs = [("t", s) for s in _mixed_subpops(bsz, seed=bsz)]
+
+        def batch_query():
+            eng._cache.clear()
+            return eng.ate_batch(specs)
+        t_b, _ = timeit(batch_query, warmup=WARMUP, iters=ITERS)
+        emit(f"online_serve_qps_b{bsz}", t_b / bsz,
+             f"qps={bsz / max(t_b, 1e-12):.0f} wave_secs={t_b:.4f} "
+             f"(one dispatch, {bsz} distinct subpopulations)")
+
+    # Poisson arrival load through the continuous batcher: per-query
+    # latency percentiles (completion - arrival). Rate is set well below
+    # the single-wave ceiling so the queue stays stable and p99 measures
+    # batching jitter, not saturation.
+    n_load = 64 if smoke() else 512
+    load_specs = [("t", s) for s in _mixed_subpops(n_load, seed=99)]
+    srv = ServingEngine(eng, n_slots=32)
+    # warm every pow2 wave bucket the batcher can produce — otherwise the
+    # percentiles measure trace time, not serving latency
+    for b in (1, 2, 4, 8, 16, 32):
+        eng._cache.clear()
+        eng.ate_batch(load_specs[:b])
+    eng._cache.clear()
+    lat = run_poisson_load(srv, load_specs, rate_qps=200.0, seed=0)
+    emit("online_serve_p50", float(np.percentile(lat, 50)),
+         f"poisson 200qps n={n_load} slots=32 waves={srv.n_waves}")
+    emit("online_serve_p99", float(np.percentile(lat, 99)),
+         f"poisson 200qps n={n_load} slots=32")
 
     # sharded ingest: per-batch latency per device-mesh size
     sweep_n = 1 << 15 if smoke() else 1 << 18

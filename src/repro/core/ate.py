@@ -21,6 +21,15 @@ from repro.core.cem import CEMGroups
 
 @dataclasses.dataclass(frozen=True)
 class ATEEstimate:
+    """Both estimands of one causal query, plus match diagnostics.
+
+    Every query path — offline :func:`estimate_ate`, the online engines'
+    ``ate()``, and the batched/serving path (``ate_batch``,
+    :class:`repro.core.serving.QuerySpec`) — returns this same record;
+    a ``QuerySpec``'s ``estimand`` only selects which field the serving
+    layer reports (``QuerySpec.select``), so ATE and ATT twins of one
+    subpopulation share a single estimate (and cache entry)."""
+
     ate: jnp.ndarray          # Eq. 4, group-probability weights
     att: jnp.ndarray          # treated-weighted
     n_matched_treated: jnp.ndarray
@@ -67,8 +76,9 @@ def estimate_ate_from_stats(keep: jnp.ndarray, n_treated: jnp.ndarray,
     (:func:`repro.kernels.segment_stats.chunked_sum`), which makes the
     estimate a bitwise-deterministic function of the key-sorted group
     content ALONE — independent of padded vector length, partition count
-    or capacity-growth history — so replicated, partitioned and fused
-    query paths return identical f32 bits for identical group stats."""
+    or capacity-growth history — so the replicated, partitioned, fused
+    and batched (vmapped spec-table) query paths all return identical
+    f32 bits for identical group stats."""
     nt = jnp.where(keep, n_treated, 0.0)
     nc = jnp.where(keep, n_control, 0.0)
     mean_t = jnp.where(nt > 0, sum_y_t / jnp.maximum(nt, 1e-9), 0.0)

@@ -58,6 +58,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import cube as cube_mod
@@ -531,7 +532,12 @@ def _query_mask(hi, lo, gv, keep, codec, subpop):
     return m
 
 
-def _estimate_from_masked(hi, lo, stats, m, treatment):
+# role-named stat columns the canonical estimator body consumes, in the
+# order :func:`query_stat_names` yields the treatment-specific names
+QUERY_ROLES = ("one", "y", "yy", "t", "yt", "yyt")
+
+
+def _estimate_from_roles(hi, lo, stats, m):
     """Canonical estimate over the masked groups: re-sort the surviving
     keys into the canonical (globally key-sorted, valid-prefix) order —
     keys are unique across partitions, so the segment sums are exact
@@ -539,7 +545,10 @@ def _estimate_from_masked(hi, lo, stats, m, treatment):
     (:func:`repro.kernels.segment_stats.chunked_sum`). The result is a
     bitwise-deterministic function of the surviving group stats alone:
     identical for replicated/partitioned layouts, any partition count, any
-    capacity history, and identical to the ``assemble`` baseline path."""
+    capacity history, and identical to the ``assemble`` baseline path.
+    ``stats`` carries the ROLE-named columns (:data:`QUERY_ROLES`); this
+    one body is shared verbatim by the single-spec and batched query
+    programs, which is what makes their answers bit-identical."""
     hi = hi.reshape(-1)
     lo = lo.reshape(-1)
     m = m.reshape(-1)
@@ -549,11 +558,11 @@ def _estimate_from_masked(hi, lo, stats, m, treatment):
     sums = groupby.segment_sums(
         g, {k: jnp.where(m, v.reshape(-1), 0.0) for k, v in stats.items()})
     keep = g.group_valid
-    nt = sums[f"t_{treatment}"]
+    nt = sums["t"]
     nc = sums["one"] - nt
-    yt = sums[f"yt_{treatment}"]
+    yt = sums["yt"]
     yc = sums["y"] - yt
-    yyt = sums[f"yyt_{treatment}"]
+    yyt = sums["yyt"]
     yyc = sums["yy"] - yyt
     est = estimate_ate_from_stats(keep, nt, nc, yt, yc, sum_yy_t=yyt,
                                   sum_yy_c=yyc, sum_fn=chunked_sum)
@@ -561,6 +570,14 @@ def _estimate_from_masked(hi, lo, stats, m, treatment):
                 n_matched_treated=est.n_matched_treated,
                 n_matched_control=est.n_matched_control,
                 n_groups=est.n_groups, variance=est.variance)
+
+
+def _estimate_from_masked(hi, lo, stats, m, treatment):
+    """Treatment-named front of :func:`_estimate_from_roles`: map the
+    view's stat columns onto the estimator roles and estimate."""
+    roles = dict(zip(QUERY_ROLES,
+                     (stats[k] for k in query_stat_names(treatment))))
+    return _estimate_from_roles(hi, lo, roles, m)
 
 
 def estimate_view_body(hi, lo, stats, gv, keep, *, codec, treatment,
@@ -624,6 +641,201 @@ def get_fused_query(codec, treatment: str, subpop, mesh, mesh_axis: str,
         def program(hi, lo, stats, gv, keep):
             return estimate_view_body(hi, lo, stats, gv, keep, codec=codec,
                                       treatment=treatment, subpop=subpop)
+
+    return counted_jit(program, label="query")
+
+
+# ===================== batched query: the spec table is DATA ================
+#
+# A single-spec query program bakes the subpopulation predicate into the
+# trace (it is part of get_fused_query's cache key), so B heterogeneous
+# queries cost B dispatches. The batched variant moves the WHOLE query spec
+# — view choice, estimand, subpopulation predicate — into a fixed-width
+# device-resident uint32 row per query:
+#
+#   word 0            view id (index into the engine's sorted treatments)
+#   word 1            estimand selector (0 = ATE, 1 = ATT)
+#   words 2..2+W-1    per-dim allowed-bucket BITMASKS in the engine's
+#                     base-dim layout: dim d with cardinality c owns
+#                     ceil(c/32) words; bit b set <=> bucket b passes.
+#                     An unrestricted dim is all-ones.
+#
+# The per-group predicate test becomes one gather + bit-test per dim —
+# exactly the same boolean mask _query_mask builds by unrolled equality,
+# so the downstream canonical estimate (shared `_estimate_from_roles`
+# body, capacity-invariant chunked_sum reduce) returns bit-identical
+# answers, while the program itself is cached on SHAPES ONLY (view
+# schema, word layout, pow2 spec-count bucket) — any B specs with any
+# predicates run through ONE compiled dispatch with no retrace.
+
+SPEC_META_WORDS = 2    # [view id, estimand] prefix of an encoded spec row
+ESTIMAND_IDS = {"ate": 0, "att": 1}
+
+
+def spec_word_layout(cards: Tuple[Tuple[str, int], ...]
+                     ) -> Tuple[Dict[str, int], int]:
+    """Word layout of the predicate part of a spec row. ``cards`` is the
+    engine's base-dim schema as sorted ``(dim, cardinality)`` pairs —
+    cardinalities are static (``CoarsenSpec.n_buckets``), so every spec of
+    an engine encodes at the same fixed width. Returns (word offset per
+    dim, total predicate words W)."""
+    offs, pos = {}, 0
+    for dim, card in cards:
+        offs[dim] = pos
+        pos += (int(card) + 31) // 32
+    return offs, pos
+
+
+def encode_query_spec(cards: Tuple[Tuple[str, int], ...], view_id: int,
+                      estimand_id: int, subpop) -> np.ndarray:
+    """Host-side encoding of ONE query spec into its fixed-width uint32
+    row. ``subpop`` is the frozen ``((dim, (bucket, ...)), ...)`` predicate
+    (or None). Raises on buckets outside a dim's cardinality — the same
+    queries the static path would answer with an empty match."""
+    offs, n_words = spec_word_layout(cards)
+    row = np.zeros((SPEC_META_WORDS + n_words,), np.uint32)
+    row[0] = np.uint32(view_id)
+    row[1] = np.uint32(estimand_id)
+    by_dim = dict(subpop or ())
+    unknown = set(by_dim) - set(offs)
+    if unknown:
+        raise ValueError(f"subpopulation dims {sorted(unknown)} not in the "
+                         f"engine schema {sorted(offs)}")
+    for dim, card in cards:
+        base = SPEC_META_WORDS + offs[dim]
+        nw = (int(card) + 31) // 32
+        if dim in by_dim:
+            for b in by_dim[dim]:
+                b = int(b)
+                if not 0 <= b < card:
+                    raise ValueError(f"bucket {b} out of range for dim "
+                                     f"{dim!r} (cardinality {card})")
+                row[base + (b >> 5)] |= np.uint32(1) << np.uint32(b & 31)
+        else:
+            row[base:base + nw] = np.uint32(0xFFFFFFFF)
+    return row
+
+
+def _words_mask(hi, lo, base_m, codec, words, cards, offsets):
+    """Data-driven :func:`_query_mask`: evaluate one encoded predicate
+    (the ``(W,)`` uint32 bitmask slice of a spec row) over one view's
+    keys. Bit-for-bit the same boolean mask the static path builds: each
+    dim extracts its bucket id and tests membership in the allowed-bucket
+    bitmask (unrestricted dims are all-ones, a no-op AND). Dims absent
+    from this view's codec are skipped — the engine validates host-side
+    that a spec only restricts dims its view materializes."""
+    m = base_m
+    names = set(codec.names)
+    for dim, card in cards:
+        if dim not in names:
+            continue
+        vals = codec.extract(hi, lo, dim)          # int32, < card for valid
+        idx = jnp.clip(offsets[dim] + (vals >> 5), 0, words.shape[0] - 1)
+        bit = (words[idx] >> (vals & 31).astype(jnp.uint32)) & jnp.uint32(1)
+        m = m & (bit == jnp.uint32(1))
+    return m
+
+
+def _batched_query_body(view_schema, cards, offsets, view_states,
+                        spec_rows):
+    """B heterogeneous query specs over V materialized views as pure
+    traced compute. Every view's state is flattened and zero/invalid-
+    padded to one common length L, so per-spec state selection is a plain
+    gather by view id; padding cannot perturb the answer because the
+    canonical reduce is bitwise invariant to trailing invalid/zero tail
+    (the same contract that makes capacity growth and partition count
+    invisible — see ``chunked_sum``). Estimates run once per SPEC (not
+    per spec x view): masks are evaluated per view (each view's codec is
+    static), then each spec gathers its own view's mask row."""
+    sizes = [int(np.prod(st[0].shape)) for st in view_states]
+    length = max(sizes)
+
+    def padded(x, fill):
+        x = x.reshape(-1)
+        pad = length - x.shape[0]
+        return jnp.pad(x, (0, pad), constant_values=fill) if pad else x
+
+    words = spec_rows[:, SPEC_META_WORDS:]
+    phi, plo, pstats, masks = [], [], [], []
+    for (_, codec), (hi, lo, stats, gv, keep) in zip(view_schema,
+                                                     view_states):
+        bhi = padded(hi, INVALID_HI)
+        blo = padded(lo, INVALID_LO)
+        base_m = padded(gv & keep, False)
+        pstats.append(tuple(padded(s, 0.0) for s in stats))
+        masks.append(jax.vmap(
+            lambda w, h=bhi, l=blo, bm=base_m, c=codec:
+            _words_mask(h, l, bm, c, w, cards, offsets))(words))
+        phi.append(bhi)
+        plo.append(blo)
+    phi = jnp.stack(phi)                       # (V, L)
+    plo = jnp.stack(plo)
+    pst = tuple(jnp.stack([pstats[v][r] for v in range(len(view_schema))])
+                for r in range(len(QUERY_ROLES)))
+    m_all = jnp.stack(masks)                   # (V, B, L)
+    view_ids = spec_rows[:, 0].astype(jnp.int32)
+    estimands = spec_rows[:, 1].astype(jnp.int32)
+    m_sel = m_all[view_ids, jnp.arange(spec_rows.shape[0])]
+
+    def one(vid, est_sel, m):
+        stats = dict(zip(QUERY_ROLES, (s[vid] for s in pst)))
+        out = _estimate_from_roles(phi[vid], plo[vid], stats, m)
+        out["value"] = jnp.where(est_sel == 0, out["ate"], out["att"])
+        return out
+
+    return jax.vmap(one)(view_ids, estimands, m_sel)
+
+
+@functools.lru_cache(maxsize=64)
+def get_fused_query_batch(view_schema, cards, b_bucket: int, mesh,
+                          mesh_axis: str, partitioned: bool):
+    """ONE-dispatch batched causal query program:
+    ``f(view_states, spec_rows) -> {ate, att, value, n_matched_*,
+    n_groups, variance}`` with every output a ``(B,)`` array.
+
+    ``view_schema`` is the engine's views as ``(treatment, codec)`` in
+    view-id order; ``view_states`` a matching tuple of ``(hi, lo,
+    role-ordered stats, group_valid, keep)``; ``spec_rows`` the ``(B,
+    SPEC_META_WORDS + W)`` encoded spec table (:func:`encode_query_spec`).
+    The cache key is shapes/schema ONLY — predicates arrive as data, so B
+    heterogeneous specs (mixed views, estimands, subpopulations) share one
+    compilation, and any batch inside the same pow2 ``b_bucket`` reuses
+    the trace.
+
+    On a mesh with partitioned ``(P, C)`` state the program is one
+    ``shard_map`` body that all_gathers each view's raw partition tables
+    ONCE (state-sized traffic, not B masked copies) and then runs the
+    identical replicated batched estimate — the final reduce stays the
+    canonical chunked reduction, never a psum, so answers are
+    bit-identical to the B=1 fused path on 1/2/4-device meshes."""
+    offsets, _ = spec_word_layout(cards)
+    ndev = 1 if mesh is None else int(mesh.shape[mesh_axis])
+
+    if partitioned and ndev > 1:
+        from jax.experimental.shard_map import shard_map
+
+        def sm_body(view_states, spec_rows):
+            def g(x):
+                return jax.lax.all_gather(x, mesh_axis, tiled=True)
+            gathered = tuple(
+                (g(hi), g(lo), tuple(g(s) for s in stats), g(gv), g(keep))
+                for hi, lo, stats, gv, keep in view_states)
+            return _batched_query_body(view_schema, cards, offsets,
+                                       gathered, spec_rows)
+
+        part = P(mesh_axis, None)
+        state_spec = tuple(
+            (part, part, (part,) * len(QUERY_ROLES), part, part)
+            for _ in view_schema)
+
+        def program(view_states, spec_rows):
+            return shard_map(sm_body, mesh=mesh,
+                             in_specs=(state_spec, P()), out_specs=P(),
+                             check_rep=False)(view_states, spec_rows)
+    else:
+        def program(view_states, spec_rows):
+            return _batched_query_body(view_schema, cards, offsets,
+                                       view_states, spec_rows)
 
     return counted_jit(program, label="query")
 

@@ -99,7 +99,7 @@ from repro.core.coarsen import CoarsenSpec
 from repro.core.propensity import (LogisticModel, StreamStats, design_matrix,
                                    fit_logistic)
 from repro.data.columnar import GrowableTable, Table, _round_capacity
-from repro.launch.trace import counted_jit
+from repro.launch.trace import counted_jit, record_batch
 
 BASE_VIEW = fused_mod.BASE_VIEW
 
@@ -129,14 +129,32 @@ def _bucket_rows(n: int) -> int:
     return b
 
 
+def _bucket_specs(n: int) -> int:
+    """Power-of-two SPEC bucket a query batch pads to. Same idea as
+    :func:`_bucket_rows` (the batched query program traces per padded
+    batch size, so bucketing caps retraces at ~log2(max B)) but floored
+    at 1: single queries through the batched path should not pay a
+    64-wide estimate."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
 SubPop = Optional[Mapping[str, Sequence[int]]]
 
 
 def _freeze_subpop(subpopulation: SubPop):
+    """Canonical hashable form of a subpopulation predicate: ``((dim,
+    (bucket, ...)), ...)`` sorted, or None. Idempotent — accepts either
+    the mapping form or an already-frozen tuple (``QuerySpec`` stores the
+    frozen form)."""
     if not subpopulation:
         return None
+    items = (subpopulation if isinstance(subpopulation, tuple)
+             else subpopulation.items())
     return tuple(sorted((d, tuple(sorted(int(b) for b in bs)))
-                        for d, bs in subpopulation.items()))
+                        for d, bs in items))
 
 
 @dataclasses.dataclass
@@ -392,6 +410,26 @@ class OnlineEngine:
     fused_host_sync: legacy alias — ``False`` selects
                  ``pipeline="unfused"``; ignored when ``pipeline`` is
                  passed explicitly.
+
+    Which pipeline am I on?  (full table: docs/architecture.md)
+
+    ==================  ===================  =========================
+    flag                value                dispatches / role
+    ==================  ===================  =========================
+    ``pipeline=``       ``"fused1"``         1 donated (production)
+    (ingest)            ``"planner"``        2 (PR 3 baseline)
+                        ``"unfused"``        O(#views) (legacy)
+    ``query_pipeline=`` ``"fused"``          1, 0 cached (production)
+                        ``"assemble"``       reassembly baseline
+    (no flag)           :meth:`ate_batch`    1 per B-spec wave
+    ==================  ===================  =========================
+
+    Many heterogeneous queries batch into ONE dispatch via
+    :meth:`ate_batch` (specs are encoded as device-resident data, so
+    changing WHAT a batch asks never retraces);
+    :class:`repro.core.serving.ServingEngine` wraps it in a slot-based
+    continuous batcher for the multi-tenant serving regime. Both share
+    ``ate()``'s estimate cache and invalidation.
     """
 
     def __init__(self, specs: Mapping[str, CoarsenSpec],
@@ -450,6 +488,7 @@ class OnlineEngine:
         self._cache: Dict[Tuple, ATEEstimate] = {}
         self.cache_hits = 0
         self.cache_misses = 0
+        self.batch_deduped = 0
         self.models: Dict[str, LogisticModel] = {}
 
     def _view_schema(self):
@@ -1127,7 +1166,9 @@ class OnlineEngine:
         function of the canonical (key-sorted) group content alone, so
         identical maintained stats give bit-identical results regardless
         of engine layout, query pipeline or mesh size (see
-        :func:`_estimate_view`)."""
+        :func:`_estimate_view`). For a WINDOW of heterogeneous queries
+        use :meth:`ate_batch` (one dispatch for all of them, same cache,
+        bitwise-identical answers)."""
         key = (treatment, _freeze_subpop(subpopulation))
         if key in self._cache:
             self.cache_hits += 1
@@ -1142,6 +1183,148 @@ class OnlineEngine:
             n_groups=est.n_groups, variance=est.variance)))
         self._cache[key] = est
         return est
+
+    def cached_estimate(self, treatment: str, subpopulation: SubPop = None
+                        ) -> Optional[ATEEstimate]:
+        """Cache-only probe: the host-resident estimate for this query if
+        one is live, else None — NEVER dispatches. The serving layer uses
+        this so cache hits are answered without occupying a batch slot."""
+        return self._cache.get((treatment, _freeze_subpop(subpopulation)))
+
+    # ------------------------------------------------- batched query path
+    def _spec_cards(self) -> Tuple:
+        """The engine's base-dim ``(dim, cardinality)`` schema — the
+        static word layout every encoded query spec of this engine shares
+        (:func:`repro.core.fused.spec_word_layout`)."""
+        return tuple((d, self.specs[d].n_buckets) for d in sorted(self.specs))
+
+    def _batch_view_schema(self) -> Tuple:
+        """Views in view-id order as ``(treatment, codec)`` — the static
+        half of the batched query program's cache key."""
+        return tuple((t, self.views[t].table.codec)
+                     for t in sorted(self.treatments))
+
+    def _view_query_args(self, treatment: str) -> Tuple:
+        """One view's raw state in the batched program's layout: keys,
+        ROLE-ordered stat columns, group validity, overlap keep."""
+        view = self.views[treatment]
+        tab = view.table
+        stats = tuple(tab.stats[k]
+                      for k in fused_mod.query_stat_names(treatment))
+        return (tab.key_hi, tab.key_lo, stats, tab.group_valid, view.keep)
+
+    def _batch_query_flags(self) -> Tuple:
+        """(mesh, mesh_axis, partitioned) the batched program compiles
+        under — replicated views never shard the query."""
+        return None, self.mesh_axis, False
+
+    def _normalize_spec(self, spec) -> Tuple[str, Tuple, int]:
+        """Accept a ``QuerySpec``-shaped object (``treatment``,
+        ``subpopulation``, optional ``estimand`` attributes) or a plain
+        ``(treatment, subpopulation)`` pair; returns (treatment, frozen
+        subpop, estimand id) and validates against the schema."""
+        if isinstance(spec, tuple):
+            treatment, sub = spec
+            estimand = "ate"
+        else:
+            treatment = spec.treatment
+            sub = spec.subpopulation
+            estimand = getattr(spec, "estimand", "ate")
+        if treatment not in self.treatments:
+            raise KeyError(f"unknown treatment {treatment!r}")
+        if estimand not in fused_mod.ESTIMAND_IDS:
+            raise ValueError(f"unknown estimand {estimand!r}")
+        frozen = _freeze_subpop(sub)
+        if frozen:
+            vdims = set(self.views[treatment].dims)
+            bad = [d for d, _ in frozen if d not in vdims]
+            if bad:
+                raise ValueError(
+                    f"subpopulation dims {bad} not materialized in view "
+                    f"{treatment!r} (dims {sorted(vdims)}); add them to "
+                    f"query_dims")
+        return treatment, frozen, fused_mod.ESTIMAND_IDS[estimand]
+
+    def _batched_estimate(self, keys: Sequence[Tuple[str, Tuple, int]]
+                          ) -> List[ATEEstimate]:
+        """Uncached batched estimate: encode the specs into the device
+        spec table, pad to the pow2 spec bucket, run ONE compiled batched
+        query dispatch, fetch the ``(B,)`` scalar vectors with one
+        ``device_get``. Bitwise identical per spec to the B=1 fused
+        path (shared canonical estimator body + padding-invariant
+        canonical reduce)."""
+        cards = self._spec_cards()
+        view_ids = {t: i for i, t in enumerate(sorted(self.treatments))}
+        rows = [fused_mod.encode_query_spec(cards, view_ids[t], est, sub)
+                for t, sub, est in keys]
+        bucket = _bucket_specs(len(rows))
+        width = rows[0].shape[0]
+        table = np.zeros((bucket, width), np.uint32)
+        table[:len(rows)] = np.stack(rows)
+        mesh, mesh_axis, partitioned = self._batch_query_flags()
+        prog = fused_mod.get_fused_query_batch(
+            self._batch_view_schema(), cards, bucket, mesh, mesh_axis,
+            partitioned)
+        states = tuple(self._view_query_args(t)
+                       for t in sorted(self.treatments))
+        out = jax.device_get(prog(states, jnp.asarray(table)))
+        record_batch(len(rows), label="query")
+        return [ATEEstimate(
+            ate=out["ate"][i], att=out["att"][i],
+            n_matched_treated=out["n_matched_treated"][i],
+            n_matched_control=out["n_matched_control"][i],
+            n_groups=out["n_groups"][i], variance=out["variance"][i])
+            for i in range(len(rows))]
+
+    def ate_batch(self, specs: Sequence) -> List[ATEEstimate]:
+        """Answer MANY heterogeneous causal queries with at most ONE
+        compiled dispatch. ``specs`` mixes treatments (view choice),
+        subpopulation predicates and estimands freely — each is encoded
+        into a fixed-width device-resident spec row
+        (:func:`repro.core.fused.encode_query_spec`) and the whole batch
+        runs through the batched query program
+        (:func:`repro.core.fused.get_fused_query_batch`), padded to a
+        pow2 spec bucket so batch-size jitter never retraces.
+
+        Cache integration mirrors :meth:`ate`: specs whose
+        ``(treatment, subpopulation)`` estimate is cached are answered
+        host-side with zero dispatches; identical in-flight specs in one
+        batch window are DEDUPED to a single slot (``batch_deduped``
+        counts the collapsed duplicates — e.g. many dashboards asking the
+        same question); every computed estimate lands in the same cache,
+        with the same delta-predicate invalidation on later ingests.
+        Results are bitwise identical to B sequential uncached
+        :meth:`ate` calls, in input order. Each element of ``specs`` is a
+        ``QuerySpec``-shaped object or a ``(treatment, subpopulation)``
+        pair."""
+        resolved = [self._normalize_spec(s) for s in specs]
+        out: List[Optional[ATEEstimate]] = [None] * len(resolved)
+        miss_keys: List[Tuple[str, Tuple, int]] = []
+        slot_of: Dict[Tuple, int] = {}
+        slot_idx: List[Tuple[int, int]] = []   # (spec index, slot)
+        for i, (t, sub, est) in enumerate(resolved):
+            cache_key = (t, sub)
+            hit = self._cache.get(cache_key)
+            if hit is not None:
+                self.cache_hits += 1
+                out[i] = hit
+                continue
+            slot = slot_of.get(cache_key)
+            if slot is None:
+                slot = len(miss_keys)
+                slot_of[cache_key] = slot
+                miss_keys.append((t, sub, est))
+                self.cache_misses += 1
+            else:
+                self.batch_deduped += 1
+            slot_idx.append((i, slot))
+        if miss_keys:
+            results = self._batched_estimate(miss_keys)
+            for (t, sub, _), est in zip(miss_keys, results):
+                self._cache[(t, sub)] = est
+            for i, slot in slot_idx:
+                out[i] = results[slot]
+        return out
 
     def cem_groups(self, treatment: str) -> CEMGroups:
         """Current CEM group stats with the incrementally maintained
@@ -1300,7 +1483,11 @@ class PartitionedOnlineEngine(OnlineEngine):
     engine's on any device count. ``query_pipeline="assemble"`` keeps the
     planner-era reassembly baseline
     (:func:`repro.core.cube.unpartition_view`, memoized per state
-    version), which ``cem_groups()`` also serves from.
+    version), which ``cem_groups()`` also serves from. Batched queries
+    (:meth:`OnlineEngine.ate_batch`) shard the same way: the one batched
+    dispatch all-gathers each view's raw tables once (state-sized
+    traffic, independent of the batch size) and runs the replicated
+    batched estimator, bit-identical to the replicated engine's batch.
 
     n_parts: number of key-range partitions. With a mesh attached it must
     be a MULTIPLE of the data-axis size: each device owns
@@ -1608,6 +1795,14 @@ class PartitionedOnlineEngine(OnlineEngine):
         return _run_fused_query(pv.pcub, pv.keep, treatment, subpopulation,
                                 mesh=mesh, mesh_axis=self.mesh_axis,
                                 partitioned=True)
+
+    def _batch_query_flags(self) -> Tuple:
+        """Batched queries run straight on the (P, C) partitioned state:
+        on a mesh the batched program all_gathers each view's raw
+        partition tables once inside its shard_map body and reduces
+        replicated (bit-identical to the replicated engine)."""
+        mesh = self.mesh if self._mesh_ndev > 1 else None
+        return mesh, self.mesh_axis, True
 
     def _rowlookup_query(self, treatment: str):
         """Partitioned row lookup: hash each probe row to its owning

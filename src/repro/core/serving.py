@@ -1,0 +1,233 @@
+"""Multi-tenant query serving: a slot-based continuous batcher over the
+online engines' batched query path.
+
+ZaliQL's production shape is thousands of concurrent analysts asking
+DIFFERENT subpopulation questions over the SAME materialized state — the
+sufficient-statistic query-serving regime (PAPERS.md: Computational
+Causal Inference; fast-causal-inference's SQLGateway). PR 5 made one
+uncached ``ate()`` one compiled dispatch; this module makes a WINDOW of B
+heterogeneous queries one compiled dispatch:
+
+  submit() ──> FIFO queue ──> step():
+     cache hits   -> answered host-side, NEVER occupy a slot
+     duplicates   -> collapse onto the first occurrence's slot
+     fresh specs  -> admitted into up to ``n_slots`` batch slots
+                  -> encoded spec table -> ONE batched query dispatch
+                     (``OnlineEngine.ate_batch`` ->
+                      ``repro.core.fused.get_fused_query_batch``)
+     results      -> per-subpopulation estimate cache (shared with
+                     ``ate()``; invalidated per committed ingest delta)
+
+The batcher generalizes :class:`repro.launch.serve.Batcher` (the LM
+prefill/decode slot scheduler): same fixed-slot wave admission, but a
+causal query completes in ONE program launch, so every wave frees every
+slot, and the wave size is padded to a pow2 bucket
+(``online._bucket_specs``) so arrival jitter never retraces the program.
+
+Consistency: all queries of one wave are answered from the engine state
+committed at dispatch time (one program over one state snapshot). Cache
+entries are invalidated by the engine's delta-predicate invalidation on
+every committed ingest (see ``OnlineEngine._invalidate``), so a query
+admitted after an ingest version bump re-dispatches instead of serving a
+stale estimate.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.ate import ATEEstimate
+from repro.core.online import _freeze_subpop
+
+
+def pow2_bucket(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor) — the shared bucketing rule
+    of every batched entry point (ingest rows, query specs, serve waves):
+    compiled programs trace per padded size, so pow2 buckets cap the
+    trace count of an irregular load at ~log2(max size)."""
+    b = max(1, int(floor))
+    while b < n:
+        b <<= 1
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """One causal query as DATA: which view (``treatment``), which rows
+    (``subpopulation`` — dim -> allowed coarsened buckets, conjunctive),
+    which estimand (``"ate"`` or ``"att"``). The engine encodes this into
+    a fixed-width uint32 spec row (``repro.core.fused.encode_query_spec``)
+    so a batch of heterogeneous specs is just a device-resident table.
+
+    ``subpopulation`` is stored in frozen ``((dim, (bucket, ...)), ...)``
+    form, so specs are hashable — equal specs dedupe in flight and share
+    one cache entry."""
+
+    treatment: str
+    subpopulation: Optional[Tuple] = None
+    estimand: str = "ate"
+
+    def __post_init__(self):
+        if self.estimand not in ("ate", "att"):
+            raise ValueError(f"unknown estimand {self.estimand!r}")
+        object.__setattr__(self, "subpopulation",
+                           _freeze_subpop(self.subpopulation))
+
+    @staticmethod
+    def make(treatment: str,
+             subpopulation: Optional[Mapping[str, Sequence[int]]] = None,
+             estimand: str = "ate") -> "QuerySpec":
+        """Build a spec from the mapping form ``ate()`` accepts."""
+        return QuerySpec(treatment, _freeze_subpop(subpopulation), estimand)
+
+    def select(self, est: ATEEstimate) -> float:
+        """This spec's answer from a full estimate — the host-side twin
+        of the device program's ``value`` column (a pure selection of the
+        same scalars, so both pick bit-identical numbers)."""
+        return est.ate if self.estimand == "ate" else est.att
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedQuery:
+    """One completed query: the full estimate, the estimand-selected
+    ``value``, and how it was answered (``cached`` = served from the
+    host estimate cache without occupying a slot)."""
+
+    qid: int
+    spec: QuerySpec
+    estimate: ATEEstimate
+    value: float
+    cached: bool
+    state_version: int
+
+
+class ServingEngine:
+    """Slot-based continuous batcher for causal queries.
+
+    ``engine`` is an :class:`~repro.core.online.OnlineEngine` or
+    :class:`~repro.core.online.PartitionedOnlineEngine`; ``n_slots``
+    bounds the specs per batched dispatch (the wave is additionally
+    padded to a pow2 bucket inside ``ate_batch``). Ingest can interleave
+    freely with serving: the engine's estimate cache is invalidated per
+    committed delta, so the next wave recomputes exactly the touched
+    subpopulations.
+
+    Counters: ``n_served`` (completed queries), ``n_cache_served``
+    (answered from cache, zero dispatches), ``n_deduped`` (collapsed onto
+    another in-flight slot), ``n_waves`` (batched dispatches issued),
+    ``n_slots_used`` (total slots across waves — requests-per-dispatch =
+    (n_served - n_cache_served) / n_waves)."""
+
+    def __init__(self, engine, n_slots: int = 64):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.engine = engine
+        self.n_slots = int(n_slots)
+        self._queue: collections.deque = collections.deque()
+        self._next_qid = 0
+        self.n_served = 0
+        self.n_cache_served = 0
+        self.n_deduped = 0
+        self.n_waves = 0
+        self.n_slots_used = 0
+
+    def submit(self, spec) -> int:
+        """Enqueue one query; returns its ticket id. ``spec`` is a
+        :class:`QuerySpec` or anything ``QuerySpec.make`` accepts as
+        ``(treatment, subpopulation)``."""
+        if not isinstance(spec, QuerySpec):
+            treatment, sub = spec
+            spec = QuerySpec.make(treatment, sub)
+        qid = self._next_qid
+        self._next_qid += 1
+        self._queue.append((qid, spec))
+        return qid
+
+    def pending(self) -> int:
+        """Queries submitted but not yet served."""
+        return len(self._queue)
+
+    def step(self) -> Dict[int, ServedQuery]:
+        """One batch window: serve every queued cache hit (slot-free),
+        admit up to ``n_slots`` unique uncached specs (identical
+        in-flight specs collapse to one slot), run ONE batched dispatch,
+        return every completed query keyed by ticket id. Queries beyond
+        the slot budget stay queued for the next window."""
+        if not self._queue:
+            return {}
+        done: Dict[int, ServedQuery] = {}
+        wave: List[Tuple[int, QuerySpec]] = []
+        wave_keys: Dict[Tuple, int] = {}
+        back: collections.deque = collections.deque()
+        version = self.engine._state_version
+        while self._queue:
+            qid, spec = self._queue.popleft()
+            hit = self.engine.cached_estimate(spec.treatment,
+                                              spec.subpopulation)
+            if hit is not None:
+                self.n_cache_served += 1
+                done[qid] = ServedQuery(qid, spec, hit, spec.select(hit),
+                                        cached=True, state_version=version)
+                continue
+            key = (spec.treatment, spec.subpopulation)
+            if key not in wave_keys and len(wave_keys) >= self.n_slots:
+                back.append((qid, spec))     # next window
+                continue
+            if key in wave_keys:
+                self.n_deduped += 1
+            else:
+                wave_keys[key] = len(wave_keys)
+                self.n_slots_used += 1
+            wave.append((qid, spec))
+        self._queue = back
+        if wave:
+            self.n_waves += 1
+            ests = self.engine.ate_batch([s for _, s in wave])
+            for (qid, spec), est in zip(wave, ests):
+                done[qid] = ServedQuery(qid, spec, est, spec.select(est),
+                                        cached=False, state_version=version)
+        self.n_served += len(done)
+        return done
+
+    def serve(self, specs: Sequence) -> List[ServedQuery]:
+        """Submit then fully drain, preserving input order — the batch
+        analogue of calling :meth:`~repro.core.online.OnlineEngine.ate`
+        per spec, at ~``ceil(unique uncached / n_slots)`` dispatches."""
+        qids = [self.submit(s) for s in specs]
+        results: Dict[int, ServedQuery] = {}
+        while self.pending():
+            results.update(self.step())
+        return [results[q] for q in qids]
+
+
+def run_poisson_load(serving: ServingEngine, specs: Sequence,
+                     rate_qps: float, seed: int = 0
+                     ) -> np.ndarray:
+    """Replay ``specs`` against a live :class:`ServingEngine` with
+    Poisson arrivals at ``rate_qps`` and return per-query latency
+    (seconds, completion - arrival). The serving loop batches whatever
+    has arrived each time a wave frees — the continuous-batching
+    behavior the p50/p99 bench rows measure."""
+    rng = np.random.default_rng(seed)
+    n = len(specs)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, n))
+    latency = np.zeros(n)
+    submitted: Dict[int, int] = {}
+    t0 = time.perf_counter()
+    i = 0
+    while len(submitted) < n or serving.pending():
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            submitted[serving.submit(specs[i])] = i
+            i += 1
+        if serving.pending():
+            for qid in serving.step():
+                fin = time.perf_counter() - t0
+                latency[submitted[qid]] = fin - arrivals[submitted[qid]]
+        elif i < n:
+            time.sleep(min(1e-3, max(0.0, arrivals[i] - now)))
+    return latency

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.serving import pow2_bucket
 from repro.launch.train import get_any_config
 from repro.models import init_params
 from repro.train import make_decode, make_prefill
@@ -29,7 +30,16 @@ class Request:
 
 
 class Batcher:
-    """Fixed-slot continuous batching: new requests join as slots free."""
+    """Fixed-slot continuous batching: new requests join as slots free.
+
+    This is the LM-serving instance of the repo's slot-batcher shape —
+    :class:`repro.core.serving.ServingEngine` generalizes the same
+    admission policy to causal queries (where a request completes in one
+    batched dispatch instead of a prefill + decode loop). Wave prompt
+    lengths are padded to pow2 buckets (``pow2_bucket``, the shared
+    bucketing rule of every batched entry point) so an irregular stream
+    of prompt sizes retraces the prefill program at most ~log2(max_seq)
+    times instead of once per distinct length."""
 
     def __init__(self, cfg, params, n_slots: int, max_seq: int):
         self.cfg = cfg
@@ -48,14 +58,17 @@ class Batcher:
         while queue:
             wave = queue[:self.n_slots]
             queue = queue[self.n_slots:]
-            plen = max(len(r.prompt) for r in wave)
+            n_new = max(r.max_new for r in wave)
+            raw = max(len(r.prompt) for r in wave)
+            # pow2 prompt bucket, capped so the decode positions still fit
+            # the cache (and never below the longest prompt of the wave)
+            plen = min(pow2_bucket(raw), max(raw, self.max_seq - n_new))
             toks = np.zeros((len(wave), plen), np.int32)
             for i, r in enumerate(wave):
                 toks[i, -len(r.prompt):] = r.prompt  # left-pad
             cache, last = self.prefill(self.params,
                                        {"tokens": jnp.asarray(toks)})
             tok = jnp.argmax(last, -1).astype(jnp.int32)
-            n_new = max(r.max_new for r in wave)
             for step in range(n_new):
                 for i, r in enumerate(wave):
                     if len(r.out) < r.max_new:

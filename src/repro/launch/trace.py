@@ -66,6 +66,34 @@ def record_dispatch(n: int = 1, label: Optional[str] = None) -> None:
         lab[label] = lab.get(label, 0) + n
 
 
+def dispatch_counts() -> dict:
+    """Snapshot of every labeled counter (label -> launches, this
+    thread). The unlabeled total is :func:`dispatch_count`."""
+    return dict(_labels())
+
+
+def _batches() -> dict:
+    if not hasattr(_state, "batches"):
+        _state.batches = {}
+    return _state.batches
+
+
+def record_batch(n_items: int, label: str = "query") -> None:
+    """Account ``n_items`` logical requests served by ONE batched launch
+    of the ``label`` family — e.g. a batched query program answering B
+    heterogeneous specs in one dispatch. Lets tests and benchmarks read
+    requests-per-dispatch directly instead of inferring it."""
+    b = _batches()
+    b[label] = b.get(label, 0) + int(n_items)
+
+
+def batched_served(label: str = "query") -> int:
+    """Total logical requests served through batched launches of the
+    ``label`` family (this thread); pairs with ``dispatch_count(label)``
+    to give the amortization ratio of the batched query path."""
+    return _batches().get(label, 0)
+
+
 def counted_jit(fn: Callable = None, label: Optional[str] = None,
                 **jit_kwargs) -> Callable:
     """``jax.jit`` that bumps the dispatch counter once per call.

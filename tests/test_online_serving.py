@@ -1,0 +1,313 @@
+"""Multi-tenant batched query serving: one dispatch for MANY queries.
+
+Contracts under test:
+
+  * ONE DISPATCH PER BATCH — ``ate_batch`` answers B heterogeneous
+    uncached specs (mixed treatments/views, subpopulations, estimands)
+    with exactly ONE compiled launch of the ``"query"`` family, on both
+    engines; results are BITWISE identical to B sequential uncached
+    ``ate()`` calls.
+  * NO RETRACE INSIDE A POW2 BUCKET — the batched program is cached on
+    shapes only (spec predicates are data); any B inside one pow2 bucket
+    reuses the single trace.
+  * IN-FLIGHT DEDUPE — identical specs inside one batch window collapse
+    to one slot (the duplicate-dashboard regression), and cache hits
+    never occupy a slot (zero dispatches when everything is cached).
+  * SERVING LAYER — ``ServingEngine`` waves respect the slot budget,
+    estimand selection matches the full estimate bitwise, and a committed
+    ingest invalidates exactly the touched cache entries so the next wave
+    re-dispatches instead of serving stale answers.
+  * MESH — the partitioned engine on a forced multi-device mesh answers
+    batched queries bit-identically to the single-device replicated
+    engine, still one dispatch per batch.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import CoarsenSpec, OnlineEngine, PartitionedOnlineEngine
+from repro.core import fused as fused_mod
+from repro.core.online import _bucket_specs
+from repro.core.serving import QuerySpec, ServingEngine, run_poisson_load
+from repro.data.columnar import Table
+from repro.launch.trace import batched_served, count_dispatches
+
+SPECS = {"x0": CoarsenSpec.categorical(5), "x1": CoarsenSpec.categorical(4),
+         "x2": CoarsenSpec.categorical(3)}
+TREATMENTS = {"ta": ["x0", "x1"], "tb": ["x0", "x2"]}
+EST_FIELDS = ("ate", "att", "variance", "n_matched_treated",
+              "n_matched_control", "n_groups")
+
+MIXED_SPECS = [
+    ("ta", None), ("tb", None),
+    ("ta", {"x2": [0]}), ("tb", {"x2": [1, 2]}),
+    ("ta", {"x0": [0, 1], "x2": [0, 2]}), ("tb", {"x0": [2], "x2": [0]}),
+    ("ta", {"x1": [3]}), ("tb", {"x0": [0, 1, 2, 3]}),
+]
+
+
+def _frame(n, seed=0):
+    rng = np.random.default_rng(seed)
+    cols = {"x0": rng.integers(0, 5, n).astype(np.int32),
+            "x1": rng.integers(0, 4, n).astype(np.int32),
+            "x2": rng.integers(0, 3, n).astype(np.int32)}
+    cols["ta"] = (rng.random(n) < 0.2 + 0.5 * cols["x0"] / 4).astype(
+        np.int32)
+    cols["tb"] = (rng.random(n) < 0.4).astype(np.int32)
+    cols["y"] = np.round(2.0 * cols["ta"] + 1.5 * cols["x0"]
+                         + rng.normal(0, 0.5, n)).astype(np.float32)
+    return cols, rng.random(n) > 0.08
+
+
+def _engines():
+    kw = dict(query_dims=("x0", "x1", "x2"))
+    return {
+        "replicated": OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                                   **kw),
+        "partitioned": PartitionedOnlineEngine(SPECS, TREATMENTS, "y",
+                                               granule=64, n_parts=3, **kw),
+    }
+
+
+def _feed(engines, n_batches=3, size=500, seed0=10):
+    for i in range(n_batches):
+        cols, valid = _frame(size, seed=seed0 + i)
+        b = Table.from_numpy(cols, valid)
+        for eng in engines.values():
+            eng.ingest(b)
+
+
+def _assert_bitwise(got, want, ctx):
+    for f in EST_FIELDS:
+        g, w = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert g.tobytes() == w.tobytes(), (ctx, f, g, w)
+
+
+@pytest.mark.parametrize("label", ["replicated", "partitioned"])
+def test_batched_queries_one_dispatch_bitwise_vs_sequential(label):
+    engines = _engines()
+    _feed(engines)
+    eng = engines[label]
+    eng.ate_batch(MIXED_SPECS)                  # warm the trace
+    eng._cache.clear()
+    served0 = batched_served("query")
+    with count_dispatches(label="query") as n:
+        batch = eng.ate_batch(MIXED_SPECS)
+    assert n() == 1, (label, n())
+    assert batched_served("query") - served0 == len(MIXED_SPECS)
+    eng._cache.clear()
+    for got, (t, sub) in zip(batch, MIXED_SPECS):
+        with count_dispatches(label="query") as n1:
+            want = eng.ate(t, subpopulation=sub)
+        assert n1() == 1
+        _assert_bitwise(got, want, (label, t, sub))
+
+
+def test_changing_batch_size_within_pow2_bucket_does_not_retrace():
+    engines = _engines()
+    _feed(engines)
+    eng = engines["replicated"]
+    eng.ate_batch(MIXED_SPECS[:5])              # bucket 8
+    prog = fused_mod.get_fused_query_batch(
+        eng._batch_view_schema(), eng._spec_cards(), 8,
+        *eng._batch_query_flags())
+    assert _bucket_specs(5) == _bucket_specs(8) == 8
+    assert prog._cache_size() == 1
+    for b in (6, 7, 8):
+        eng._cache.clear()
+        with count_dispatches(label="query") as n:
+            eng.ate_batch(MIXED_SPECS[:b])
+        assert n() == 1, b
+    assert prog._cache_size() == 1, "retraced inside a pow2 bucket"
+
+
+@pytest.mark.parametrize("label", ["replicated", "partitioned"])
+def test_duplicate_inflight_specs_collapse_to_one_slot(label):
+    engines = _engines()
+    _feed(engines)
+    eng = engines[label]
+    dup = [("ta", {"x2": [0]})] * 6 + [("tb", None)] * 2
+    eng.ate_batch(dup)                          # warm
+    eng._cache.clear()
+    deduped0 = eng.batch_deduped
+    served0 = batched_served("query")
+    with count_dispatches(label="query") as n:
+        out = eng.ate_batch(dup)
+    # one dispatch, and only the two UNIQUE specs occupied slots
+    assert n() == 1, (label, n())
+    assert eng.batch_deduped - deduped0 == 6
+    assert batched_served("query") - served0 == 2
+    for a in out[1:6]:
+        _assert_bitwise(a, out[0], label)
+
+
+def test_cache_hits_never_occupy_a_slot():
+    engines = _engines()
+    _feed(engines)
+    eng = engines["replicated"]
+    eng.ate("ta")
+    eng.ate("tb", subpopulation={"x2": [0]})
+    with count_dispatches(label="query") as n:
+        out = eng.ate_batch([("ta", None), ("tb", {"x2": [0]})])
+    assert n() == 0, "fully cached batch still dispatched"
+    _assert_bitwise(out[0], eng.ate("ta"), "cached")
+    # a mixed batch dispatches once, sized by the MISSES only
+    eng.ate_batch([("ta", {"x1": [0]})])        # warm bucket-1 trace
+    eng._cache.pop(("ta", (("x1", (0,)),)))
+    served0 = batched_served("query")
+    with count_dispatches(label="query") as n:
+        eng.ate_batch([("ta", None), ("ta", {"x1": [0]}), ("tb", {"x2": [0]})])
+    assert n() == 1
+    assert batched_served("query") - served0 == 1
+
+
+def test_estimand_is_part_of_the_spec():
+    engines = _engines()
+    _feed(engines)
+    eng = engines["replicated"]
+    ref = eng.ate("ta", subpopulation={"x2": [0]})
+    got = eng.ate_batch([QuerySpec("ta", {"x2": [0]}, "ate"),
+                         QuerySpec("ta", {"x2": [0]}, "att")])
+    spec_att = QuerySpec("ta", {"x2": [0]}, "att")
+    assert np.asarray(spec_att.select(got[1])).tobytes() \
+        == np.asarray(ref.att).tobytes()
+    with pytest.raises(ValueError):
+        QuerySpec("ta", None, "median")
+
+
+@pytest.mark.parametrize("label", ["replicated", "partitioned"])
+def test_serving_engine_waves_counters_and_invalidation(label):
+    engines = _engines()
+    _feed(engines)
+    eng = engines[label]
+    srv = ServingEngine(eng, n_slots=3)
+    qs = ([QuerySpec(t, sub) for t, sub in MIXED_SPECS]
+          + [QuerySpec("ta", None), QuerySpec("ta", {"x2": [0]}, "att")])
+    for q in qs:
+        eng.ate(q.treatment, q.subpopulation)   # warm every trace/ref
+    refs = {q: eng.ate(q.treatment, q.subpopulation) for q in qs}
+    eng._cache.clear()
+    res = srv.serve(qs)
+    # 8 unique (treatment, subpop) keys over 3 slots -> 3 waves; the
+    # duplicate unrestricted-ta spec and the att twin collapsed in flight
+    assert srv.n_waves == 3 and srv.n_slots_used == 8
+    assert srv.n_deduped == 2 and srv.n_cache_served == 0
+    assert srv.n_served == len(qs)
+    for q, r in zip(qs, res):
+        _assert_bitwise(r.estimate, refs[q], (label, q))
+        want = refs[q].ate if q.estimand == "ate" else refs[q].att
+        assert np.asarray(r.value).tobytes() == np.asarray(want).tobytes()
+        assert not r.cached
+    # repeat: everything cached, zero dispatches, no slots used
+    with count_dispatches(label="query") as n:
+        res2 = srv.serve(qs)
+    assert n() == 0 and all(r.cached for r in res2)
+    # a committed ingest invalidates the touched entries: the next wave
+    # re-dispatches instead of serving stale cache
+    cols, valid = _frame(300, seed=99)
+    eng.ingest(Table.from_numpy(cols, valid))
+    with count_dispatches(label="query") as n:
+        res3 = srv.serve([QuerySpec("ta", None)])
+    assert n() == 1 and not res3[0].cached
+    eng._cache.clear()
+    _assert_bitwise(res3[0].estimate, eng.ate("ta"), label)
+
+
+def test_poisson_load_serves_everything():
+    engines = _engines()
+    _feed(engines, n_batches=2)
+    eng = engines["replicated"]
+    srv = ServingEngine(eng, n_slots=8)
+    qs = [QuerySpec("ta", {"x0": [i % 5]}) for i in range(24)]
+    lat = run_poisson_load(srv, qs, rate_qps=500.0, seed=1)
+    assert srv.n_served == len(qs) and srv.pending() == 0
+    assert (lat > 0).all()
+
+
+def test_subpop_dim_not_in_view_raises():
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                       query_dims=("x2",))
+    cols, valid = _frame(200, seed=3)
+    eng.ingest(Table.from_numpy(cols, valid))
+    with pytest.raises(ValueError, match="not materialized"):
+        eng.ate_batch([("ta", {"x2": [0]}), ("tb", {"x1": [0]})])
+
+
+# ----------------------------- mesh (subprocess, forced host devices) -------
+def _run_subprocess(body: str):
+    code = textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=900,
+                          env={**os.environ, "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc.stdout
+
+
+def test_mesh_batched_queries_one_dispatch_bit_identical():
+    out = _run_subprocess("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax
+    assert jax.device_count() == 4
+    from repro.core import CoarsenSpec, OnlineEngine, PartitionedOnlineEngine
+    from repro.core.serving import QuerySpec, ServingEngine
+    from repro.data.columnar import Table
+    from repro.launch.mesh import make_data_mesh
+    from repro.launch.trace import count_dispatches
+
+    SPECS = {"x0": CoarsenSpec.categorical(5),
+             "x1": CoarsenSpec.categorical(4),
+             "x2": CoarsenSpec.categorical(3)}
+    TREATMENTS = {"ta": ["x0", "x1"], "tb": ["x0", "x2"]}
+
+    def frame(n, seed):
+        rng = np.random.default_rng(seed)
+        cols = {"x0": rng.integers(0, 5, n).astype(np.int32),
+                "x1": rng.integers(0, 4, n).astype(np.int32),
+                "x2": rng.integers(0, 3, n).astype(np.int32)}
+        cols["ta"] = (rng.random(n) < 0.2 + 0.5 * cols["x0"] / 4
+                      ).astype(np.int32)
+        cols["tb"] = (rng.random(n) < 0.4).astype(np.int32)
+        cols["y"] = np.round(2.0 * cols["ta"] + 1.5 * cols["x0"]
+                             + rng.normal(0, 0.5, n)).astype(np.float32)
+        return cols, rng.random(n) > 0.08
+
+    kw = dict(query_dims=("x0", "x1", "x2"))
+    mesh = make_data_mesh(4)
+    ref = OnlineEngine(SPECS, TREATMENTS, "y", granule=256, **kw)
+    eng = PartitionedOnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                                  mesh=mesh, n_parts=8, **kw)
+    for i in range(3):
+        cols, valid = frame(1000, seed=i)
+        b = Table.from_numpy(cols, valid)
+        ref.ingest(b)
+        eng.ingest(b)
+    qs = [("ta", None), ("tb", None), ("ta", {"x2": [0]}),
+          ("tb", {"x2": [1, 2]}), ("ta", {"x0": [0, 1], "x2": [0, 2]}),
+          ("tb", {"x1": [0, 3]})]
+    eng.ate_batch(qs)                       # warm
+    eng._cache.clear()
+    with count_dispatches(label="query") as n:
+        batch = eng.ate_batch(qs)
+    assert n() == 1, n()
+    for got, (t, sub) in zip(batch, qs):
+        want = ref.ate(t, subpopulation=sub)
+        for f in ("ate", "att", "variance", "n_matched_treated",
+                  "n_matched_control", "n_groups"):
+            g = np.asarray(getattr(got, f))
+            w = np.asarray(getattr(want, f))
+            assert g.tobytes() == w.tobytes(), (t, sub, f, g, w)
+    # serving layer on the mesh engine: cache hits, dedupe, waves
+    srv = ServingEngine(eng, n_slots=4)
+    res = srv.serve([QuerySpec(t, s) for t, s in qs]
+                    + [QuerySpec("ta", None, "att")])
+    assert srv.n_cache_served == len(qs) + 1   # ate_batch filled the cache
+    assert res[-1].value == float(ref.ate("ta").att)
+    print("MESH_SERVE_OK")
+    """)
+    assert "MESH_SERVE_OK" in out

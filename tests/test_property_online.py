@@ -32,6 +32,7 @@ from repro.core.cem import make_codec
 from repro.core.online import BASE_VIEW, _estimate_view
 from repro.core import cube
 from repro.data.columnar import Table, _round_capacity
+from repro.launch.trace import count_dispatches
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -238,13 +239,15 @@ def _check_state(oracle, engines, history):
                     err_msg=f"{label}/{t} matched rows (assemble)")
 
 
-def _check_query(oracle, engines, treatment, subpop):
-    """Every interleaved query is answered THREE ways per engine — the
-    cached ``ate()`` entry point, the uncached fused one-dispatch program
-    and the planner-era assemble baseline — and all must be bit-identical
-    to the oracle's estimate (incl. post-eviction and subpopulation
-    queries; the CI device matrix replays this at 1/2/4 forced host
-    devices)."""
+def _check_query(oracle, engines, treatment, subpop, qseed: int = 0):
+    """Every interleaved query is answered FOUR ways per engine — the
+    cached ``ate()`` entry point, the uncached fused one-dispatch
+    program, the planner-era assemble baseline, and the BATCHED spec-
+    table program (the query embedded in a random-size batch of mixed
+    specs, one dispatch for the whole batch) — and all must be
+    bit-identical to the oracle's estimate (incl. post-eviction and
+    subpopulation queries; the CI device matrix replays this at 1/2/4
+    forced host devices)."""
     want = oracle.ate(treatment, subpop)
     for label, eng in engines.items():
         paths = {
@@ -261,6 +264,29 @@ def _check_query(oracle, engines, treatment, subpop):
             assert int(got.n_groups) == int(want.n_groups), where
             assert float(got.n_matched_treated) == float(
                 want.n_matched_treated), where
+    # batched path: the query rides in a random-B batch of mixed specs
+    # (cache bypassed so the batched program really computes); the whole
+    # batch is ONE dispatch and every slot is bitwise equal to its
+    # single-spec fused answer (slot 0 additionally to the oracle)
+    rng = np.random.default_rng(qseed)
+    batch_specs = [(treatment, subpop)] + [
+        (TNAMES[int(rng.integers(0, len(TNAMES)))],
+         SUBPOPS[int(rng.integers(0, len(SUBPOPS)))])
+        for _ in range(int(rng.integers(0, 4)))]
+    for label, eng in engines.items():
+        keys = [eng._normalize_spec(s) for s in batch_specs]
+        with count_dispatches(label="query") as n:
+            batch = eng._batched_estimate(keys)
+        assert n() == 1, (label, len(batch_specs))
+        assert float(batch[0].ate) == float(want.ate), (label, "batched")
+        for got, (t, sub) in zip(batch, batch_specs):
+            single = eng._estimate(t, sub, pipeline="fused")
+            where = (label, "batched", t, sub)
+            for f in ("ate", "att", "variance", "n_matched_treated",
+                      "n_matched_control", "n_groups"):
+                g = np.asarray(getattr(got, f))
+                s = np.asarray(getattr(single, f))
+                assert g.tobytes() == s.tobytes(), (*where, f, g, s)
 
 
 def run_stream(ops, n_parts: int):
@@ -310,10 +336,10 @@ def run_stream(ops, n_parts: int):
             oracle.evict(ttl)
         else:
             _check_query(oracle, engines, TNAMES[a % len(TNAMES)],
-                         SUBPOPS[b % len(SUBPOPS)])
+                         SUBPOPS[b % len(SUBPOPS)], qseed=c)
     _check_state(oracle, engines, history)
-    for t in TNAMES:
-        _check_query(oracle, engines, t, None)
+    for i, t in enumerate(TNAMES):
+        _check_query(oracle, engines, t, None, qseed=i)
     return n_checked_guard
 
 

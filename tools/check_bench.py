@@ -31,7 +31,7 @@ import os
 import sys
 
 GUARDED = ("online_ingest", "online_dispatches", "online_query",
-           "online_rowlookup")
+           "online_rowlookup", "online_serve")
 
 
 def load_rows(path: str):
