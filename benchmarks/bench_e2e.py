@@ -36,7 +36,7 @@ def main(n_flights=None):
         mask = flightgen.treatment_valid_mask(data, tname)
         table = Table(dict(joined.columns), joined.valid & jnp.asarray(mask))
 
-        def run():
+        def run(table=table, tname=tname):
             res = cem(table, tname, "dep_delay", specs_for(tname))
             est = estimate_ate(res.groups)
             return res, est

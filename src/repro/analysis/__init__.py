@@ -1,0 +1,23 @@
+"""Contract checker for the engine's dispatch/donation/bit-identity
+invariants (see ``docs/architecture.md`` — Enforced contracts).
+
+Two layers:
+
+- :mod:`repro.analysis.lint` — AST rules ZQL001-ZQL006 over the source
+  tree (raw ``jax.jit`` outside dispatch accounting, host syncs in hot
+  paths, order-sensitive reductions in estimator bodies, donation
+  hazards, Pallas in-place kernels without aliasing, retrace hazards).
+- :mod:`repro.analysis.jaxpr_audit` — traces the REAL fused
+  ingest/query/evict/batch programs of both engines on tiny configs and
+  asserts donation took effect, the hot paths are transfer-clean under
+  ``jax.transfer_guard``, and dispatch counts match the 1-dispatch
+  contract.
+
+``tools/contract_check.py`` is the CLI over both.
+"""
+from repro.analysis.lint import (  # noqa: F401
+    Finding,
+    load_baseline,
+    run_lint,
+    write_baseline,
+)

@@ -1,0 +1,221 @@
+"""Layer 2 of the contract checker: compiled-program audits.
+
+The AST lint (layer 1) proves the SOURCE follows the contracts; this
+module proves the COMPILED ARTIFACTS do. It builds tiny replicated and
+partitioned engines, warms their fused programs, and asserts — against
+the real executables, not the prose in ``docs/architecture.md`` — that:
+
+- **donation took effect**: every leaf of the donated state pytree
+  appears in the compiled ingest executable's ``input_output_alias`` set
+  (static) AND the pre-call buffers are deleted after a steady-state
+  ingest / evict (runtime);
+- **the hot paths are transfer-clean**: a steady-state ingest and an
+  uncached query complete under ``jax.transfer_guard("disallow")`` —
+  every host<->device movement on those paths is an explicit
+  ``device_put``/``device_get``, never an implicit sync;
+- **dispatch counts match the 1-dispatch contract**: steady-state
+  ingest = 1 launch, uncached query = 1 launch (label ``"query"``),
+  cached query = 0, a B-spec ``ate_batch`` = 1.
+
+Each check returns an :class:`AuditResult`; ``run_audit()`` runs the
+whole matrix (both engine layouts). ``tools/contract_check.py --jaxpr``
+and ``tests/test_contract_check.py`` drive it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, List
+
+import numpy as np
+
+#: rows per audit batch — one fixed size, so every ingest after the first
+#: hits the same row bucket (no retrace noise in the dispatch counts).
+#: POWER OF TWO on purpose: bucket-sized batches skip the documented
+#: eager ``jnp.pad`` pre-step (``OnlineEngine._bucket_pad``), which is
+#: the steady-state path the transfer-clean contract covers — eager pads
+#: materialize fill constants via implicit host->device transfers.
+_BATCH_ROWS = 256
+
+#: alias entries in an HloModule header look like ``(12, {}, may-alias)``
+#: (param_number, param_index, kind) — one per donated flat input.
+_ALIAS_PARAM_RE = re.compile(r"\((\d+), \{\}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditResult:
+    engine: str     # "replicated" | "partitioned"
+    contract: str   # short contract key, e.g. "ingest-donation-static"
+    ok: bool
+    detail: str
+
+    def format(self) -> str:
+        status = "ok" if self.ok else "FAIL"
+        return f"[{status}] {self.engine}/{self.contract}: {self.detail}"
+
+
+def _tiny_engines() -> Dict[str, Callable]:
+    """Factories for the two engine layouts on a tiny config — small
+    granule, two views — so the audit traces the same program families
+    the production paths use, in seconds."""
+    from repro.core import CoarsenSpec, OnlineEngine, PartitionedOnlineEngine
+
+    specs = {"x0": CoarsenSpec.categorical(5),
+             "x1": CoarsenSpec.categorical(4),
+             "x2": CoarsenSpec.categorical(3)}
+    treatments = {"ta": ["x0", "x1"], "tb": ["x0", "x2"]}
+    return {
+        "replicated": lambda: OnlineEngine(specs, treatments, "y",
+                                           granule=256),
+        "partitioned": lambda: PartitionedOnlineEngine(
+            specs, treatments, "y", granule=128, n_parts=2),
+    }
+
+
+def _batch(seed: int):
+    from repro.data.columnar import Table
+
+    rng = np.random.default_rng(seed)
+    n = _BATCH_ROWS
+    cols = {
+        "x0": rng.integers(0, 5, n).astype(np.int32),
+        "x1": rng.integers(0, 4, n).astype(np.int32),
+        "x2": rng.integers(0, 3, n).astype(np.int32),
+    }
+    cols["ta"] = (rng.random(n) < 0.2 + 0.5 * cols["x0"] / 4).astype(np.int32)
+    cols["tb"] = (rng.random(n) < 0.4).astype(np.int32)
+    y = 2.0 * cols["ta"] + 1.5 * cols["x0"] + rng.normal(0, 0.5, n)
+    cols["y"] = np.round(y).astype(np.float32)
+    return Table.from_numpy(cols, rng.random(n) > 0.05)
+
+
+def _transfer_clean(fn: Callable) -> AuditResult:
+    """Run ``fn()`` under the strictest transfer guard; any implicit
+    host<->device transfer on the path surfaces as the guard's error."""
+    import jax
+
+    try:
+        with jax.transfer_guard("disallow"):
+            fn()
+    except Exception as e:                      # guard violations raise
+        return AuditResult("", "", False, f"implicit transfer: {e}")
+    return AuditResult("", "", True, "")
+
+
+def _audit_ingest(name: str, eng, results: List[AuditResult]) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.trace import count_dispatches
+
+    # -- static donation: the compiled executable aliases every state leaf
+    batch = eng._bucket_pad(_batch(seed=7))
+    cols = {c: batch.columns[c] for c in eng._row_cols}
+    state = eng._pack_view_state()
+    counter = jnp.asarray(eng._ingest_count + 1, dtype=jnp.int32)
+    n_batches = jnp.asarray(
+        0 if eng.stream is None else eng.stream.n_batches,
+        dtype=jnp.int32)
+    prog = eng._fused_program(False)
+    hlo = prog.lower(cols, batch.valid, state, counter,
+                     n_batches).compile().as_text()
+    header = hlo.split("\n", 1)[0]
+    aliased = {int(m) for m in _ALIAS_PARAM_RE.findall(header)}
+    n_prefix = len(jax.tree.leaves((cols, batch.valid)))
+    n_leaves = len(jax.tree.leaves(state))
+    expected = set(range(n_prefix, n_prefix + n_leaves))
+    results.append(AuditResult(
+        name, "ingest-donation-static", aliased == expected,
+        f"all {n_leaves} donated state leaves aliased in the compiled "
+        "executable" if aliased == expected else
+        f"executable aliases params {sorted(aliased)}, expected the "
+        f"{n_leaves} state leaves (params {n_prefix}.."
+        f"{n_prefix + n_leaves - 1})"))
+
+    # -- runtime: 1 dispatch, transfer-clean, donated buffers deleted
+    leaves_before = jax.tree.leaves(eng._pack_view_state())
+    steady = _batch(seed=8)
+    with count_dispatches() as n:
+        guard = _transfer_clean(lambda: eng.ingest(steady))
+    results.append(AuditResult(
+        name, "ingest-1-dispatch", n() == 1,
+        f"steady-state ingest issued {n()} dispatch(es), contract is 1"))
+    results.append(AuditResult(
+        name, "ingest-transfer-clean", guard.ok,
+        "steady-state ingest is transfer-clean under "
+        "jax.transfer_guard('disallow')" if guard.ok else guard.detail))
+    dead = [leaf.is_deleted() for leaf in leaves_before]
+    results.append(AuditResult(
+        name, "ingest-donation-runtime", bool(dead) and all(dead),
+        f"{sum(dead)}/{len(dead)} pre-ingest state buffers deleted by "
+        "donation"))
+
+
+def _audit_query(name: str, eng, results: List[AuditResult]) -> None:
+    from repro.launch.trace import count_dispatches
+
+    sub = {"x1": [0, 1]}
+    eng._cache.clear()
+    box = {}
+    with count_dispatches(label="query") as n:
+        guard = _transfer_clean(
+            lambda: box.update(est=eng.ate("ta", subpopulation=sub)))
+    results.append(AuditResult(
+        name, "query-1-dispatch", n() == 1,
+        f"uncached ate() issued {n()} query dispatch(es), contract is 1"))
+    results.append(AuditResult(
+        name, "query-transfer-clean", guard.ok,
+        "uncached ate() is transfer-clean under "
+        "jax.transfer_guard('disallow')" if guard.ok else guard.detail))
+    with count_dispatches() as n:
+        est2 = eng.ate("ta", subpopulation=sub)
+    ok = n() == 0 and guard.ok and est2.ate == box["est"].ate
+    results.append(AuditResult(
+        name, "query-cached-0-dispatch", ok,
+        f"cached ate() issued {n()} dispatch(es), contract is 0"))
+
+
+def _audit_batch_query(name: str, eng, results: List[AuditResult]) -> None:
+    from repro.launch.trace import count_dispatches
+
+    specs = [("ta", None), ("tb", None), ("ta", (("x1", (0, 1)),))]
+    eng._cache.clear()
+    with count_dispatches() as n:
+        eng.ate_batch(specs)
+    results.append(AuditResult(
+        name, "batch-query-1-dispatch", n() == 1,
+        f"ate_batch of {len(specs)} heterogeneous specs issued {n()} "
+        "dispatch(es), contract is 1"))
+
+
+def _audit_evict(name: str, eng, results: List[AuditResult]) -> None:
+    import jax
+
+    leaves_before = jax.tree.leaves(eng._pack_view_state())
+    eng.evict(ttl=10_000)   # nothing old enough: pure compaction pass
+    dead = [leaf.is_deleted() for leaf in leaves_before]
+    results.append(AuditResult(
+        name, "evict-donation-runtime", bool(dead) and all(dead),
+        f"{sum(dead)}/{len(dead)} pre-evict state buffers deleted by "
+        "donation"))
+
+
+def audit_engine(name: str, make_engine: Callable) -> List[AuditResult]:
+    """Run every compiled-program audit against one engine layout."""
+    results: List[AuditResult] = []
+    eng = make_engine()
+    for seed in range(3):           # warm: traces + capacity settle
+        eng.ingest(_batch(seed=seed))
+    _audit_ingest(name, eng, results)
+    _audit_query(name, eng, results)
+    _audit_batch_query(name, eng, results)
+    _audit_evict(name, eng, results)
+    return results
+
+
+def run_audit() -> List[AuditResult]:
+    """The full audit matrix: both engine layouts."""
+    results: List[AuditResult] = []
+    for name, make in _tiny_engines().items():
+        results.extend(audit_engine(name, make))
+    return results

@@ -1,0 +1,206 @@
+"""AST-level contract lint: framework + rule driver.
+
+Every rule inspects one module at a time through a :class:`ModuleContext`
+(parsed tree, source lines, engine-owned flag, per-line suppressions) and
+yields :class:`Finding` records. Rules live in ``repro.analysis.rules``
+(one module per rule ID) and register themselves via ``RULES``.
+
+Scoping: a module is ENGINE-OWNED — subject to the dispatch-accounting
+and donation rules — when it declares ``__engine_owned__ = True`` at
+module level, or (absent a declaration) when it lives under one of
+``DEFAULT_ENGINE_DIRS`` relative to the package root. Declaring
+``__engine_owned__ = False`` opts a host-side module out explicitly.
+
+Suppressions: a finding on a line carrying ``# zql: ok[ZQL00X] reason``
+is intentional and dropped (the reason is mandatory by convention — see
+docs/architecture.md, Enforced contracts). ``# zql: ok[*]`` suppresses
+every rule on that line. Findings can also be grandfathered through a
+baseline file (JSON list of fingerprints): baselined findings don't fail
+the CLI but are reported as such.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+#: directories (relative to the ``repro`` package root) whose modules are
+#: engine-owned unless they declare ``__engine_owned__ = False``.
+DEFAULT_ENGINE_DIRS = ("core", "kernels", "data")
+
+_SUPPRESS_RE = re.compile(r"#\s*zql:\s*ok\[([A-Z0-9*,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    path: str          # path as given to the linter (repo-relative in CI)
+    line: int
+    col: int
+    rule: str          # "ZQL001" .. "ZQL006"
+    message: str
+    snippet: str = ""  # stripped source line, for the baseline fingerprint
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def fingerprint(self) -> str:
+        """Stable identity for baselining: file + rule + line CONTENT
+        (not line number, so unrelated edits above don't churn the
+        baseline)."""
+        key = f"{self.path}::{self.rule}::{self.snippet.strip()}"
+        return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+
+class ModuleContext:
+    """Everything a rule needs about one module."""
+
+    def __init__(self, path: Path, display_path: str, source: str,
+                 package_root: Optional[Path] = None):
+        self.path = path
+        self.display_path = display_path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        self.suppressed: Dict[int, Set[str]] = self._parse_suppressions()
+        self.engine_owned = self._engine_owned(package_root)
+
+    # ------------------------------------------------------------ scoping
+    def _declared_engine_owned(self) -> Optional[bool]:
+        for node in self.tree.body:
+            if (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == "__engine_owned__"
+                    and isinstance(node.value, ast.Constant)
+                    and isinstance(node.value.value, bool)):
+                return node.value.value
+        return None
+
+    def _engine_owned(self, package_root: Optional[Path]) -> bool:
+        declared = self._declared_engine_owned()
+        if declared is not None:
+            return declared
+        if package_root is None:
+            return False
+        try:
+            rel = self.path.resolve().relative_to(package_root.resolve())
+        except ValueError:
+            return False
+        return bool(rel.parts) and rel.parts[0] in DEFAULT_ENGINE_DIRS
+
+    # ------------------------------------------------------- suppressions
+    def _parse_suppressions(self) -> Dict[int, Set[str]]:
+        out: Dict[int, Set[str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                out[i] = rules
+        return out
+
+    def is_suppressed(self, line: int, rule: str) -> bool:
+        rules = self.suppressed.get(line, set())
+        return rule in rules or "*" in rules
+
+    # ---------------------------------------------------------- utilities
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def finding(self, node: ast.AST, rule: str, message: str) -> Finding:
+        return Finding(path=self.display_path, line=node.lineno,
+                       col=node.col_offset + 1, rule=rule, message=message,
+                       snippet=self.line_text(node.lineno))
+
+
+def _all_rules():
+    from repro.analysis.rules import RULES
+    return RULES
+
+
+def _iter_py_files(paths: Sequence[Path]) -> Iterable[Path]:
+    for p in paths:
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def _find_package_root(path: Path) -> Optional[Path]:
+    """The ``repro`` package directory containing ``path``, if any —
+    anchors the DEFAULT_ENGINE_DIRS path scoping."""
+    cur = path.resolve()
+    for parent in cur.parents:
+        # namespace package: no top-level __init__.py, anchor on the name
+        if parent.name == "repro" and parent.is_dir():
+            return parent
+    return None
+
+
+def run_lint(paths: Sequence, select: Optional[Sequence[str]] = None,
+             ignore: Optional[Sequence[str]] = None,
+             root: Optional[Path] = None) -> List[Finding]:
+    """Run every (selected) rule over every ``.py`` file under ``paths``.
+
+    ``select``/``ignore`` filter by rule ID; ``root`` (default: the
+    current directory) makes reported paths repo-relative and stable for
+    fingerprints.
+    """
+    root = Path(root) if root is not None else Path.cwd()
+    rules = _all_rules()
+    if select:
+        rules = [r for r in rules if r.id in set(select)]
+    if ignore:
+        rules = [r for r in rules if r.id not in set(ignore)]
+    findings: List[Finding] = []
+    for f in _iter_py_files([Path(p) for p in paths]):
+        try:
+            display = str(f.resolve().relative_to(root.resolve()))
+        except ValueError:
+            display = str(f)
+        try:
+            source = f.read_text()
+            ctx = ModuleContext(f, display, source,
+                                package_root=_find_package_root(f))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            findings.append(Finding(path=display, line=1, col=1,
+                                    rule="ZQL000",
+                                    message=f"unparseable module: {e}"))
+            continue
+        for rule in rules:
+            for finding in rule.check(ctx):
+                if not ctx.is_suppressed(finding.line, finding.rule):
+                    findings.append(finding)
+    findings.sort(key=lambda x: (x.path, x.line, x.col, x.rule))
+    return findings
+
+
+# ------------------------------------------------------------- baselines
+def load_baseline(path) -> Set[str]:
+    """Grandfathered finding fingerprints (empty set if no file)."""
+    p = Path(path)
+    if not p.exists():
+        return set()
+    data = json.loads(p.read_text())
+    return {entry["fingerprint"] for entry in data}
+
+
+def write_baseline(path, findings: Sequence[Finding]) -> None:
+    data = [dict(path=f.path, rule=f.rule, fingerprint=f.fingerprint(),
+                 snippet=f.snippet.strip())
+            for f in findings]
+    Path(path).write_text(json.dumps(data, indent=2) + "\n")
+
+
+def split_baselined(findings: Sequence[Finding], baseline: Set[str]):
+    """(new, grandfathered) partition of ``findings`` by the baseline."""
+    new = [f for f in findings if f.fingerprint() not in baseline]
+    old = [f for f in findings if f.fingerprint() in baseline]
+    return new, old

@@ -1,0 +1,21 @@
+"""Rule registry: one module per rule ID. Each rule object exposes
+``id``, ``summary`` and ``check(ctx) -> Iterable[Finding]``."""
+from repro.analysis.rules import (
+    zql001_raw_jit,
+    zql002_host_sync,
+    zql003_reductions,
+    zql004_donation,
+    zql005_pallas_alias,
+    zql006_retrace,
+)
+
+RULES = [
+    zql001_raw_jit.RULE,
+    zql002_host_sync.RULE,
+    zql003_reductions.RULE,
+    zql004_donation.RULE,
+    zql005_pallas_alias.RULE,
+    zql006_retrace.RULE,
+]
+
+RULE_IDS = [r.id for r in RULES]

@@ -1,0 +1,111 @@
+"""Shared AST helpers for the ZQL rules: import-aware name resolution and
+hot-path function discovery."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+
+def import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Local name -> canonical dotted path, from the module's imports.
+
+    ``import jax.numpy as jnp`` -> {"jnp": "jax.numpy"};
+    ``from jax import jit`` -> {"jit": "jax.jit"}; relative imports keep
+    the trailing module path (``from ..launch.trace import counted_jit``
+    -> {"counted_jit": "launch.trace.counted_jit"}).
+    """
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+                if a.asname:
+                    out[a.asname] = a.name
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            for a in node.names:
+                out[a.asname or a.name] = f"{mod}.{a.name}" if mod else a.name
+    return out
+
+
+def canonical(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Canonical dotted name of a Name/Attribute chain, resolving the
+    leading segment through the import aliases; None for anything else."""
+    if isinstance(node, ast.Name):
+        return aliases.get(node.id, node.id)
+    if isinstance(node, ast.Attribute):
+        base = canonical(node.value, aliases)
+        if base is None:
+            return None
+        return f"{base}.{node.attr}"
+    return None
+
+
+def call_canonical(node: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    return canonical(node.func, aliases)
+
+
+def matches(canon: Optional[str], *tails: str) -> bool:
+    """True when ``canon`` is exactly a tail or ends with ``.<tail>`` —
+    robust to import style (``jax.jit`` vs ``jit`` vs re-export)."""
+    if canon is None:
+        return False
+    return any(canon == t or canon.endswith("." + t) for t in tails)
+
+
+def decorator_targets(fn: ast.FunctionDef) -> Iterator[ast.AST]:
+    """Each decorator's underlying callable expression:
+    ``@jax.jit`` -> jax.jit; ``@partial(jax.jit, ...)`` -> jax.jit;
+    ``@counted_jit`` -> counted_jit."""
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Call):
+            c = dec.func
+            if isinstance(c, (ast.Name, ast.Attribute)):
+                name = c.attr if isinstance(c, ast.Attribute) else c.id
+                if name == "partial" and dec.args:
+                    yield dec.args[0]
+                    continue
+            yield dec.func
+        else:
+            yield dec
+
+
+HOT_MARKERS = ("hot_path", "counted_jit")
+
+
+def hot_functions(tree: ast.Module, aliases: Dict[str, str]
+                  ) -> List[ast.FunctionDef]:
+    """Functions whose bodies are traced hot-path compute: decorated with
+    ``@hot_path`` or ``@counted_jit`` (directly or through ``partial``),
+    or passed by name to a ``counted_jit(...)`` call in this module."""
+    by_name: Dict[str, ast.FunctionDef] = {}
+    hot: List[ast.FunctionDef] = []
+    seen: Set[int] = set()
+
+    def mark(fn: ast.FunctionDef):
+        if id(fn) not in seen:
+            seen.add(id(fn))
+            hot.append(fn)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            by_name.setdefault(node.name, node)
+            for target in decorator_targets(node):
+                if matches(canonical(target, aliases), *HOT_MARKERS):
+                    mark(node)
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and matches(call_canonical(node, aliases), "counted_jit")):
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name) and arg.id in by_name:
+                    mark(by_name[arg.id])
+    return hot
+
+
+def jit_cached_factory(fn: ast.FunctionDef, aliases: Dict[str, str]) -> bool:
+    """True when ``fn`` is an ``lru_cache``/``cache``-decorated factory —
+    its parameters are cache keys (static configuration by construction),
+    so closures over them are keyed, not retrace hazards."""
+    return any(matches(canonical(t, aliases), "lru_cache", "cache")
+               for t in decorator_targets(fn))

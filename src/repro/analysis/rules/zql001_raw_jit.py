@@ -1,0 +1,48 @@
+"""ZQL001 — raw ``jax.jit``/``pjit`` in engine-owned code.
+
+Contract: every compiled entry point of the engine hot paths goes through
+``repro.launch.trace.counted_jit`` so the single-dispatch claims stay
+measurable (``docs/architecture.md`` — dispatch accounting). A raw
+``jax.jit`` launch is invisible to the counter, so the 1-dispatch tests
+would pass while the engine silently issues more launches.
+
+Any *reference* to ``jax.jit``/``pjit`` in an engine-owned module is
+flagged — call, decorator, ``partial(jax.jit, ...)`` or alias — because
+there is no sanctioned direct use outside ``launch/trace.py`` itself.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.lint import Finding, ModuleContext
+from repro.analysis.rules import _common
+
+_JIT_NAMES = ("jax.jit", "jax.pjit", "jax.experimental.pjit.pjit")
+
+
+class Rule:
+    id = "ZQL001"
+    summary = ("raw jax.jit/pjit in engine-owned code "
+               "(use launch.trace.counted_jit)")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not ctx.engine_owned:
+            return
+        aliases = _common.import_aliases(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.Name, ast.Attribute)):
+                continue
+            if isinstance(node, ast.Name) and not isinstance(node.ctx,
+                                                             ast.Load):
+                continue
+            canon = _common.canonical(node, aliases)
+            if canon in _JIT_NAMES:
+                yield ctx.finding(
+                    node, self.id,
+                    f"raw `{canon}` in engine-owned code — wrap with "
+                    "repro.launch.trace.counted_jit so the launch is "
+                    "dispatch-accounted")
+
+
+RULE = Rule()

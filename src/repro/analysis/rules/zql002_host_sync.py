@@ -1,0 +1,72 @@
+"""ZQL002 — host synchronization inside hot-path (traced) bodies.
+
+Contract: a ``@hot_path``/``counted_jit`` body runs INSIDE a compiled
+program; ``jax.device_get``, ``np.asarray``/``np.array``, numpy scalar
+constructors on traced values, ``.block_until_ready()``, ``.item()``,
+``.tolist()`` and ``float()/int()/bool()`` on non-constants either fail
+under jit or — when the body also runs eagerly — silently serialize the
+stream with a device->host round trip per call
+(``docs/architecture.md`` — ingest/query pipelines: ONE host sync per
+batch/query, placed by the orchestration layer, never by traced bodies).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.lint import Finding, ModuleContext
+from repro.analysis.rules import _common
+
+_SYNC_CALLS = ("jax.device_get", "numpy.asarray", "numpy.array",
+               "numpy.frombuffer")
+_SYNC_SCALAR_CTORS = ("numpy.int32", "numpy.int64", "numpy.float32",
+                      "numpy.float64", "numpy.bool_", "numpy.uint32")
+_SYNC_METHODS = ("block_until_ready", "item", "tolist")
+_PY_CASTS = ("float", "int", "bool")
+
+
+def _non_constant(args) -> bool:
+    return bool(args) and not isinstance(args[0], ast.Constant)
+
+
+class Rule:
+    id = "ZQL002"
+    summary = "host-sync call inside a hot-path (traced) body"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        aliases = _common.import_aliases(ctx.tree)
+        for fn in _common.hot_functions(ctx.tree, aliases):
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                canon = _common.call_canonical(node, aliases)
+                if canon in _SYNC_CALLS or canon == "jax.device_get":
+                    yield ctx.finding(
+                        node, self.id,
+                        f"`{canon}` inside hot-path body `{fn.name}` — "
+                        "host sync on the traced path")
+                elif canon in _SYNC_SCALAR_CTORS and _non_constant(node.args):
+                    yield ctx.finding(
+                        node, self.id,
+                        f"`{canon}(...)` on a non-constant inside hot-path "
+                        f"body `{fn.name}` — numpy scalar construction "
+                        "syncs traced values to host")
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _SYNC_METHODS):
+                    yield ctx.finding(
+                        node, self.id,
+                        f"`.{node.func.attr}()` inside hot-path body "
+                        f"`{fn.name}` — host sync on the traced path")
+                elif (isinstance(node.func, ast.Name)
+                        and node.func.id in _PY_CASTS
+                        and aliases.get(node.func.id, node.func.id)
+                        == node.func.id
+                        and _non_constant(node.args)):
+                    yield ctx.finding(
+                        node, self.id,
+                        f"`{node.func.id}(...)` on a non-constant inside "
+                        f"hot-path body `{fn.name}` — python casts force "
+                        "a device->host sync on traced values")
+
+
+RULE = Rule()

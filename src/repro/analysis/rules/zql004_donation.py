@@ -1,0 +1,154 @@
+"""ZQL004 — donation hazards at ``counted_jit(donate_argnums=...)`` sites.
+
+Contract (``docs/architecture.md`` — donation and aliasing rules): the
+ingest/evict programs donate the state pytree for in-place XLA updates;
+after the call the donated buffers are DEAD. Three statically-checkable
+hazards:
+
+- duplicate indices in ``donate_argnums`` itself;
+- the same buffer (same local name) passed in two donated leaves of one
+  call — XLA rejects duplicate-donated buffers at runtime;
+- a donated local reused after the donating call (reads a deleted
+  buffer — ``RuntimeError`` at runtime, but only on the executed path).
+
+The engine's own donating call sites pass freshly packed state
+(``self._pack_view_state()``), never a held local, so a clean tree has
+no findings; the rule guards new call sites.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.lint import Finding, ModuleContext
+from repro.analysis.rules import _common
+
+#: factory name (last dotted segment) -> donated positional indices of the
+#: program it returns. Mirrors repro.core.fused's counted_jit wrappers.
+DONATING_FACTORIES = {
+    "get_fused_ingest": (2,),
+    "get_fused_ingest_parts": (2,),
+    "get_fused_evict": (0,),
+}
+
+
+def _const_argnums(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for e in v.elts:
+                    if not (isinstance(e, ast.Constant)
+                            and isinstance(e.value, int)):
+                        return None
+                    out.append(e.value)
+                return tuple(out)
+    return None
+
+
+def _name_leaves(node: ast.AST) -> List[str]:
+    """Plain-Name leaves of a literal dict/tuple/list argument."""
+    out = []
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+            out.append(sub.id)
+    return out
+
+
+class Rule:
+    id = "ZQL004"
+    summary = "donated-then-reused buffer / duplicate-donated arguments"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not ctx.engine_owned:
+            return
+        aliases = _common.import_aliases(ctx.tree)
+
+        # (a) malformed donate_argnums anywhere
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                nums = _const_argnums(node)
+                if nums is not None and len(set(nums)) != len(nums):
+                    yield ctx.finding(
+                        node, self.id,
+                        f"duplicate indices in donate_argnums={nums} — "
+                        "the same argument cannot be donated twice")
+
+        # (b) per-function: donated locals reused / duplicated
+        for fn in ast.walk(ctx.tree):
+            if isinstance(fn, ast.FunctionDef):
+                yield from self._check_function(ctx, fn, aliases)
+
+    def _check_function(self, ctx: ModuleContext, fn: ast.FunctionDef,
+                        aliases) -> Iterator[Finding]:
+        donating: Dict[str, Tuple[int, ...]] = {}
+        # pass 1: locals bound to donating programs
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            call = node.value
+            canon = _common.call_canonical(call, aliases) or ""
+            tail = canon.split(".")[-1]
+            nums = _const_argnums(call)
+            if _common.matches(canon, "counted_jit", "jit") and nums:
+                donating[node.targets[0].id] = nums
+            elif tail in DONATING_FACTORIES:
+                donating[node.targets[0].id] = DONATING_FACTORIES[tail]
+        if not donating:
+            return
+
+        # pass 2: calls of donating programs
+        names = [n for n in ast.walk(fn) if isinstance(n, ast.Name)]
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in donating):
+                continue
+            nums = donating[node.func.id]
+            donated_args = [(i, node.args[i]) for i in nums
+                            if i < len(node.args)]
+            # duplicate-donated: same name in two donated positions
+            plain = [a.id for _, a in donated_args if isinstance(a, ast.Name)]
+            dupes = {n for n in plain if plain.count(n) > 1}
+            for d in sorted(dupes):
+                yield ctx.finding(
+                    node, self.id,
+                    f"`{d}` passed in two donated positions of "
+                    f"`{node.func.id}` — XLA rejects duplicate-donated "
+                    "buffers")
+            # duplicate leaves inside one donated literal argument
+            for _, a in donated_args:
+                if isinstance(a, (ast.Dict, ast.Tuple, ast.List)):
+                    leaves = _name_leaves(a)
+                    for d in sorted({n for n in leaves
+                                     if leaves.count(n) > 1}):
+                        yield ctx.finding(
+                            a, self.id,
+                            f"buffer `{d}` appears in multiple leaves of a "
+                            f"donated argument of `{node.func.id}` — "
+                            "duplicate-donated buffer")
+            # donated-then-reused: a plain donated Name loaded after the call
+            for name in plain:
+                stores_after = [n.lineno for n in names
+                                if isinstance(n.ctx, ast.Store)
+                                and n.id == name and n.lineno > node.lineno]
+                next_store = min(stores_after, default=None)
+                for n in names:
+                    if (isinstance(n.ctx, ast.Load) and n.id == name
+                            and n.lineno > node.lineno
+                            and (next_store is None
+                                 or n.lineno <= next_store)):
+                        yield ctx.finding(
+                            n, self.id,
+                            f"`{name}` used after being donated to "
+                            f"`{node.func.id}` at line {node.lineno} — "
+                            "the buffer is deleted by donation")
+                        break
+
+
+RULE = Rule()

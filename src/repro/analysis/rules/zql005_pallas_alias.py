@@ -1,0 +1,89 @@
+"""ZQL005 — Pallas read-modify-write kernels without ``input_output_aliases``.
+
+Contract (``docs/architecture.md`` — donation and aliasing rules): a
+Pallas kernel whose output is an updated version of an input table (it
+initializes the output ref FROM an input ref, then accumulates into it)
+is a state-mutating kernel; without ``input_output_aliases`` XLA
+materializes a second table-sized buffer per call — on the ingest hot
+path that doubles the state traffic the in-place story exists to avoid.
+
+Detection: for each ``pl.pallas_call(kernel, ...)`` the kernel's body is
+inspected (module-level def). Output refs are recognized by the repo's
+naming idiom (``out*`` parameters). The kernel mutates state when some
+``out*[...] = ...`` assignment reads another parameter AND an
+``out*[...] += ...`` accumulation exists; such a call must carry
+``input_output_aliases``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator
+
+from repro.analysis.lint import Finding, ModuleContext
+from repro.analysis.rules import _common
+
+
+def _is_out_param(name: str) -> bool:
+    return name.startswith("out") or name.startswith("o_")
+
+
+def _kernel_mutates_state(kernel: ast.FunctionDef) -> bool:
+    params = [a.arg for a in kernel.args.args]
+    outs = {p for p in params if _is_out_param(p)}
+    ins = {p for p in params if p not in outs}
+    if not outs or not ins:
+        return False
+    init_from_input = False
+    accumulates = False
+    for node in ast.walk(kernel):
+        target = None
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            target = node.targets[0]
+        elif isinstance(node, ast.AugAssign):
+            target = node.target
+        if not (isinstance(target, ast.Subscript)
+                and isinstance(target.value, ast.Name)
+                and target.value.id in outs):
+            continue
+        if isinstance(node, ast.AugAssign):
+            accumulates = True
+        else:
+            reads = {n.id for n in ast.walk(node.value)
+                     if isinstance(n, ast.Name)}
+            if reads & ins:
+                init_from_input = True
+    return init_from_input and accumulates
+
+
+class Rule:
+    id = "ZQL005"
+    summary = ("Pallas kernel mutates state without input_output_aliases")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not ctx.engine_owned:
+            return
+        aliases = _common.import_aliases(ctx.tree)
+        kernels: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in ast.walk(ctx.tree)
+            if isinstance(n, ast.FunctionDef)}
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if not _common.matches(_common.call_canonical(node, aliases),
+                                   "pallas_call"):
+                continue
+            if any(kw.arg == "input_output_aliases" for kw in node.keywords):
+                continue
+            kernel = None
+            if node.args and isinstance(node.args[0], ast.Name):
+                kernel = kernels.get(node.args[0].id)
+            if kernel is not None and _kernel_mutates_state(kernel):
+                yield ctx.finding(
+                    node, self.id,
+                    f"pallas_call of `{kernel.name}` initializes its "
+                    "output from an input table and accumulates into it "
+                    "(read-modify-write) but has no input_output_aliases "
+                    "— XLA materializes a second table buffer per call")
+
+
+RULE = Rule()

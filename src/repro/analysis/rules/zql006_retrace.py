@@ -1,0 +1,132 @@
+"""ZQL006 — retrace hazards: shape-derived Python scalars captured in
+traced closures.
+
+Contract (``docs/architecture.md`` — pipeline flags / bucketing): every
+size that reaches a compiled program must be BUCKETED (pow2 spec
+buckets, ``BATCH_BUCKET_GRANULE`` row buckets, capacity granules) so the
+trace count of an irregular load stays ~log of the max size. A Python
+int derived from an un-bucketed input (``x.shape[...]``, ``len(x)``,
+``table.nrows``) that a traced closure captures becomes part of the
+trace constant — one fresh trace PER DISTINCT SIZE.
+
+Exemptions: ``lru_cache``/``cache``-decorated factories (their
+parameters are cache keys — static configuration by construction, e.g.
+every ``repro.core.fused.get_fused_*``) and ``self``/``mesh`` parameters
+(mesh geometry is static configuration).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Set
+
+from repro.analysis.lint import Finding, ModuleContext
+from repro.analysis.rules import _common
+
+_STATIC_PARAMS = {"self", "cls", "mesh"}
+_SHAPE_ATTRS = {"shape", "nrows", "size", "ndim"}
+
+
+def _taint_sources(expr: ast.AST, data_params: Set[str],
+                   tainted: Set[str]) -> bool:
+    """Does ``expr`` derive from a data param's shape or a tainted name?"""
+    for sub in ast.walk(expr):
+        if (isinstance(sub, ast.Attribute) and sub.attr in _SHAPE_ATTRS
+                and isinstance(sub.value, ast.Name)
+                and sub.value.id in data_params):
+            return True
+        if (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name)
+                and sub.func.id == "len" and sub.args
+                and isinstance(sub.args[0], ast.Name)
+                and sub.args[0].id in data_params):
+            return True
+        if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load) \
+                and sub.id in tainted:
+            return True
+    return False
+
+
+def _bound_names(fn: ast.FunctionDef) -> Set[str]:
+    bound = {a.arg for a in list(fn.args.args) + list(fn.args.kwonlyargs)}
+    if fn.args.vararg:
+        bound.add(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        bound.add(fn.args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            bound.add(node.id)
+        elif isinstance(node, ast.FunctionDef):
+            bound.add(node.name)
+    return bound
+
+
+def _traced_inner_defs(fn: ast.FunctionDef, aliases) -> Iterator[
+        ast.FunctionDef]:
+    """Inner defs of ``fn`` that get jitted within ``fn``'s scope."""
+    inner: Dict[str, ast.FunctionDef] = {
+        n.name: n for n in ast.walk(fn)
+        if isinstance(n, ast.FunctionDef) and n is not fn}
+    for g in inner.values():
+        if any(_common.matches(_common.canonical(t, aliases),
+                               "counted_jit", "jit", "pjit", "hot_path")
+               for t in _common.decorator_targets(g)):
+            yield g
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and _common.matches(
+                    _common.call_canonical(node, aliases),
+                    "counted_jit", "jit", "pjit")):
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name) and arg.id in inner:
+                    yield inner[arg.id]
+
+
+class Rule:
+    id = "ZQL006"
+    summary = ("retrace hazard: un-bucketed shape captured in a traced "
+               "closure")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not ctx.engine_owned:
+            return
+        aliases = _common.import_aliases(ctx.tree)
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            if _common.jit_cached_factory(fn, aliases):
+                continue
+            data_params = {a.arg for a in list(fn.args.args)
+                           + list(fn.args.kwonlyargs)} - _STATIC_PARAMS
+            if not data_params:
+                continue
+            tainted: Set[str] = set()
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and _taint_sources(node.value, data_params,
+                                           tainted)):
+                    tainted.add(node.targets[0].id)
+            if not tainted:
+                continue
+            seen = set()
+            for g in _traced_inner_defs(fn, aliases):
+                if id(g) in seen:
+                    continue
+                seen.add(id(g))
+                bound = _bound_names(g)
+                captured = sorted(
+                    {n.id for n in ast.walk(g)
+                     if isinstance(n, ast.Name)
+                     and isinstance(n.ctx, ast.Load)
+                     and n.id in tainted and n.id not in bound})
+                for name in captured:
+                    yield ctx.finding(
+                        g, self.id,
+                        f"traced body `{g.name}` captures `{name}`, a "
+                        f"Python scalar derived from an un-bucketed "
+                        f"input of `{fn.name}` — one retrace per "
+                        "distinct size; bucket the input or pass the "
+                        "value as a traced argument")
+
+
+RULE = Rule()

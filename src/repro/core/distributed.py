@@ -35,9 +35,15 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import groupby
 from repro.core.matching import BIG, _topk_merge
+from repro.launch.trace import hot_path
+
+#: contract-lint scoping (tools/contract_check.py): this module is
+#: engine-owned — dispatch/donation rules ZQL001-ZQL006 apply.
+__engine_owned__ = True
 
 
 # ===================== combine-broadcast group-by ===========================
+@hot_path
 def _local_stat_table(hi, lo, stats: Dict[str, jnp.ndarray], capacity: int,
                       single_word: bool = False):
     g = groupby.group_by_key(hi, lo, single_word=single_word)
@@ -47,6 +53,7 @@ def _local_stat_table(hi, lo, stats: Dict[str, jnp.ndarray], capacity: int,
             g.n_groups > capacity)
 
 
+@hot_path
 def _combine_gathered(ghi, glo, gstats: Dict[str, jnp.ndarray],
                       capacity: int, single_word: bool = False):
     """ghi/glo: (n_dev * capacity,) gathered keys (with invalid padding);
@@ -119,10 +126,12 @@ def make_distributed_cem(mesh, capacity: int = 8192,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=(P(), P(), P(), P(), P(), P(), P(axis), P()),
         check_rep=False)
-    return jax.jit(fn)
+    from repro.launch.trace import counted_jit
+    return counted_jit(fn)
 
 
 # ===================== sharded online delta build ===========================
+@hot_path
 def _sharded_delta_body(columns, valid, *, codec, specs, treatments,
                         outcome, capacity, axis):
     """Per-device shard body of the sharded (replicated-views) delta build:
@@ -191,6 +200,7 @@ def make_sharded_delta_build(mesh, specs: Mapping, treatments: Sequence[str],
 
 
 # ===================== routed (partitioned) delta build =====================
+@hot_path
 def _routed_delta_body(columns, valid, *, codec, specs, treatments, outcome,
                        capacity, view_items, n_parts, n_dev, axis):
     """Per-device shard body of the routed delta build, generalized to
@@ -322,6 +332,7 @@ def make_routed_delta_build(mesh, specs: Mapping, treatments: Sequence[str],
 
 
 # ===================== routed row lookup (partitioned views) ================
+@hot_path
 def _routed_lookup_body(columns, valid, t_hi, t_lo, keep, *, codec, specs,
                         n_parts, n_dev, axis):
     """Per-device shard body of the ROUTED row lookup: the device-resident
@@ -439,7 +450,8 @@ def make_ring_knn(mesh, k: int, axis: str = "data"):
                    in_specs=(P(axis), P(axis), P(axis)),
                    out_specs=(P(axis), P(axis)),
                    check_rep=False)
-    return jax.jit(fn)
+    from repro.launch.trace import counted_jit
+    return counted_jit(fn)
 
 
 # ===================== distributed propensity (Newton) ======================
@@ -471,4 +483,5 @@ def make_distributed_newton(mesh, n_iter: int = 32, ridge: float = 1e-4,
                    in_specs=(P(axis), P(axis), P(axis)),
                    out_specs=P(),
                    check_rep=False)
-    return jax.jit(fn)
+    from repro.launch.trace import counted_jit
+    return counted_jit(fn)

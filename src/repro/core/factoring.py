@@ -63,8 +63,7 @@ def partition_treatments(names: Sequence[str], M: np.ndarray,
     groups: List[List[str]] = [[n] for n in names]
 
     def shared(g1, g2):
-        inter = set.intersection(*(covsets[n] for n in g1 + g2))
-        return inter
+        return set.intersection(*(covsets[n] for n in g1 + g2))
 
     def gain(g1, g2):
         return sum(abs(M[idx[a], idx[b]]) for a in g1 for b in g2)

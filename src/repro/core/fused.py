@@ -68,7 +68,11 @@ from repro.core.cem import overlap_keep, update_overlap
 from repro.core.keys import INVALID_HI, INVALID_LO
 from repro.core.propensity import _stream_retract, _stream_update
 from repro.kernels.segment_stats import chunked_sum
-from repro.launch.trace import counted_jit
+from repro.launch.trace import counted_jit, hot_path
+
+#: contract-lint scoping (tools/contract_check.py): this module is
+#: engine-owned — dispatch/donation rules ZQL001-ZQL006 apply.
+__engine_owned__ = True
 
 BASE_VIEW = "__base__"
 
@@ -90,6 +94,7 @@ TOUCH_CLAMP_AGE = 1 << 30
 
 
 # ------------------------------------------------------------ touch stamps
+@hot_path
 def stamp_touch(touch: jnp.ndarray, pos: jnp.ndarray, dvalid: jnp.ndarray,
                 counter) -> jnp.ndarray:
     """Record the current ingest counter at the touched group slots.
@@ -99,6 +104,7 @@ def stamp_touch(touch: jnp.ndarray, pos: jnp.ndarray, dvalid: jnp.ndarray,
     return touch.at[upd].set(jnp.int32(counter), mode="drop")
 
 
+@hot_path
 def remap_touch(old_hi, old_lo, old_gv, new_hi, new_lo,
                 touch: jnp.ndarray) -> jnp.ndarray:
     """Carry last-touch stamps across a layout-changing (re-sort) merge."""
@@ -109,6 +115,7 @@ def remap_touch(old_hi, old_lo, old_gv, new_hi, new_lo,
 
 
 # ----------------------------------------------------------- merge kernels
+@hot_path
 def _merge_one_view(tname, st, d_hi, d_lo, d_stats, d_gv, counter,
                     use_pallas: bool):
     """One view's merge as a device-side branch: scatter fast path when
@@ -165,6 +172,7 @@ def _merge_one_view(tname, st, d_hi, d_lo, d_stats, d_gv, counter,
                         pos=pos_out, merged_stats=stats)
 
 
+@hot_path
 def _merge_one_view_parts(tname, st, d_hi, d_lo, d_stats, d_gv, counter,
                           use_pallas: bool, axis=None):
     """Partitioned analogue of :func:`_merge_one_view`: state is (P, C)
@@ -234,6 +242,7 @@ def _merge_one_view_parts(tname, st, d_hi, d_lo, d_stats, d_gv, counter,
                         pos=pos_out, merged_stats=stats)
 
 
+@hot_path
 def _neg_min(stats: Dict[str, jnp.ndarray], tnames, axis=None):
     """Minimum over every count column — the retraction-negativity probe."""
     cols = [stats["one"]] + [stats[f"t_{t}"] for t in tnames]
@@ -241,6 +250,7 @@ def _neg_min(stats: Dict[str, jnp.ndarray], tnames, axis=None):
     return m if axis is None else jax.lax.pmin(m, axis)
 
 
+@hot_path
 def _gate(commit, new_tree, old_tree):
     """Select committed-vs-pass-through state leaf-wise. XLA still aliases
     the donated input buffers; the untaken value only costs the select."""
@@ -248,6 +258,7 @@ def _gate(commit, new_tree, old_tree):
                         new_tree, old_tree)
 
 
+@hot_path
 def _stream_step(stream, stream_names, columns, valid, retract, seed,
                  n_batches):
     """Streaming-propensity update (moments + reservoir) inside the fused
@@ -517,6 +528,7 @@ def get_fused_ingest_parts(codec, specs_items, tnames: Tuple[str, ...],
 
 
 # ===================== device-resident query pipeline =======================
+@hot_path
 def _query_mask(hi, lo, gv, keep, codec, subpop):
     """Subpopulation filter + overlap keep as ONE elementwise mask — the
     per-partition (per-device-local, 1/N) stage of a query. ``subpop`` is
@@ -537,6 +549,7 @@ def _query_mask(hi, lo, gv, keep, codec, subpop):
 QUERY_ROLES = ("one", "y", "yy", "t", "yt", "yyt")
 
 
+@hot_path
 def _estimate_from_roles(hi, lo, stats, m):
     """Canonical estimate over the masked groups: re-sort the surviving
     keys into the canonical (globally key-sorted, valid-prefix) order —
@@ -572,6 +585,7 @@ def _estimate_from_roles(hi, lo, stats, m):
                 n_groups=est.n_groups, variance=est.variance)
 
 
+@hot_path
 def _estimate_from_masked(hi, lo, stats, m, treatment):
     """Treatment-named front of :func:`_estimate_from_roles`: map the
     view's stat columns onto the estimator roles and estimate."""
@@ -580,6 +594,7 @@ def _estimate_from_masked(hi, lo, stats, m, treatment):
     return _estimate_from_roles(hi, lo, roles, m)
 
 
+@hot_path
 def estimate_view_body(hi, lo, stats, gv, keep, *, codec, treatment,
                        subpop):
     """Whole causal query as pure traced compute: mask then canonical
@@ -716,6 +731,7 @@ def encode_query_spec(cards: Tuple[Tuple[str, int], ...], view_id: int,
     return row
 
 
+@hot_path
 def _words_mask(hi, lo, base_m, codec, words, cards, offsets):
     """Data-driven :func:`_query_mask`: evaluate one encoded predicate
     (the ``(W,)`` uint32 bitmask slice of a spec row) over one view's
@@ -726,7 +742,7 @@ def _words_mask(hi, lo, base_m, codec, words, cards, offsets):
     that a spec only restricts dims its view materializes."""
     m = base_m
     names = set(codec.names)
-    for dim, card in cards:
+    for dim, _card in cards:
         if dim not in names:
             continue
         vals = codec.extract(hi, lo, dim)          # int32, < card for valid
@@ -736,6 +752,7 @@ def _words_mask(hi, lo, base_m, codec, words, cards, offsets):
     return m
 
 
+@hot_path
 def _batched_query_body(view_schema, cards, offsets, view_states,
                         spec_rows):
     """B heterogeneous query specs over V materialized views as pure
@@ -747,7 +764,8 @@ def _batched_query_body(view_schema, cards, offsets, view_states,
     invisible — see ``chunked_sum``). Estimates run once per SPEC (not
     per spec x view): masks are evaluated per view (each view's codec is
     static), then each spec gathers its own view's mask row."""
-    sizes = [int(np.prod(st[0].shape)) for st in view_states]
+    sizes = [int(np.prod(st[0].shape))  # zql: ok[ZQL002] static shapes
+             for st in view_states]
     length = max(sizes)
 
     def padded(x, fill):
@@ -894,6 +912,7 @@ def get_fused_rowlookup(codec, specs_items: Tuple, n_parts: int, mesh,
 
 
 # ===================== device-resident eviction compaction ==================
+@hot_path
 def _compact_one(hi, lo, stats, gv, touch, keep_mask):
     """Capacity-preserving device compaction of one sorted stat table:
     dropped groups take the invalid-key marker, a stable re-sort pushes
@@ -972,4 +991,8 @@ def get_fused_evict(tnames: Tuple[str, ...], caps: Tuple, n_parts: int,
     else:
         program = body
 
-    return counted_jit(program, donate_argnums=(0,))
+    # keep_unused: the overlap keep mask is RECOMPUTED (not read) by the
+    # body; without it jit would prune the donated input params and their
+    # buffers could never alias the fresh keep outputs (donation must be
+    # total — the jaxpr audit asserts every state leaf is consumed)
+    return counted_jit(program, donate_argnums=(0,), keep_unused=True)

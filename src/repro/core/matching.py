@@ -24,6 +24,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.launch.trace import counted_jit
+
 BIG = jnp.float32(3.4e38)
 
 
@@ -50,7 +52,7 @@ def _topk_merge(run_d, run_i, new_d, new_i, k):
     return -vals, jnp.take_along_axis(i, pos, axis=1)
 
 
-@partial(jax.jit, static_argnames=("k", "block"))
+@partial(counted_jit, static_argnames=("k", "block"))
 def knn_quadratic(U_treated: jnp.ndarray, U_control: jnp.ndarray,
                   control_valid: jnp.ndarray, k: int, caliper: float,
                   block: int = 1024) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -92,7 +94,7 @@ def knn_quadratic(U_treated: jnp.ndarray, U_control: jnp.ndarray,
     return run_d, run_i
 
 
-@partial(jax.jit, static_argnames=("k", "window"))
+@partial(counted_jit, static_argnames=("k", "window"))
 def knn_sorted_1d(x_treated: jnp.ndarray, x_control: jnp.ndarray,
                   control_valid: jnp.ndarray, k: int, caliper: float,
                   window: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -153,7 +155,7 @@ def nnmwr_att(y: jnp.ndarray, result: MatchResult) -> jnp.ndarray:
     return jnp.sum(diff) / jnp.maximum(jnp.sum(has.astype(jnp.float32)), 1e-9)
 
 
-@partial(jax.jit, static_argnames=("n_rows", "k"))
+@partial(counted_jit, static_argnames=("n_rows", "k"))
 def greedy_nnmnr(cand_dist: jnp.ndarray, cand_idx: jnp.ndarray,
                  treated_rows: jnp.ndarray, n_rows: int, k: int
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -101,6 +101,10 @@ from repro.core.propensity import (LogisticModel, StreamStats, design_matrix,
 from repro.data.columnar import GrowableTable, Table, _round_capacity
 from repro.launch.trace import counted_jit, record_batch
 
+#: contract-lint scoping (tools/contract_check.py): this module is
+#: engine-owned — dispatch/donation rules ZQL001-ZQL006 apply.
+__engine_owned__ = True
+
 BASE_VIEW = fused_mod.BASE_VIEW
 
 # The query reductions run at a fixed canonical chunk width
@@ -732,11 +736,15 @@ class OnlineEngine:
         orig = batch if orig is None else orig
         cols = {c: batch.columns[c] for c in self._row_cols}
         valid = batch.valid
-        counter = np.int32(self._ingest_count + 1)
+        # explicit device_put of the host scalars: the steady-state ingest
+        # must stay clean under jax.transfer_guard("disallow"), and the
+        # guard treats jnp.asarray/implicit jit-arg transfers as implicit
+        counter = jax.device_put(np.int32(self._ingest_count + 1))
         for _ in range(32):
             prog = self._fused_program(retract)
-            n_batches = np.int32(0 if self.stream is None
-                                 else self.stream.n_batches)
+            n_batches = jax.device_put(
+                np.int32(0 if self.stream is None
+                         else self.stream.n_batches))
             new_state, verdicts = prog(cols, valid, self._pack_view_state(),
                                        counter, n_batches)
             self._unpack_view_state(new_state)
@@ -1067,8 +1075,9 @@ class OnlineEngine:
             tuple(sorted(self.treatments)), self._fused_caps(),
             self._evict_n_parts(), mesh, self.mesh_axis,
             self.stream is not None)
-        new_state, counts, live = prog(self._pack_view_state(),
-                                       np.int32(self._ingest_count - ttl))
+        new_state, counts, live = prog(
+            self._pack_view_state(),
+            jax.device_put(np.int32(self._ingest_count - ttl)))
         self._unpack_view_state(new_state)
         fetched = jax.device_get(dict(counts=counts, live=live))
         evicted = {k: int(v) for k, v in fetched["counts"].items()}

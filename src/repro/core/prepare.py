@@ -62,7 +62,7 @@ def prepare(table: Table, treatments: Mapping[str, Sequence[str]],
 
     cuboids: Dict[str, cube_mod.Cuboid] = {}
     treatment_group: Dict[str, str] = {}
-    for gi, group in enumerate(groups):
+    for group in groups:
         gname = "+".join(group)
         shared = sorted(set.intersection(*(covsets[t] for t in group)))
         union = sorted(set.union(*(covsets[t] for t in group))

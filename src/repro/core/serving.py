@@ -43,6 +43,10 @@ import numpy as np
 from repro.core.ate import ATEEstimate
 from repro.core.online import _freeze_subpop
 
+#: contract-lint scoping (tools/contract_check.py): this module is
+#: engine-owned — dispatch/donation rules ZQL001-ZQL006 apply.
+__engine_owned__ = True
+
 
 def pow2_bucket(n: int, floor: int = 1) -> int:
     """Smallest power of two >= max(n, floor) — the shared bucketing rule

@@ -75,7 +75,11 @@ def scatter_merge_pallas(table: jnp.ndarray, pos: jnp.ndarray,
     like the GROUP-BY hot loop this routes the scatter through a one-hot
     (C, B) @ (B, S) matmul per delta block, accumulating into the output
     ref across the sequential grid — duplicate positions sum, matching
-    ``jnp.ndarray.at[].add`` semantics.
+    ``jnp.ndarray.at[].add`` semantics. ``input_output_aliases`` marks the
+    read-modify-write on the table buffer, so on TPU the merge happens IN
+    PLACE instead of materializing a second (C, S) table per call (same
+    aliasing contract as :func:`scatter_merge_parts_pallas`; XLA inserts a
+    copy only when the caller still needs the input table).
     """
     c, s = table.shape
     nb = pos.shape[0] // block
@@ -89,6 +93,7 @@ def scatter_merge_pallas(table: jnp.ndarray, pos: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((c, s), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((c, s), jnp.float32),
+        input_output_aliases={1: 0},   # table (input 1) -> merged output
         interpret=interpret,
     )(pos, table, vals)
 

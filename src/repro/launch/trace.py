@@ -94,6 +94,20 @@ def batched_served(label: str = "query") -> int:
     return _batches().get(label, 0)
 
 
+def hot_path(fn: Callable) -> Callable:
+    """Marker for traced hot-path bodies: ``fn`` runs INSIDE a compiled
+    program (a fused-pipeline body, a shard_map shard body, a Pallas
+    kernel wrapper), so it must stay free of host synchronization —
+    ``jax.device_get``, ``np.asarray``/``np.array``, ``.block_until_ready``,
+    ``float()/int()/bool()`` on traced values would either fail under jit
+    or silently serialize the stream when the body is also callable
+    eagerly. A no-op at runtime; the static contract checker
+    (``repro.analysis``, rule ZQL002) enforces the restriction on every
+    function carrying this marker or wrapped by :func:`counted_jit`."""
+    fn.__hot_path__ = True
+    return fn
+
+
 def counted_jit(fn: Callable = None, label: Optional[str] = None,
                 **jit_kwargs) -> Callable:
     """``jax.jit`` that bumps the dispatch counter once per call.

@@ -51,8 +51,7 @@ def _rank_within_expert(expert_ids: jnp.ndarray, n_tokens_k: int
                            sorted_e[1:] != sorted_e[:-1]])
     run_start = jax.lax.cummax(jnp.where(new, idx, 0))
     rank_sorted = idx - run_start
-    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
-    return rank
+    return jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
 
 
 def moe_forward(params: Dict, x: jnp.ndarray, cfg

@@ -68,7 +68,7 @@ def _streamed(leaf_update, g, mq, vq, p, big):
         return jax.lax.map(lambda a: leaf_update(*a), (g, mq, vq, p))
     for c in (128, 64, 32, 16, 8, 4, 2):
         if d0 % c == 0:
-            def chunked(t):
+            def chunked(t, c=c):
                 return jax.tree.map(
                     lambda a: a.reshape((c, d0 // c) + tuple(a.shape[1:])),
                     t)

@@ -83,7 +83,7 @@ def test_delta_batches_bit_identical_to_offline_cuboid():
     full = Table.from_numpy(cols, valid)
     offline_base = cube.build_cuboid(full, eng.specs, sorted(TREATMENTS), "y")
     assert _stat_map(eng.base) == _stat_map(offline_base)  # bit-identical
-    for t, view in eng.views.items():
+    for view in eng.views.values():
         off = cube.build_cuboid(
             full, {d: SPECS[d] for d in view.dims}, sorted(TREATMENTS), "y")
         assert _stat_map(view.cuboid) == _stat_map(off)

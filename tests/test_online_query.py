@@ -28,6 +28,7 @@ import sys
 import textwrap
 
 import numpy as np
+import jax
 import pytest
 
 from repro.core import CoarsenSpec, OnlineEngine, PartitionedOnlineEngine
@@ -96,13 +97,15 @@ def test_steady_state_ate_is_one_dispatch_and_cached_is_zero(label):
     eng.ingest(Table.from_numpy(cols, valid))
     for t in sorted(TREATMENTS):
         for sub in SUBPOPS:
-            with count_dispatches() as n:
+            # the guard proves the query path's only host<->device moves
+            # are the explicit device_put/device_get it owns
+            with count_dispatches() as n, jax.transfer_guard("disallow"):
                 est = eng.ate(t, subpopulation=sub)
             assert n() == 1, (label, t, sub, n())
             # the estimate was fetched with the query's single device_get:
             # reading it is free (host scalars, no implicit transfer)
             assert isinstance(float(est.ate), float)
-            with count_dispatches() as n:
+            with count_dispatches() as n, jax.transfer_guard("disallow"):
                 est2 = eng.ate(t, subpopulation=sub)
             assert n() == 0, (label, t, sub, "cached query dispatched")
             assert float(est2.ate) == float(est.ate)

@@ -324,7 +324,7 @@ def run_stream(ops, n_parts: int):
                 oracle.apply(cols, valid, retract=True)
             else:
                 # the guard must fire on BOTH engines and leave state alone
-                for label, eng in engines.items():
+                for eng in engines.values():
                     with pytest.raises(ValueError):
                         eng.ingest(batch, retract=True)
                 n_checked_guard += 1

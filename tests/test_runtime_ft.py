@@ -1,5 +1,6 @@
 """Fault tolerance, checkpointing, elasticity, stragglers, optimizers."""
 import os
+import pathlib
 
 import numpy as np
 import jax
@@ -45,10 +46,13 @@ def test_checkpoint_corruption_detected(tmp_path):
     path = save(state, 1, str(tmp_path))
     # flip bytes in the shard
     shard = os.path.join(path, "shard_0.npz")
-    data = bytearray(open(shard, "rb").read())
+    shard_path = pathlib.Path(shard)
+    data = bytearray(shard_path.read_bytes())
     data[len(data) // 2] ^= 0xFF
-    open(shard, "wb").write(bytes(data))
-    with pytest.raises(Exception):
+    shard_path.write_bytes(bytes(data))
+    # the corruption failure mode is format-dependent (zlib/zip/npz
+    # layer), so any raise is the contract here
+    with pytest.raises(Exception):  # noqa: B017
         restore(str(tmp_path), template=state)
 
 

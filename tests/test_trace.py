@@ -1,0 +1,120 @@
+"""Per-label dispatch accounting (``repro.launch.trace``): the counter
+behind every 1-dispatch assertion in the suite gets its own coverage —
+labels, nesting, snapshots, batch amortization accounting, and the
+jit-attribute preservation the engines rely on.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.trace import (batched_served, count_dispatches,
+                                counted_jit, dispatch_count,
+                                dispatch_counts, hot_path, record_batch,
+                                record_dispatch)
+
+
+def test_counted_jit_counts_each_call():
+    f = counted_jit(lambda x: x + 1)
+    with count_dispatches() as n:
+        f(jnp.ones((4,)))
+        f(jnp.ones((4,)))
+    assert n() == 2
+
+
+def test_counted_jit_label_attribution():
+    f = counted_jit(lambda x: x * 2, label="alpha")
+    g = counted_jit(lambda x: x * 3, label="beta")
+    h = counted_jit(lambda x: x * 5)          # unlabeled
+    x = jnp.ones((3,))
+    before = dispatch_counts()
+    with count_dispatches() as total, \
+            count_dispatches(label="alpha") as na, \
+            count_dispatches(label="beta") as nb:
+        f(x)
+        f(x)
+        g(x)
+        h(x)
+    assert total() == 4
+    assert na() == 2 and nb() == 1
+    after = dispatch_counts()
+    assert after.get("alpha", 0) - before.get("alpha", 0) == 2
+    assert after.get("beta", 0) - before.get("beta", 0) == 1
+
+
+def test_nested_and_overlapping_label_windows():
+    f = counted_jit(lambda x: x + 1, label="outer")
+    g = counted_jit(lambda x: x + 2, label="inner")
+    x = jnp.zeros((2,))
+    with count_dispatches() as total:
+        f(x)
+        with count_dispatches(label="inner") as ni:
+            g(x)
+            with count_dispatches(label="outer") as no:
+                f(x)
+            assert no() == 1          # only the f() inside its window
+            g(x)
+        assert ni() == 2              # both g() calls, not the f()s
+    assert total() == 4
+
+
+def test_record_dispatch_manual_accounting():
+    start = dispatch_count()
+    start_l = dispatch_count("manual")
+    record_dispatch(3, label="manual")
+    assert dispatch_count() - start == 3
+    assert dispatch_count("manual") - start_l == 3
+
+
+def test_record_batch_amortization_ratio():
+    served = batched_served("bq")
+    with count_dispatches(label="bq") as n:
+        prog = counted_jit(lambda x: x.sum(axis=0), label="bq")
+        prog(jnp.ones((8, 3)))
+        record_batch(8, label="bq")
+    assert n() == 1
+    assert batched_served("bq") - served == 8
+
+
+def test_unknown_label_counts_zero():
+    assert dispatch_count("no-such-label") == 0
+    assert batched_served("no-such-label") == 0
+
+
+def test_counted_jit_preserves_jit_attributes():
+    @counted_jit
+    def f(x):
+        return x * x
+
+    assert f._cache_size() == 0
+    f(jnp.arange(4.0))
+    assert f._cache_size() == 1
+    f(jnp.arange(4.0))
+    assert f._cache_size() == 1       # no retrace on the same shape
+    lowered = f.lower(jnp.arange(4.0))
+    assert "jit" in lowered.as_text().lower() or lowered is not None
+
+
+def test_counted_jit_forwards_jit_kwargs():
+    @counted_jit
+    def plain(x):
+        return x
+
+    f = counted_jit(lambda x, k: x * k, static_argnames=("k",))
+    assert float(f(jnp.float32(2.0), k=3)) == 6.0
+    g = counted_jit(lambda s: {k: v + 1 for k, v in s.items()},
+                    donate_argnums=(0,))
+    state = {"a": jnp.arange(3.0)}
+    out = g(state)
+    assert np.allclose(np.asarray(out["a"]), [1.0, 2.0, 3.0])
+    with pytest.raises(RuntimeError):
+        np.asarray(state["a"])        # donated: buffer deleted
+    assert float(plain(jnp.float32(1.0))) == 1.0
+
+
+def test_hot_path_marker_is_noop_at_runtime():
+    @hot_path
+    def body(x):
+        return x + 1
+
+    assert body.__hot_path__ is True
+    assert body(41) == 42

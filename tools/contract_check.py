@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Contract checker CLI: static (AST) + compiled-program (jaxpr) layers.
+
+Usage:
+    PYTHONPATH=src python tools/contract_check.py [paths ...]
+        [--select ZQL001,ZQL002] [--ignore ZQL003]
+        [--baseline tools/contract_baseline.json] [--update-baseline]
+        [--jaxpr] [--no-lint]
+
+Default paths: ``src/repro``. Exit 0 when the tree is clean (modulo the
+baseline), 1 on any new finding or failed audit. Findings print as
+``file:line:col: RULE message``; when ``GITHUB_STEP_SUMMARY`` is set a
+markdown table is appended to the job summary (same idiom as
+``tools/check_bench.py``).
+
+The baseline file grandfathers DELIBERATE findings only (see
+docs/architecture.md — Enforced contracts — for when to baseline vs fix
+vs suppress inline with ``# zql: ok[RULE] reason``). Refresh it after an
+intentional change with ``--update-baseline``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import lint  # noqa: E402
+
+
+def _summary(lines) -> None:
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    text = "\n".join(lines) + "\n"
+    print(text)
+    if path:
+        with open(path, "a") as f:
+            f.write(text + "\n")
+
+
+def _render_findings(new, old) -> None:
+    lines = ["### Contract check (static rules)", ""]
+    if not new and not old:
+        lines.append("clean: no rule violations in the scanned tree")
+    else:
+        lines += ["| location | rule | finding | status |",
+                  "|---|---|---|---|"]
+        for f in new:
+            lines.append(f"| {f.path}:{f.line} | {f.rule} "
+                         f"| {f.message} | NEW |")
+        for f in old:
+            lines.append(f"| {f.path}:{f.line} | {f.rule} "
+                         f"| {f.message} | baselined |")
+    _summary(lines)
+    for f in new:
+        print(f.format(), file=sys.stderr)
+
+
+def _render_audit(results) -> bool:
+    lines = ["### Contract check (compiled-program audit)", "",
+             "| engine | contract | status | detail |",
+             "|---|---|---|---|"]
+    for r in results:
+        lines.append(f"| {r.engine} | {r.contract} "
+                     f"| {'ok' if r.ok else 'FAIL'} | {r.detail} |")
+    _summary(lines)
+    failed = [r for r in results if not r.ok]
+    for r in failed:
+        print(r.format(), file=sys.stderr)
+    return not failed
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="static + jaxpr-level contract checker")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule IDs to run exclusively")
+    ap.add_argument("--ignore", default=None,
+                    help="comma-separated rule IDs to skip")
+    ap.add_argument("--baseline",
+                    default=str(REPO / "tools" / "contract_baseline.json"),
+                    help="grandfathered-findings file")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="also run the compiled-program audit (slower)")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the static layer (with --jaxpr)")
+    args = ap.parse_args()
+
+    rc = 0
+    if not args.no_lint:
+        paths = args.paths or [str(REPO / "src" / "repro")]
+        select = args.select.split(",") if args.select else None
+        ignore = args.ignore.split(",") if args.ignore else None
+        findings = lint.run_lint(paths, select=select, ignore=ignore,
+                                 root=REPO)
+        if args.update_baseline:
+            lint.write_baseline(args.baseline, findings)
+            print(f"baseline refreshed: {len(findings)} finding(s) -> "
+                  f"{args.baseline}")
+            return 0
+        baseline = lint.load_baseline(args.baseline)
+        new, old = lint.split_baselined(findings, baseline)
+        _render_findings(new, old)
+        if new:
+            print(f"{len(new)} new contract finding(s)", file=sys.stderr)
+            rc = 1
+
+    if args.jaxpr:
+        from repro.analysis import jaxpr_audit
+        if not _render_audit(jaxpr_audit.run_audit()):
+            rc = 1
+
+    if rc == 0:
+        print("contract check: clean")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

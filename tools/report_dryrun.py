@@ -1,4 +1,5 @@
 """Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/*.json."""
+import contextlib
 import json
 import sys
 
@@ -10,11 +11,9 @@ def fmt_bytes(b):
 def main(path="results/dryrun.json", zpath="results/dryrun_zaliql.json"):
     with open(path) as f:
         rows = json.load(f)
-    try:
+    with contextlib.suppress(FileNotFoundError):
         with open(zpath) as f:
             rows += json.load(f)
-    except FileNotFoundError:
-        pass
     ok = [r for r in rows if r.get("ok")]
     fail = [r for r in rows if not r.get("ok")]
     print(f"## §Dry-run — {len(ok)}/{len(rows)} cells compile\n")
