@@ -15,7 +15,13 @@ the real executables, not the prose in ``docs/architecture.md`` — that:
   ``device_put``/``device_get``, never an implicit sync;
 - **dispatch counts match the 1-dispatch contract**: steady-state
   ingest = 1 launch, uncached query = 1 launch (label ``"query"``),
-  cached query = 0, a B-spec ``ate_batch`` = 1.
+  cached query = 0, a B-spec ``ate_batch`` = 1;
+- **the MVCC overlap window is sync-free** (the dynamic twin of lint
+  rule ZQL007): an ``overlap=True`` ingest performs ZERO host syncs
+  between dispatch and commit (counted via ``trace.count_host_syncs`` —
+  explicit ``device_get``s pass the transfer guard), the committed
+  snapshot's buffers stay alive under the in-flight chain, and the
+  post-commit answer is bitwise identical to the synchronous pipeline.
 
 Each check returns an :class:`AuditResult`; ``run_audit()`` runs the
 whole matrix (both engine layouts). ``tools/contract_check.py --jaxpr``
@@ -69,6 +75,29 @@ def _tiny_engines() -> Dict[str, Callable]:
                                            granule=256),
         "partitioned": lambda: PartitionedOnlineEngine(
             specs, treatments, "y", granule=128, n_parts=2),
+    }
+
+
+def _tiny_overlap_engines() -> Dict[str, Callable]:
+    """Per-layout factories returning ``(overlap, sync)`` twins on the
+    same tiny config — the overlap engine pipelines ingest dispatches
+    against the committed snapshot; the sync twin is the bit-identity
+    oracle."""
+    from repro.core import CoarsenSpec, OnlineEngine, PartitionedOnlineEngine
+
+    specs = {"x0": CoarsenSpec.categorical(5),
+             "x1": CoarsenSpec.categorical(4),
+             "x2": CoarsenSpec.categorical(3)}
+    treatments = {"ta": ["x0", "x1"], "tb": ["x0", "x2"]}
+
+    def _pair(cls, **kw):
+        return (cls(specs, treatments, "y", overlap=True, **kw),
+                cls(specs, treatments, "y", **kw))
+
+    return {
+        "replicated": lambda: _pair(OnlineEngine, granule=256),
+        "partitioned": lambda: _pair(PartitionedOnlineEngine,
+                                     granule=128, n_parts=2),
     }
 
 
@@ -200,6 +229,57 @@ def _audit_evict(name: str, eng, results: List[AuditResult]) -> None:
         "donation"))
 
 
+def _audit_overlap(name: str, make_overlap: Callable,
+                   results: List[AuditResult]) -> None:
+    """MVCC overlap contracts on the dispatch->commit window: a
+    steady-state overlap ingest performs ZERO host syncs (counted — the
+    transfer guard alone cannot see explicit ``device_get``s) while
+    staying transfer-clean and one-dispatch; the committed snapshot's
+    buffers stay ALIVE under the in-flight dispatch (first-hop
+    ``donate=False`` — they keep serving queries); and after ``commit()``
+    the answered state is bitwise identical to the synchronous
+    pipeline's."""
+    import jax
+
+    from repro.launch.trace import count_dispatches, count_host_syncs
+
+    eng, ref = make_overlap()
+    batches = [_batch(seed=s) for s in range(3)]
+    for b in batches:               # warm: traces + capacity settle
+        eng.ingest(b)
+        ref.ingest(b)
+    eng.commit()
+    committed = jax.tree.leaves(eng._pack_view_state())
+    steady = _batch(seed=11)
+    with count_host_syncs() as s, count_dispatches() as n:
+        guard = _transfer_clean(lambda: eng.ingest(steady))
+    ok = s() == 0 and n() == 1 and guard.ok
+    results.append(AuditResult(
+        name, "overlap-ingest-0-sync", ok,
+        "overlap ingest: 1 dispatch, 0 host syncs, transfer-clean "
+        "(verdicts deferred to commit)" if ok else
+        f"overlap ingest: {n()} dispatch(es), {s()} host sync(s), "
+        f"guard={'ok' if guard.ok else guard.detail}"))
+    alive = [not leaf.is_deleted() for leaf in committed]
+    results.append(AuditResult(
+        name, "overlap-committed-buffers-live", bool(alive) and all(alive),
+        f"{sum(alive)}/{len(alive)} committed snapshot buffers alive "
+        "under the in-flight dispatch (first hop does not donate)"))
+    eng.commit()
+    ref.ingest(steady)
+    a = eng.ate("ta")
+    b = ref.ate("ta")
+    same = (float(a.ate) == float(b.ate)
+            and float(a.variance) == float(b.variance)
+            and a.state_version == b.state_version)
+    results.append(AuditResult(
+        name, "overlap-commit-bit-identity", same,
+        "post-commit query bitwise equals the synchronous pipeline at "
+        "the same snapshot version" if same else
+        f"overlap ({float(a.ate)!r}, v{a.state_version}) != sync "
+        f"({float(b.ate)!r}, v{b.state_version})"))
+
+
 def audit_engine(name: str, make_engine: Callable) -> List[AuditResult]:
     """Run every compiled-program audit against one engine layout."""
     results: List[AuditResult] = []
@@ -214,8 +294,11 @@ def audit_engine(name: str, make_engine: Callable) -> List[AuditResult]:
 
 
 def run_audit() -> List[AuditResult]:
-    """The full audit matrix: both engine layouts."""
+    """The full audit matrix: both engine layouts, sync and overlap."""
     results: List[AuditResult] = []
     for name, make in _tiny_engines().items():
         results.extend(audit_engine(name, make))
+    overlap = _tiny_overlap_engines()
+    for name, make in overlap.items():
+        _audit_overlap(name, make, results)
     return results

@@ -7,6 +7,7 @@ from repro.analysis.rules import (
     zql004_donation,
     zql005_pallas_alias,
     zql006_retrace,
+    zql007_sync_before_commit,
 )
 
 RULES = [
@@ -16,6 +17,7 @@ RULES = [
     zql004_donation.RULE,
     zql005_pallas_alias.RULE,
     zql006_retrace.RULE,
+    zql007_sync_before_commit.RULE,
 ]
 
 RULE_IDS = [r.id for r in RULES]

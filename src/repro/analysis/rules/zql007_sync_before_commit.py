@@ -1,0 +1,119 @@
+"""ZQL007 — host sync between an ingest dispatch and its commit point.
+
+Contract (MVCC overlap, docs/architecture.md — snapshot/commit
+protocol): once a fused ingest/evict program has been DISPATCHED, the
+host must not synchronize on device results until the output state has
+been committed — a reference swap (``_unpack_view_state`` /
+``_post_state_swap``) or an explicit ``commit()``. A ``device_get`` /
+``device_fetch`` / ``np.asarray`` / ``.block_until_ready()`` in that
+window stalls the python thread behind the dispatch and silently
+re-serializes the pipelined ingest path back into stop-the-world
+interleaving (the verdict scalars must be checked LAZILY, after the
+commit point). The jaxpr audit enforces the same window dynamically with
+``jax.transfer_guard`` plus the host-sync counter; this rule catches it
+statically in engine-owned modules.
+
+A dispatch site is a call of a local name bound from one of the fused
+program factories (``_fused_program``, ``get_fused_ingest``,
+``get_fused_ingest_parts``, ``get_fused_evict``), or a direct
+``factory(...)(args)`` call. The window closes at the first
+commit-point call (a name ending in ``_unpack_view_state``,
+``_post_state_swap`` or ``commit``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Tuple
+
+from repro.analysis.lint import Finding, ModuleContext
+from repro.analysis.rules import _common
+
+#: factories whose return value is a compiled ingest/evict program —
+#: calling that value is the dispatch that opens the no-sync window
+_PROGRAM_FACTORIES = ("_fused_program", "get_fused_ingest",
+                      "get_fused_ingest_parts", "get_fused_evict")
+
+#: calls that close the window: the output state is committed (reference
+#: swap / version bump) and lazy verdict checks become legal
+_COMMIT_POINTS = ("_unpack_view_state", "_post_state_swap", "commit")
+
+#: host-synchronizing calls (the explicit-fetch subset of ZQL002 — these
+#: pass jax.transfer_guard("disallow"), which only stops IMPLICIT
+#: transfers, so they need a static rule)
+_SYNC_CALLS = ("jax.device_get", "numpy.asarray", "numpy.array",
+               "numpy.frombuffer")
+_SYNC_TAILS = ("device_fetch",)
+_SYNC_METHODS = ("block_until_ready", "item", "tolist")
+
+
+def _call_events(fn: ast.AST, aliases) -> List[Tuple[Tuple[int, int],
+                                                     str, ast.Call]]:
+    """Every relevant call in ``fn``, tagged ``dispatch`` / ``sync`` /
+    ``commit`` and ordered by source position (the bodies this rule
+    guards are straight-line dispatch protocols, so source order is
+    execution order; the growth loop commits before it fetches)."""
+    program_names = set()
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)):
+            canon = _common.call_canonical(node.value, aliases)
+            if canon and _common.matches(canon, *_PROGRAM_FACTORIES):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        program_names.add(tgt.id)
+    events = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        pos = (node.lineno, node.col_offset)
+        # dispatch: prog(...) with prog bound from a factory, or the
+        # direct get_fused_ingest(...)(args) form
+        if (isinstance(node.func, ast.Name)
+                and node.func.id in program_names):
+            events.append((pos, "dispatch", node))
+            continue
+        if isinstance(node.func, ast.Call):
+            inner = _common.call_canonical(node.func, aliases)
+            if inner and _common.matches(inner, *_PROGRAM_FACTORIES):
+                events.append((pos, "dispatch", node))
+                continue
+        canon = _common.call_canonical(node, aliases)
+        if canon and (canon in _SYNC_CALLS
+                      or _common.matches(canon, *_SYNC_TAILS)):
+            events.append((pos, "sync", node))
+        elif (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _SYNC_METHODS):
+            events.append((pos, "sync", node))
+        elif canon and _common.matches(canon, *_COMMIT_POINTS):
+            events.append((pos, "commit", node))
+    events.sort(key=lambda e: e[0])
+    return events
+
+
+class Rule:
+    id = "ZQL007"
+    summary = "host sync between an ingest dispatch and its commit point"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not ctx.engine_owned:
+            return
+        aliases = _common.import_aliases(ctx.tree)
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            open_dispatch = None
+            for _, kind, node in _call_events(fn, aliases):
+                if kind == "dispatch":
+                    open_dispatch = node
+                elif kind == "commit":
+                    open_dispatch = None
+                elif kind == "sync" and open_dispatch is not None:
+                    yield ctx.finding(
+                        node, self.id,
+                        f"host sync in `{fn.name}` between a fused "
+                        f"program dispatch (line {open_dispatch.lineno}) "
+                        "and its commit point — check verdicts lazily "
+                        "AFTER the state swap/commit")
+
+
+RULE = Rule()

@@ -28,7 +28,12 @@ class ATEEstimate:
     :class:`repro.core.serving.QuerySpec`) — returns this same record;
     a ``QuerySpec``'s ``estimand`` only selects which field the serving
     layer reports (``QuerySpec.select``), so ATE and ATT twins of one
-    subpopulation share a single estimate (and cache entry)."""
+    subpopulation share a single estimate (and cache entry).
+
+    ``state_version`` is the MVCC snapshot tag: online-engine estimates
+    carry the committed state version they were answered at (-1 for the
+    offline estimators, which have no versioned state). Two estimates with
+    the same spec and the same ``state_version`` are bitwise identical."""
 
     ate: jnp.ndarray          # Eq. 4, group-probability weights
     att: jnp.ndarray          # treated-weighted
@@ -36,6 +41,7 @@ class ATEEstimate:
     n_matched_control: jnp.ndarray
     n_groups: jnp.ndarray
     variance: jnp.ndarray     # conservative within-group variance of ATE
+    state_version: int = -1   # engine snapshot version (see core/online.py)
 
 
 def _group_means(groups: CEMGroups):

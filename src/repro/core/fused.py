@@ -304,16 +304,20 @@ def get_fused_ingest(codec, specs_items, tnames: Tuple[str, ...],
                      view_dims: Tuple, outcome: str, caps: Tuple,
                      delta_cap: int, mesh, mesh_axis: str, use_pallas: bool,
                      retract: bool, stream_names: Tuple[str, ...],
-                     seed: int):
+                     seed: int, donate: bool = True):
     """One-dispatch ingest program for the REPLICATED engine.
 
     view_dims: ((name, dims), ...) with the base view first; caps:
     ((name, capacity), ...) — part of the cache key, so capacity growth
     recompiles and a stable stream reuses one executable. stream_names=()
-    disables the reservoir section. The state argument is DONATED. On a
-    mesh the whole pipeline — sharded build AND merges — is one shard_map
-    body (merges replicated per-device local code; no GSPMD-sharded small
-    ops)."""
+    disables the reservoir section. The state argument is DONATED unless
+    ``donate=False`` — the MVCC double-buffer rule: the synchronous path
+    and chained in-flight hops consume their input in place, but the FIRST
+    hop off a committed snapshot must leave the committed buffers alive
+    (they keep serving queries and anchor rollback-and-replay on a failed
+    commit; see ``OnlineEngine.commit``). On a mesh the whole pipeline —
+    sharded build AND merges — is one shard_map body (merges replicated
+    per-device local code; no GSPMD-sharded small ops)."""
     del caps  # cache key only: capacities are read off the state shapes
     specs = dict(specs_items)
     ndev = 1 if mesh is None else int(mesh.shape[mesh_axis])
@@ -402,7 +406,8 @@ def get_fused_ingest(codec, specs_items, tnames: Tuple[str, ...],
                                             state["views"], counter)
             return finish(new_views, out, state, columns, valid, n_batches)
 
-    return counted_jit(program, donate_argnums=(2,))
+    return counted_jit(program,
+                       donate_argnums=(2,) if donate else ())
 
 
 # ===================== partitioned single-dispatch ingest ===================
@@ -411,12 +416,14 @@ def get_fused_ingest_parts(codec, specs_items, tnames: Tuple[str, ...],
                            view_dims: Tuple, outcome: str, caps: Tuple,
                            delta_cap: int, n_parts: int, mesh,
                            mesh_axis: str, use_pallas: bool, retract: bool,
-                           stream_names: Tuple[str, ...], seed: int):
+                           stream_names: Tuple[str, ...], seed: int,
+                           donate: bool = True):
     """One-dispatch ingest program for the PARTITIONED engine: routed
     delta build (all-to-all on a mesh, in-program regroup off one) composed
     with the per-partition merges, overlap flips, touch stamps and verdict
     scalars — the whole maintenance loop of one batch in one executable,
-    with the (P, C) state donated in place. ``n_parts`` may be any multiple
+    with the (P, C) state donated in place (``donate=False`` keeps the
+    input alive — the MVCC first-hop rule, see :func:`get_fused_ingest`). ``n_parts`` may be any multiple
     of the mesh data-axis size: each device owns ``k = n_parts / N``
     contiguous key ranges (k-partitions-per-device). On a mesh the whole
     pipeline is ONE shard_map body: state enters as the local (k, C)
@@ -524,7 +531,8 @@ def get_fused_ingest_parts(codec, specs_items, tnames: Tuple[str, ...],
                                             state["views"], counter, None)
             return finish(new_views, out, state, columns, valid, n_batches)
 
-    return counted_jit(program, donate_argnums=(2,))
+    return counted_jit(program,
+                       donate_argnums=(2,) if donate else ())
 
 
 # ===================== device-resident query pipeline =======================

@@ -69,6 +69,22 @@ under streaming INSERTs with work proportional to the DELTA, not the data:
      every estimate a bitwise-deterministic function of the group content
      alone, so the fused path, the ``query_pipeline="assemble"``
      baseline and both engine layouts agree exactly.
+  9. MVCC SNAPSHOT OVERLAP (``overlap=True``) — ingest dispatches for
+     version v+1..v+k run PIPELINED while every query path serves the
+     last COMMITTED snapshot v: the engine's attributes only ever hold
+     committed state, in-flight dispatches chain device-side off each
+     other (the first hop does NOT donate the committed buffers — the
+     MVCC double-buffer rule, :func:`repro.core.fused.get_fused_ingest`),
+     and the verdict scalars are checked LAZILY at :meth:`commit` — the
+     steady-state ingest hot path performs ZERO host syncs
+     (``device_get`` leaves the dispatch path entirely; rule ZQL007 and
+     the jaxpr audit enforce it). Commit is an atomic reference swap plus
+     one version bump per batch; a batch that needed growth or the exact
+     fallback rolls BACK to the committed snapshot and REPLAYS all
+     in-flight batches synchronously in order, so every committed version
+     is bitwise identical to the synchronous pipeline's. Every
+     ``ATEEstimate`` carries ``state_version`` — the snapshot it was
+     computed at (:meth:`snapshot_version`).
 
 The maintained state is EXACT: after any number of ingested batches, every
 cuboid stat, CEM matched set and ATE equals the offline computation over
@@ -99,7 +115,9 @@ from repro.core.coarsen import CoarsenSpec
 from repro.core.propensity import (LogisticModel, StreamStats, design_matrix,
                                    fit_logistic)
 from repro.data.columnar import GrowableTable, Table, _round_capacity
-from repro.launch.trace import counted_jit, record_batch
+from repro.launch.trace import counted_jit, device_fetch, record_batch
+
+import collections.abc as _cabc
 
 #: contract-lint scoping (tools/contract_check.py): this module is
 #: engine-owned — dispatch/donation rules ZQL001-ZQL006 apply.
@@ -169,6 +187,103 @@ class DeltaReport:
     n_delta_groups: int           # distinct base-granularity groups touched
     fast_path: Dict[str, bool]    # view -> scatter-merge (True) / re-sort
     invalidated: Tuple            # estimate-cache keys dropped
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-uncommitted MVCC ingest hop: the program's
+    output state pytree (the NEXT hop's input), its device-resident
+    verdict scalars (fetched lazily at commit), the bucket-padded batch
+    (the replay input on rollback) and the caller's original batch (row
+    accounting)."""
+
+    state: dict
+    verdicts: dict
+    batch: "Table"
+    orig: "Table"
+    pending: "PendingIngest"
+
+
+class PendingIngest:
+    """Lazy :class:`DeltaReport` of one overlap-mode ingest.
+
+    The dispatch already happened; the verdict scalars stay on device
+    until :meth:`OnlineEngine.commit` fetches them all in ONE
+    ``device_get``. ``n_rows`` is known immediately; touching any
+    verdict-derived field (``n_delta_groups``, ``fast_path``,
+    ``invalidated``) forces the commit — so code written against the
+    synchronous ``DeltaReport`` keeps working, it just pays the sync it
+    asks for."""
+
+    def __init__(self, engine: "OnlineEngine", n_rows: int):
+        self._engine = engine
+        self.n_rows = n_rows
+        self.report: Optional[DeltaReport] = None
+
+    @property
+    def committed(self) -> bool:
+        return self.report is not None
+
+    def _force(self) -> DeltaReport:
+        if self.report is None:
+            self._engine.commit()
+        return self.report
+
+    @property
+    def n_delta_groups(self) -> int:
+        return self._force().n_delta_groups
+
+    @property
+    def fast_path(self) -> Dict[str, bool]:
+        return self._force().fast_path
+
+    @property
+    def invalidated(self) -> Tuple:
+        return self._force().invalidated
+
+
+class EvictReport(_cabc.Mapping):
+    """Lazy ``{view: groups evicted}`` mapping returned by
+    :meth:`OnlineEngine.evict`.
+
+    The eviction program's count/occupancy scalars stay on device (their
+    host copy is started async) so ``evict()`` never blocks the python
+    thread behind an in-flight ingest dispatch; the engine resolves them
+    — ONE ``device_get``, then the scoped cache invalidation and the
+    capacity-shrink pass — at its next sync point
+    (:meth:`OnlineEngine._resolve_evictions`) or on first access here,
+    whichever comes first. Compares equal to the plain dict it resolves
+    to."""
+
+    def __init__(self, engine: "OnlineEngine"):
+        self._engine = engine
+        self._counts: Optional[Dict[str, int]] = None
+
+    def _resolve(self) -> Dict[str, int]:
+        if self._counts is None:
+            self._engine._resolve_evictions()
+        return self._counts
+
+    def __getitem__(self, key: str) -> int:
+        return self._resolve()[key]
+
+    def __iter__(self):
+        return iter(self._resolve())
+
+    def __len__(self) -> int:
+        return len(self._resolve())
+
+    def __eq__(self, other):
+        if isinstance(other, EvictReport):
+            other = dict(other._resolve())
+        if not isinstance(other, dict):
+            return NotImplemented
+        return dict(self._resolve()) == other
+
+    def __repr__(self) -> str:
+        if self._counts is None:
+            return "EvictReport(<unresolved>)"
+        return f"EvictReport({self._counts!r})"
 
 
 @dataclasses.dataclass
@@ -444,15 +559,23 @@ class OnlineEngine:
                  reservoir_size: int = 8192, mesh=None,
                  mesh_axis: str = "data", seed: int = 0,
                  fused_host_sync: bool = True, pipeline: str = None,
-                 query_pipeline: str = "fused"):
+                 query_pipeline: str = "fused", overlap: bool = False,
+                 max_inflight: int = 8):
         if pipeline is None:
             pipeline = "fused1" if fused_host_sync else "unfused"
         if pipeline not in ("fused1", "planner", "unfused"):
             raise ValueError(f"unknown pipeline {pipeline!r}")
         if query_pipeline not in ("fused", "assemble"):
             raise ValueError(f"unknown query_pipeline {query_pipeline!r}")
+        if overlap and pipeline != "fused1":
+            raise ValueError("overlap=True requires pipeline='fused1' "
+                             "(the MVCC chain is a fused-dispatch protocol)")
         self.pipeline = pipeline
         self.query_pipeline = query_pipeline
+        self.overlap = bool(overlap)
+        self.max_inflight = int(max_inflight)
+        self._inflight: List[_InFlight] = []
+        self._pending_evict: Optional[Tuple] = None
         self._state_version = 0
         self.fused_host_sync = pipeline != "unfused"
         self.seed = seed
@@ -582,11 +705,24 @@ class OnlineEngine:
         ~log2(max batch). Row accounting (``DeltaReport.n_rows``,
         ``n_rows_ingested``, the optional row log) stays on the original
         batch.
+
+        With ``overlap=True`` (MVCC) this call only DISPATCHES: the fused
+        program chains off the previous in-flight state while every query
+        keeps serving the committed snapshot, the returned report is a
+        lazy :class:`PendingIngest`, and the verdicts are checked at
+        :meth:`commit` — zero host syncs on this path. Retraction flushes
+        the pipeline first (its guard must validate eagerly against
+        committed state).
         """
+        self._resolve_evictions()
         self._guard_retract_rows(retract)
+        if self.overlap and retract:
+            self.commit()
         self._maybe_renorm_touch()
         padded = self._bucket_pad(batch)
         if self.pipeline == "fused1":
+            if self.overlap and not retract:
+                return self._ingest_overlap(padded, orig=batch)
             return self._ingest_fused1(padded, retract, orig=batch)
         hi, lo, stats, gv, n_full, overflow = self._build_delta(padded)
         if self.pipeline == "planner":
@@ -685,14 +821,14 @@ class OnlineEngine:
     def _stream_names(self) -> Tuple[str, ...]:
         return self._row_cols if self.stream is not None else ()
 
-    def _fused_program(self, retract: bool):
+    def _fused_program(self, retract: bool, donate: bool = True):
         mesh = self.mesh if self._mesh_ndev > 1 else None
         return fused_mod.get_fused_ingest(
             self.codec, tuple(sorted(self.specs.items())),
             tuple(sorted(self.treatments)), self._fused_view_dims(),
             self.outcome, self._fused_caps(), self._delta_cap, mesh,
             self.mesh_axis, self.use_pallas, retract, self._stream_names(),
-            self.seed)
+            self.seed, donate)
 
     def _fallback_overflow(self, batch: Table, retract: bool,
                            orig: Table) -> DeltaReport:
@@ -748,7 +884,7 @@ class OnlineEngine:
             new_state, verdicts = prog(cols, valid, self._pack_view_state(),
                                        counter, n_batches)
             self._unpack_view_state(new_state)
-            f = jax.device_get(verdicts)
+            f = device_fetch(verdicts, label="ingest-verdict")
             if bool(f["overflow"]):
                 self._delta_cap = _round_capacity(
                     max(int(f["n_full"]), 2 * self._delta_cap),
@@ -781,15 +917,133 @@ class OnlineEngine:
                            fast_path={k: bool(v) for k, v in f["ok"].items()},
                            invalidated=invalidated)
 
+    # ------------------------------------------- MVCC overlap (pipelined)
+    @staticmethod
+    def _start_async_fetch(tree) -> None:
+        """Kick off device->host copies without blocking (the commit-time
+        ``device_get`` then finds them already in flight)."""
+        for leaf in jax.tree_util.tree_leaves(tree):
+            start = getattr(leaf, "copy_to_host_async", None)
+            if start is not None:
+                start()
+
+    def _ingest_overlap(self, batch: Table, orig: Table) -> PendingIngest:
+        """Dispatch one MVCC ingest hop WITHOUT any host sync.
+
+        The program's input is the tail of the in-flight chain (or the
+        committed snapshot when the chain is empty — that first hop
+        compiles with ``donate=False`` so the committed buffers stay
+        alive for serving and rollback); its output becomes the new tail.
+        Verdicts stay on device (async host copy started) until
+        :meth:`commit`. Device-side gating makes the chain safe to run
+        blind: a hop that overflowed or needed growth passes its input
+        state through unchanged, so later hops always compute on a
+        correct base and commit-time rollback simply replays every
+        in-flight batch in order."""
+        if len(self._inflight) >= self.max_inflight:
+            self.commit()   # bounded pipeline depth: documented sync point
+        depth = len(self._inflight)
+        cols = {c: batch.columns[c] for c in self._row_cols}
+        valid = batch.valid
+        counter = jax.device_put(
+            np.int32(self._ingest_count + depth + 1))
+        n_batches = jax.device_put(np.int32(
+            0 if self.stream is None else self.stream.n_batches + depth))
+        src = (self._inflight[-1].state if depth
+               else self._pack_view_state())
+        prog = self._fused_program(False, donate=depth > 0)
+        new_state, verdicts = prog(cols, valid, src, counter, n_batches)
+        self._start_async_fetch(verdicts)
+        pending = PendingIngest(self, orig.nrows)
+        self._inflight.append(_InFlight(state=new_state, verdicts=verdicts,
+                                        batch=batch, orig=orig,
+                                        pending=pending))
+        return pending
+
+    def commit(self) -> List[DeltaReport]:
+        """MVCC commit point: check every in-flight verdict with ONE
+        ``device_get`` and atomically advance the committed snapshot.
+
+        Clean chain (no delta overflow, no capacity growth): install the
+        LAST in-flight state by reference swap — the intermediate states
+        were consumed device-side by donation — bump the version once per
+        batch, and run each batch's host bookkeeping and delta-predicate
+        cache invalidation in order. Any failed hop instead ROLLS BACK to
+        the committed snapshot (its buffers were never donated) and
+        REPLAYS all in-flight batches synchronously in original order,
+        which preserves the float merge order — every committed version
+        is bitwise identical to the synchronous pipeline's. Returns the
+        per-batch reports (also filled into each :class:`PendingIngest`).
+        No-op when nothing is in flight."""
+        entries = self._inflight
+        if not entries:
+            return []
+        self._inflight = []
+        fetched = device_fetch([e.verdicts for e in entries],
+                               label="commit")
+        n_good = 0
+        for f in fetched:
+            if bool(f["overflow"]) or any(map(bool, f["grew"].values())):
+                break
+            n_good += 1
+        if n_good < len(entries):
+            # rollback-and-replay: the committed buffers are alive (first
+            # hop never donates), every in-flight output is discarded
+            reports = []
+            for e in entries:
+                rep = self._ingest_fused1(e.batch, False, orig=e.orig)
+                e.pending.report = rep
+                reports.append(rep)
+            return reports
+        self._unpack_view_state(entries[-1].state)   # bumps version by 1
+        self._state_version += len(entries) - 1      # ... one per batch
+        if self.stream is not None:
+            self.stream = dataclasses.replace(
+                self.stream, n_batches=self.stream.n_batches + len(entries))
+        reports = []
+        for e, f in zip(entries, fetched):
+            if self.rows is not None:
+                self.rows = self.rows.append(
+                    e.orig.select(list(self.rows.table.columns)),
+                    granule=self.row_granule)
+            self.n_rows_ingested += e.orig.nrows
+            self._ingest_count += 1
+            invalidated = self._invalidate(
+                np.asarray(f["gv"]).reshape(-1),
+                lambda d, f=f: np.asarray(f["buckets"][d]).reshape(-1))
+            rep = DeltaReport(
+                n_rows=e.orig.nrows, n_delta_groups=int(f["n_delta"]),
+                fast_path={k: bool(v) for k, v in f["ok"].items()},
+                invalidated=invalidated)
+            e.pending.report = rep
+            reports.append(rep)
+        return reports
+
+    def snapshot_version(self) -> int:
+        """The committed MVCC snapshot version queries serve RIGHT NOW.
+
+        Settles any lazily pending eviction first (its deferred shrink
+        pass is a commit), so two reads with no intervening commit are
+        guaranteed equal — the serving layer's one-version-per-wave
+        invariant reads this, never ``_state_version`` directly.
+        In-flight overlap ingests do NOT move it; :meth:`commit` does."""
+        self._resolve_evictions()
+        return self._state_version
+
     # -------------------------------------------------- touch-stamp renorm
     def _maybe_renorm_touch(self) -> None:
         """int32 wraparound guard for the eviction stamps: when the ingest
         counter nears 2^31, shift every live stamp (and the counter) down.
         Eviction compares differences only, so TTL semantics are unchanged
         — exactly for ``ttl < TOUCH_CLAMP_AGE`` (~2^30 ingests), and
-        conservatively (groups kept, never spuriously evicted) beyond."""
-        if self._ingest_count < fused_mod.TOUCH_RENORM_LIMIT:
+        conservatively (groups kept, never spuriously evicted) beyond.
+        The threshold compare is host-integer only (sync-free); when it
+        fires in overlap mode the pipeline is flushed first — the renorm
+        rewrites the committed touch stamps."""
+        if (self._ingest_count + len(self._inflight)
+                < fused_mod.TOUCH_RENORM_LIMIT):
             return
+        self.commit()
         self._renorm_touch()
 
     def _renorm_touch(self) -> None:
@@ -866,7 +1120,7 @@ class OnlineEngine:
             vdims=tuple(self.views[t].dims for t in tnames),
             retract=retract, use_pallas=self.use_pallas, dcap=dcap)
         # THE one host sync of a fast-path ingest: every decision at once
-        fetched = jax.device_get(dict(
+        fetched = device_fetch(dict(
             overflow=overflow, n_full=n_full, ok_b=plan["ok_b"],
             ok_v={t: plan["views"][t]["ok"] for t in tnames},
             neg_min=plan["neg_min"], n_delta=plan["n_delta"],
@@ -1051,7 +1305,7 @@ class OnlineEngine:
         the replicated (C,) layout, >0 the (P, C) partitioned one."""
         return 0
 
-    def evict(self, ttl: int) -> Dict[str, int]:
+    def evict(self, ttl: int) -> EvictReport:
         """Drop every group whose last delta touch is more than ``ttl``
         ingests old — the bounded-state escape hatch for streams whose key
         space grows without bound. Estimates afterwards cover only the
@@ -1067,9 +1321,17 @@ class OnlineEngine:
         shrink pass slices the compacted tables down to a halved-or-
         smaller capacity and the next ingest recompiles at the smaller
         granule count — long-lived streams whose live set collapses
-        reclaim device memory (``state_bytes()`` decreases). Returns
-        {view name: groups evicted}.
-        """
+        reclaim device memory (``state_bytes()`` decreases).
+
+        Returns a LAZY :class:`EvictReport` ({view name: groups evicted}):
+        the count scalars are fetched — and the estimate-cache
+        invalidation is applied, scoped to the views with NONZERO evicted
+        counts — at the engine's next sync point or on first access,
+        whichever comes first, so this call never stalls behind an
+        in-flight ingest dispatch. In overlap mode the pipeline is
+        committed first (eviction rewrites the committed snapshot)."""
+        self.commit()
+        self._resolve_evictions()
         mesh = self.mesh if self._mesh_ndev > 1 else None
         prog = fused_mod.get_fused_evict(
             tuple(sorted(self.treatments)), self._fused_caps(),
@@ -1079,12 +1341,35 @@ class OnlineEngine:
             self._pack_view_state(),
             jax.device_put(np.int32(self._ingest_count - ttl)))
         self._unpack_view_state(new_state)
-        fetched = jax.device_get(dict(counts=counts, live=live))
+        self._start_async_fetch((counts, live))
+        report = EvictReport(self)
+        self._pending_evict = (counts, live, report)
+        return report
+
+    def _resolve_evictions(self) -> None:
+        """Settle a lazily pending :meth:`evict`: ONE ``device_get`` for
+        the count/occupancy scalars, then the cache invalidation scoped
+        to views that actually lost groups (untouched-view entries keep
+        serving at zero dispatches — evicting only the base view never
+        drops a treatment-view estimate) and the deferred capacity-shrink
+        pass. Every cache probe, ingest, commit and state accessor calls
+        this first, so no stale entry is ever served and the next
+        dispatch compiles against settled shapes. Idempotent no-op when
+        nothing is pending."""
+        if self._pending_evict is None:
+            return
+        counts, live, report = self._pending_evict
+        self._pending_evict = None
+        fetched = device_fetch(dict(counts=counts, live=live),
+                               label="evict")
         evicted = {k: int(v) for k, v in fetched["counts"].items()}
-        if any(evicted.values()):
-            self._cache.clear()
+        report._counts = evicted
+        touched = {name for name, n in evicted.items() if n}
+        if touched:
+            for key in list(self._cache):
+                if key[0] in touched:
+                    del self._cache[key]
         self._maybe_shrink({k: int(v) for k, v in fetched["live"].items()})
-        return evicted
 
     # ------------------------------------------------ capacity shrink pass
     def _shrink_granule(self) -> int:
@@ -1178,26 +1463,35 @@ class OnlineEngine:
         :func:`_estimate_view`). For a WINDOW of heterogeneous queries
         use :meth:`ate_batch` (one dispatch for all of them, same cache,
         bitwise-identical answers)."""
+        self._resolve_evictions()
         key = (treatment, _freeze_subpop(subpopulation))
         if key in self._cache:
             self.cache_hits += 1
             return self._cache[key]
         self.cache_misses += 1
         est = self._estimate(treatment, subpopulation)
-        # THE one host sync of an uncached query: every scalar at once
-        est = ATEEstimate(**jax.device_get(dict(
+        # THE one host sync of an uncached query: every scalar at once.
+        # state_version tags the committed MVCC snapshot this estimate
+        # was computed at (a cache hit keeps the version it was COMPUTED
+        # at — the entry surviving later commits means the delta
+        # predicate proved those commits did not touch it).
+        est = ATEEstimate(**device_fetch(dict(
             ate=est.ate, att=est.att,
             n_matched_treated=est.n_matched_treated,
             n_matched_control=est.n_matched_control,
-            n_groups=est.n_groups, variance=est.variance)))
+            n_groups=est.n_groups, variance=est.variance),
+            label="query"), state_version=self._state_version)
         self._cache[key] = est
         return est
 
     def cached_estimate(self, treatment: str, subpopulation: SubPop = None
                         ) -> Optional[ATEEstimate]:
         """Cache-only probe: the host-resident estimate for this query if
-        one is live, else None — NEVER dispatches. The serving layer uses
-        this so cache hits are answered without occupying a batch slot."""
+        one is live, else None — NEVER dispatches (a lazily pending
+        eviction is settled first, so a stale entry for an evicted view
+        can never be served). The serving layer uses this so cache hits
+        are answered without occupying a batch slot."""
+        self._resolve_evictions()
         return self._cache.get((treatment, _freeze_subpop(subpopulation)))
 
     # ------------------------------------------------- batched query path
@@ -1276,13 +1570,14 @@ class OnlineEngine:
             partitioned)
         states = tuple(self._view_query_args(t)
                        for t in sorted(self.treatments))
-        out = jax.device_get(prog(states, jnp.asarray(table)))
+        out = device_fetch(prog(states, jnp.asarray(table)), label="query")
         record_batch(len(rows), label="query")
         return [ATEEstimate(
             ate=out["ate"][i], att=out["att"][i],
             n_matched_treated=out["n_matched_treated"][i],
             n_matched_control=out["n_matched_control"][i],
-            n_groups=out["n_groups"][i], variance=out["variance"][i])
+            n_groups=out["n_groups"][i], variance=out["variance"][i],
+            state_version=self._state_version)
             for i in range(len(rows))]
 
     def ate_batch(self, specs: Sequence) -> List[ATEEstimate]:
@@ -1306,6 +1601,7 @@ class OnlineEngine:
         :meth:`ate` calls, in input order. Each element of ``specs`` is a
         ``QuerySpec``-shaped object or a ``(treatment, subpopulation)``
         pair."""
+        self._resolve_evictions()
         resolved = [self._normalize_spec(s) for s in specs]
         out: List[Optional[ATEEstimate]] = [None] * len(resolved)
         miss_keys: List[Tuple[str, Tuple, int]] = []
@@ -1338,6 +1634,7 @@ class OnlineEngine:
     def cem_groups(self, treatment: str) -> CEMGroups:
         """Current CEM group stats with the incrementally maintained
         overlap mask (same shape the offline path produces)."""
+        self._resolve_evictions()
         cub, keep = self._view_state(treatment)
         nt = cub.stats[f"t_{treatment}"]
         nc = cub.stats["one"] - nt
@@ -1377,6 +1674,7 @@ class OnlineEngine:
         ``assemble`` baseline keeps the broadcast-table search of the
         planner era. Both return identical masks (exact boolean
         semantics)."""
+        self._resolve_evictions()
         pipeline = pipeline or self.query_pipeline
         if pipeline == "assemble":
             cub, keep = self._view_state(treatment)
@@ -1427,6 +1725,7 @@ class OnlineEngine:
     # -------------------------------------------------------------- state
     def stats(self) -> Dict[str, Dict[str, int]]:
         """Materialized-state summary (for benchmarks and demos)."""
+        self._resolve_evictions()
         out = {BASE_VIEW: {"capacity": self.base.capacity,
                            "n_groups": int(self.base.n_groups())}}
         for t, view in self.views.items():
@@ -1461,6 +1760,7 @@ class OnlineEngine:
         + touch stamps): ``total`` across the job and ``per_device`` (the
         largest per-device share — equal to ``total`` when views are
         replicated, ~``total / n_parts`` when partitioned over a mesh)."""
+        self._resolve_evictions()
         arrs = self._state_arrays()
         return {"total": sum(int(a.nbytes) for a in arrs),
                 "per_device": sum(self._per_device_bytes(a) for a in arrs)}
@@ -1626,25 +1926,32 @@ class PartitionedOnlineEngine(OnlineEngine):
         routing included — in one donated compiled dispatch; "planner"
         keeps the PR 3 two-dispatch path. Semantics (including the
         retraction guard and the delta-overflow exact fallback) match
-        :meth:`OnlineEngine.ingest` bit for bit."""
+        :meth:`OnlineEngine.ingest` bit for bit — including the
+        ``overlap=True`` MVCC protocol (dispatch-only, lazy verdicts,
+        commit-time rollback-and-replay)."""
+        self._resolve_evictions()
         self._guard_retract_rows(retract)
+        if self.overlap and retract:
+            self.commit()
         self._maybe_renorm_touch()
         padded = self._bucket_pad(batch)
         if self.pipeline == "fused1":
+            if self.overlap and not retract:
+                return self._ingest_overlap(padded, orig=batch)
             return self._ingest_fused1(padded, retract, orig=batch)
         deltas, n_full, overflow = self._build_delta_parts(padded)
         return self._ingest_parts(padded, deltas, n_full, overflow, retract,
                                   orig=batch)
 
     # --------------------------------------- single-dispatch (fused1) hooks
-    def _fused_program(self, retract: bool):
+    def _fused_program(self, retract: bool, donate: bool = True):
         mesh = self.mesh if self._mesh_ndev > 1 else None
         return fused_mod.get_fused_ingest_parts(
             self.codec, tuple(sorted(self.specs.items())),
             tuple(sorted(self.treatments)), self._fused_view_dims(),
             self.outcome, self._fused_caps(), self._delta_cap,
             self.n_parts, mesh, self.mesh_axis, self.use_pallas, retract,
-            self._stream_names(), self.seed)
+            self._stream_names(), self.seed, donate)
 
     def _fallback_overflow(self, batch: Table, retract: bool,
                            orig: Table) -> DeltaReport:
@@ -1699,7 +2006,7 @@ class PartitionedOnlineEngine(OnlineEngine):
             codec=self.codec, tnames=tnames, retract=retract,
             use_pallas=self.use_pallas)
         # THE one host sync of a fast-path ingest
-        fetched = jax.device_get(dict(
+        fetched = device_fetch(dict(
             overflow=overflow, ok=plan["ok"], neg_min=plan["neg_min"],
             n_delta=plan["n_delta"], gv=deltas[BASE_VIEW][3],
             buckets=plan["buckets"]))
@@ -1829,6 +2136,7 @@ class PartitionedOnlineEngine(OnlineEngine):
     # -------------------------------------------------------------- state
     def stats(self) -> Dict[str, Dict[str, int]]:
         """Materialized-state summary; capacities are PER PARTITION."""
+        self._resolve_evictions()
         out = {BASE_VIEW: {"capacity": self.base.capacity,
                            "n_parts": self.n_parts,
                            "n_groups": int(self.base.n_groups())}}

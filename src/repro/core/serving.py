@@ -24,12 +24,18 @@ causal query completes in ONE program launch, so every wave frees every
 slot, and the wave size is padded to a pow2 bucket
 (``online._bucket_specs``) so arrival jitter never retraces the program.
 
-Consistency: all queries of one wave are answered from the engine state
-committed at dispatch time (one program over one state snapshot). Cache
-entries are invalidated by the engine's delta-predicate invalidation on
-every committed ingest (see ``OnlineEngine._invalidate``), so a query
-admitted after an ingest version bump re-dispatches instead of serving a
-stale estimate.
+Consistency: ONE VERSION PER WAVE — every query of one ``step()`` is
+answered from, and tagged with, a single committed MVCC snapshot version
+(``OnlineEngine.snapshot_version``). The version is captured before any
+query is served; slots whose dispatch would straddle a commit are
+requeued for the next wave rather than mixed in (``n_requeued``), and the
+version is asserted unchanged across the batched dispatch. Cache entries
+are invalidated by the engine's delta-predicate invalidation on every
+committed ingest (see ``OnlineEngine._invalidate``), so a query admitted
+after an ingest version bump re-dispatches instead of serving a stale
+estimate. With ``overlap=True`` engines, serving proceeds against the
+committed snapshot while ingest dispatches for the next versions are in
+flight — ``commit()`` is the only point the served version moves.
 """
 from __future__ import annotations
 
@@ -124,7 +130,9 @@ class ServingEngine:
     (answered from cache, zero dispatches), ``n_deduped`` (collapsed onto
     another in-flight slot), ``n_waves`` (batched dispatches issued),
     ``n_slots_used`` (total slots across waves — requests-per-dispatch =
-    (n_served - n_cache_served) / n_waves)."""
+    (n_served - n_cache_served) / n_waves), ``n_requeued`` (wave slots
+    pushed back to the queue because a commit landed mid-wave — the
+    one-version-per-wave invariant)."""
 
     def __init__(self, engine, n_slots: int = 64):
         if n_slots < 1:
@@ -138,6 +146,7 @@ class ServingEngine:
         self.n_deduped = 0
         self.n_waves = 0
         self.n_slots_used = 0
+        self.n_requeued = 0
 
     def submit(self, spec) -> int:
         """Enqueue one query; returns its ticket id. ``spec`` is a
@@ -160,14 +169,27 @@ class ServingEngine:
         admit up to ``n_slots`` unique uncached specs (identical
         in-flight specs collapse to one slot), run ONE batched dispatch,
         return every completed query keyed by ticket id. Queries beyond
-        the slot budget stay queued for the next window."""
+        the slot budget stay queued for the next window.
+
+        ONE-VERSION-PER-WAVE invariant: every ``ServedQuery`` of one
+        ``step()`` is tagged with — and answered from — a single
+        committed snapshot version. The version is captured up front
+        (``engine.snapshot_version()``, which settles lazily pending
+        evictions); if a commit lands between wave assembly and dispatch
+        (e.g. a concurrent ingest thread committing mid-wave) the
+        assembled slots are REQUEUED ahead of the backlog instead of
+        dispatched — cache hits already served this step carried the old
+        version honestly, and the requeued slots answer at the new
+        version next step. After the dispatch the version is asserted
+        unchanged, so a wave can never mix snapshots."""
         if not self._queue:
             return {}
         done: Dict[int, ServedQuery] = {}
         wave: List[Tuple[int, QuerySpec]] = []
         wave_keys: Dict[Tuple, int] = {}
         back: collections.deque = collections.deque()
-        version = self.engine._state_version
+        n_dup = 0
+        version = self.engine.snapshot_version()
         while self._queue:
             qid, spec = self._queue.popleft()
             hit = self.engine.cached_estimate(spec.treatment,
@@ -182,15 +204,28 @@ class ServingEngine:
                 back.append((qid, spec))     # next window
                 continue
             if key in wave_keys:
-                self.n_deduped += 1
+                n_dup += 1
             else:
                 wave_keys[key] = len(wave_keys)
-                self.n_slots_used += 1
             wave.append((qid, spec))
+        if wave and self.engine.snapshot_version() != version:
+            # a commit straddled this wave: these slots would answer from
+            # a NEWER snapshot than the cache hits above — requeue them
+            # (ahead of the over-budget backlog, preserving FIFO order)
+            self.n_requeued += len(wave)
+            self._queue = collections.deque(wave)
+            self._queue.extend(back)
+            self.n_served += len(done)
+            return done
         self._queue = back
         if wave:
             self.n_waves += 1
+            self.n_deduped += n_dup
+            self.n_slots_used += len(wave_keys)
             ests = self.engine.ate_batch([s for _, s in wave])
+            assert self.engine.snapshot_version() == version, (
+                "one-version-per-wave violated: engine state committed "
+                "during a batched query dispatch")
             for (qid, spec), est in zip(wave, ests):
                 done[qid] = ServedQuery(qid, spec, est, spec.select(est),
                                         cached=False, state_version=version)

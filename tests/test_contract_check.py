@@ -226,7 +226,55 @@ def test_zql006_quiet_in_cached_factories(tmp_path):
         """)) == []
 
 
-# ------------------------------------------- suppression / select / ignore
+# ------------------------------------------------------------ ZQL007
+def test_zql007_fires_on_sync_inside_dispatch_commit_window(tmp_path):
+    out = _lint_snippet(tmp_path, OWNED + _D("""\
+        import jax
+
+        class Engine:
+            def ingest(self, cols, valid, state, counter, n_batches):
+                prog = self._fused_program(False)
+                new_state, verdicts = prog(cols, valid, state, counter,
+                                           n_batches)
+                f = jax.device_get(verdicts)       # sync before commit
+                self._unpack_view_state(new_state)
+                return f
+        """))
+    assert _rules(out) == ["ZQL007"]
+    assert out[0].line == 9
+
+
+def test_zql007_fires_on_device_fetch_and_direct_factory_call(tmp_path):
+    out = _lint_snippet(tmp_path, OWNED + _D("""\
+        from repro.core.fused import get_fused_ingest
+        from repro.launch.trace import device_fetch
+
+        class Engine:
+            def ingest(self, cols, valid, state, counter, n_batches):
+                new_state, verdicts = get_fused_ingest()(
+                    cols, valid, state, counter, n_batches)
+                f = device_fetch(verdicts)
+                self.commit()
+                return f
+        """))
+    assert _rules(out) == ["ZQL007"]
+
+
+def test_zql007_quiet_when_commit_precedes_the_fetch(tmp_path):
+    assert _lint_snippet(tmp_path, OWNED + _D("""\
+        import jax
+
+        class Engine:
+            def ingest(self, cols, valid, state, counter, n_batches):
+                prog = self._fused_program(False)
+                new_state, verdicts = prog(cols, valid, state, counter,
+                                           n_batches)
+                self._unpack_view_state(new_state)  # commit closes window
+                return jax.device_get(verdicts)     # lazy verdict: fine
+
+            def report(self, verdicts):
+                return jax.device_get(verdicts)     # no open dispatch: fine
+        """)) == []
 def test_inline_suppression_drops_the_finding(tmp_path):
     out = _lint_snippet(tmp_path, OWNED + _D("""\
         import jax
@@ -322,7 +370,7 @@ def test_jaxpr_audit_full_matrix_passes():
     from repro.analysis.jaxpr_audit import run_audit
 
     results = run_audit()
-    assert len(results) == 18, [r.format() for r in results]
+    assert len(results) == 24, [r.format() for r in results]
     bad = [r.format() for r in results if not r.ok]
     assert not bad, bad
     contracts = {r.contract for r in results}
@@ -330,5 +378,7 @@ def test_jaxpr_audit_full_matrix_passes():
             "ingest-transfer-clean", "ingest-donation-runtime",
             "query-1-dispatch", "query-transfer-clean",
             "query-cached-0-dispatch", "batch-query-1-dispatch",
-            "evict-donation-runtime"} == contracts
+            "evict-donation-runtime", "overlap-ingest-0-sync",
+            "overlap-committed-buffers-live",
+            "overlap-commit-bit-identity"} == contracts
     assert {r.engine for r in results} == {"replicated", "partitioned"}

@@ -1,0 +1,277 @@
+"""MVCC snapshot versioning: overlap ingest vs query serving.
+
+Contracts under test (PR 8 — the cross-version stale/torn read fixes):
+
+  * DISPATCH-ONLY INGEST — with ``overlap=True`` every steady ingest is
+    ONE compiled dispatch and ZERO host syncs (the verdict scalars are
+    checked lazily at ``commit()``); the committed snapshot version does
+    not move while hops are in flight.
+  * SNAPSHOT ISOLATION — queries interleaved with uncommitted in-flight
+    ingests answer from (and are tagged with) the committed version,
+    bitwise equal to a twin engine that never saw the pending batches.
+  * ATOMIC COMMIT / ROLLBACK-AND-REPLAY — ``commit()`` advances the
+    version once per batch; a failed hop (delta overflow, capacity
+    growth) rolls back to the committed snapshot and replays every
+    in-flight batch in order, so the committed state is ALWAYS bitwise
+    identical to the synchronous pipeline's.
+  * ONE VERSION PER WAVE — a ``ServingEngine.step()`` whose wave
+    assembly straddles a commit REQUEUES the assembled slots instead of
+    mixing snapshots; every ``ServedQuery`` of one wave shares one
+    ``state_version``.
+  * SCOPED EVICTION INVALIDATION — ``evict()`` drops estimate-cache
+    entries ONLY for views with a nonzero evicted count; untouched-view
+    entries keep serving at zero dispatches. The eviction counts
+    themselves are fetched lazily (no blocking ``device_get`` on the
+    evict path).
+"""
+import numpy as np
+import pytest
+
+from repro.core import CoarsenSpec, OnlineEngine, PartitionedOnlineEngine
+from repro.core.serving import QuerySpec, ServingEngine
+from repro.data.columnar import Table
+from repro.launch.trace import (count_dispatches, count_host_syncs,
+                                host_sync_count)
+
+SPECS = {"x0": CoarsenSpec.categorical(5), "x1": CoarsenSpec.categorical(4),
+         "x2": CoarsenSpec.categorical(3)}
+TREATMENTS = {"ta": ["x0", "x1"], "tb": ["x0", "x2"]}
+EST_FIELDS = ("ate", "att", "variance", "n_matched_treated",
+              "n_matched_control", "n_groups")
+
+
+def _frame(n, seed=0, x0_hi=5):
+    rng = np.random.default_rng(seed)
+    cols = {"x0": rng.integers(0, x0_hi, n).astype(np.int32),
+            "x1": rng.integers(0, 4, n).astype(np.int32),
+            "x2": rng.integers(0, 3, n).astype(np.int32)}
+    cols["ta"] = (rng.random(n) < 0.2 + 0.5 * cols["x0"] / 4).astype(
+        np.int32)
+    cols["tb"] = (rng.random(n) < 0.4).astype(np.int32)
+    cols["y"] = np.round(2.0 * cols["ta"] + 1.5 * cols["x0"]
+                         + rng.normal(0, 0.5, n)).astype(np.float32)
+    return Table.from_numpy(cols, rng.random(n) > 0.08)
+
+
+def _twins(label, **kw):
+    """(overlap engine, synchronous twin) on one layout."""
+    if label == "replicated":
+        mk = lambda **k: OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                                      **k)
+    else:
+        mk = lambda **k: PartitionedOnlineEngine(SPECS, TREATMENTS, "y",
+                                                 granule=64, n_parts=2, **k)
+    return mk(overlap=True, **kw), mk(**kw)
+
+
+def _assert_bitwise(got, want, ctx):
+    for f in EST_FIELDS:
+        g, w = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert g.tobytes() == w.tobytes(), (ctx, f, g, w)
+
+
+# -------------------------------------------------- dispatch-only ingest
+@pytest.mark.parametrize("label", ["replicated", "partitioned"])
+def test_overlap_ingest_is_sync_free_and_snapshot_isolated(label):
+    eng, twin = _twins(label)
+    warm = _frame(256, seed=1)
+    eng.ingest(warm)
+    eng.commit()
+    twin.ingest(warm)
+    v0 = eng.snapshot_version()
+    before = eng.ate("ta")
+    assert before.state_version == v0
+
+    pendings = []
+    for i in range(3):
+        b = _frame(256, seed=10 + i)
+        with count_host_syncs() as s, count_dispatches() as n:
+            p = eng.ingest(b)
+        assert s() == 0, "overlap ingest must not sync the host"
+        assert n() == 1, "overlap ingest is one dispatch"
+        assert not p.committed
+        pendings.append((p, b))
+        # in-flight hops are invisible to queries: same version, same bits
+        assert eng.snapshot_version() == v0
+        mid = eng.ate("ta")
+        assert mid.state_version == v0
+        _assert_bitwise(mid, before, (label, "in-flight", i))
+
+    reports = eng.commit()
+    assert len(reports) == 3
+    assert all(p.committed for p, _ in pendings)
+    assert eng.snapshot_version() > v0
+    for _, b in pendings:
+        twin.ingest(b)
+    after = eng.ate("ta")
+    assert after.state_version == eng.snapshot_version()
+    _assert_bitwise(after, twin.ate("ta"), (label, "post-commit"))
+    # second commit with nothing in flight is a no-op
+    assert eng.commit() == []
+
+
+@pytest.mark.parametrize("label", ["replicated", "partitioned"])
+def test_overlap_rollback_replay_is_bit_identical(label):
+    # tiny delta capacity: wide batches overflow the in-flight delta, so
+    # commit() must roll back and replay every hop synchronously — the
+    # committed state is still bitwise the synchronous pipeline's
+    kw = dict(delta_granule=16)
+    eng, twin = _twins(label, **kw)
+    batches = [_frame(64, seed=2, x0_hi=1), _frame(460, seed=3),
+               _frame(128, seed=4)]
+    for b in batches:
+        eng.ingest(b)
+        twin.ingest(b)
+    eng.commit()
+    for t in sorted(TREATMENTS):
+        _assert_bitwise(eng.ate(t), twin.ate(t), (label, "replay", t))
+    assert eng.n_rows_ingested == twin.n_rows_ingested
+
+
+def test_overlap_pending_report_is_lazy_and_forces_commit():
+    eng, _ = _twins("replicated")
+    p1 = eng.ingest(_frame(256, seed=5))
+    p2 = eng.ingest(_frame(256, seed=6))
+    assert not p1.committed and not p2.committed
+    # reading any report field is a commit barrier for the WHOLE chain
+    assert p1.n_delta_groups > 0
+    assert p1.committed and p2.committed
+    assert len(eng._inflight) == 0
+
+
+def test_overlap_max_inflight_bounds_the_pipeline():
+    eng, _ = _twins("replicated", max_inflight=2)
+    for i in range(2):
+        eng.ingest(_frame(256, seed=20 + i))
+    assert len(eng._inflight) == 2
+    p = eng.ingest(_frame(256, seed=22))   # full: auto-commits, redispatches
+    assert len(eng._inflight) == 1 and not p.committed
+    eng.commit()
+
+
+def test_overlap_retract_flushes_the_pipeline_first():
+    eng, twin = _twins("replicated")
+    b0, b1 = _frame(256, seed=7), _frame(256, seed=8)
+    for b in (b0, b1):
+        eng.ingest(b)
+        twin.ingest(b)
+    eng.ingest(b1, retract=True)           # commit barrier + sync retract
+    twin.ingest(b1, retract=True)
+    assert len(eng._inflight) == 0
+    _assert_bitwise(eng.ate("ta"), twin.ate("ta"), "retract")
+
+
+# ---------------------------------------------------- one version per wave
+def test_serving_wave_requeues_when_a_commit_straddles_it():
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256,
+                       query_dims=("x0", "x1", "x2"))
+    eng.ingest(_frame(400, seed=30))
+    serving = ServingEngine(eng, n_slots=8)
+    specs = [QuerySpec.make("ta"), QuerySpec.make("tb"),
+             QuerySpec.make("ta", {"x2": [0]}),
+             QuerySpec.make("tb", {"x0": [1, 2]})]
+    qids = [serving.submit(s) for s in specs]
+
+    # a concurrent writer commits an ingest in the middle of wave
+    # assembly (modeled by hooking the per-query cache probe)
+    real = eng.cached_estimate
+    fired = {}
+
+    def racing_probe(treatment, subpopulation=None):
+        if not fired:
+            fired["yes"] = True
+            eng.ingest(_frame(300, seed=31))
+        return real(treatment, subpopulation)
+
+    eng.cached_estimate = racing_probe
+    done = serving.step()
+    eng.cached_estimate = real
+
+    assert done == {}                      # nothing mixed across versions
+    assert serving.n_requeued == len(specs)
+    assert serving.n_waves == 0 and serving.n_slots_used == 0
+    assert serving.pending() == len(specs)
+
+    v = eng.snapshot_version()
+    done = serving.step()                  # clean wave at the new version
+    assert sorted(done) == sorted(qids)
+    assert {r.state_version for r in done.values()} == {v}
+    assert serving.n_waves == 1 and serving.n_requeued == len(specs)
+    for qid, spec in zip(qids, specs):
+        _assert_bitwise(done[qid].estimate,
+                        eng.ate(spec.treatment,
+                                subpopulation=spec.subpopulation),
+                        ("requeued wave", qid))
+
+
+def test_serving_waves_share_one_version_over_an_overlap_engine():
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=256, overlap=True,
+                       query_dims=("x0", "x1", "x2"))
+    eng.ingest(_frame(400, seed=32))
+    eng.commit()
+    v0 = eng.snapshot_version()
+    serving = ServingEngine(eng, n_slots=8)
+    eng.ingest(_frame(300, seed=33))       # in flight, uncommitted
+    done = serving.serve([QuerySpec.make("ta"), QuerySpec.make("tb"),
+                          QuerySpec.make("ta")])
+    # in-flight hop is invisible: the wave serves the committed snapshot
+    assert {r.state_version for r in done} == {v0}
+    assert serving.n_requeued == 0
+    eng.commit()
+    done2 = serving.serve([QuerySpec.make("ta")])
+    assert done2[0].state_version == eng.snapshot_version() > v0
+
+
+# ----------------------------------------------- scoped, lazy eviction
+def _slice_frame(n, x1, seed):
+    """All rows in the (x0=4, x1=x1) slice: ta groups differ per x1,
+    tb groups (x0, x2) are shared across slices."""
+    rng = np.random.default_rng(seed)
+    cols = {"x0": np.full(n, 4, np.int32),
+            "x1": np.full(n, x1, np.int32),
+            "x2": rng.integers(0, 3, n).astype(np.int32)}
+    cols["ta"] = (rng.random(n) < 0.5).astype(np.int32)
+    cols["tb"] = (rng.random(n) < 0.5).astype(np.int32)
+    cols["y"] = rng.integers(0, 6, n).astype(np.float32)
+    return Table.from_numpy(cols)
+
+
+def test_evict_invalidation_is_scoped_to_touched_views():
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=64)
+    eng.ingest(_slice_frame(120, x1=3, seed=40))     # ta group (4,3): stale
+    eng.ingest(_slice_frame(120, x1=0, seed=41))     # keeps tb groups fresh
+    eng.ingest(_slice_frame(120, x1=0, seed=42))
+    cached_tb = eng.ate("tb")
+    eng.ate("ta")
+    ev = eng.evict(ttl=1)
+    assert ev["ta"] > 0 and ev["tb"] == 0
+    # tb was untouched by the eviction: its entry still serves from cache
+    with count_dispatches() as n:
+        again = eng.ate("tb")
+    assert n() == 0, "untouched-view cache entry must survive evict()"
+    _assert_bitwise(again, cached_tb, "tb cache after scoped evict")
+    # ta lost groups: its entry is gone and the query recomputes
+    with count_dispatches(label="query") as n:
+        est = eng.ate("ta")
+    assert n() == 1
+    assert int(est.n_groups) > 0
+
+
+def test_evict_counts_are_fetched_lazily():
+    eng = OnlineEngine(SPECS, TREATMENTS, "y", granule=64)
+    for i in range(3):
+        eng.ingest(_slice_frame(120, x1=i, seed=50 + i))
+    with count_host_syncs() as s:
+        ev = eng.evict(ttl=10_000)         # nothing stale: pure pass
+    assert s() == 0, "evict() must not block on the eviction counts"
+    base = host_sync_count("evict")
+    assert ev == {"__base__": 0, "ta": 0, "tb": 0}   # forces ONE fetch
+    assert host_sync_count("evict") == base + 1
+    # resolved reports are plain mappings; a second read is free
+    with count_host_syncs() as s:
+        assert dict(ev) == {"__base__": 0, "ta": 0, "tb": 0}
+    assert s() == 0
+    # a query is a sync point too: pending evictions settle before probe
+    eng.evict(ttl=10_000)
+    eng.ate("ta")
+    assert eng._pending_evict is None

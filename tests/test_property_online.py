@@ -32,7 +32,7 @@ from repro.core.cem import make_codec
 from repro.core.online import BASE_VIEW, _estimate_view
 from repro.core import cube
 from repro.data.columnar import Table, _round_capacity
-from repro.launch.trace import count_dispatches
+from repro.launch.trace import count_dispatches, count_host_syncs
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -355,11 +355,137 @@ def _seeded_ops(seed: int, n_ops: int = 10):
     return ops
 
 
+def run_stream_overlap(ops, n_parts: int, max_inflight: int = 3):
+    """The MVCC twin of :func:`run_stream`: the engines run with
+    ``overlap=True`` so every ingest is a dispatch-only hop against the
+    in-flight chain while the ORACLE DELIBERATELY LAGS — it applies a
+    batch only when the engines' commit barrier fires (explicit flush,
+    retract, evict, or the ``max_inflight`` auto-commit). Queries
+    interleaved with uncommitted in-flight ingests must therefore match
+    the lagging oracle bitwise AND carry the committed snapshot version;
+    dispatch-only ingests must perform ZERO host syncs."""
+    kw = dict(granule=64, delta_granule=16, query_dims=QUERY_DIMS,
+              reservoir_size=256, overlap=True, max_inflight=max_inflight)
+    engines = {
+        "replicated": OnlineEngine(SPECS, TREATMENTS, OUTCOME, **kw),
+        f"partitioned[{n_parts}]": PartitionedOnlineEngine(
+            SPECS, TREATMENTS, OUTCOME, n_parts=n_parts, **kw),
+    }
+    oracle = Oracle()
+    history = []
+    pending = []      # dispatched, uncommitted — the oracle's lag window
+    pendings = []     # every PendingIngest handed out, for end-of-stream
+    versions = {lb: eng.snapshot_version() for lb, eng in engines.items()}
+
+    def _sync_oracle():
+        for cols, valid in pending:
+            oracle.apply(cols, valid)
+        pending.clear()
+        for lb, eng in engines.items():
+            versions[lb] = eng.snapshot_version()
+
+    def flush():
+        for eng in engines.values():
+            eng.commit()
+        _sync_oracle()
+
+    for op, a, b, c in ops:
+        if op == 0:
+            cols, valid = _batch(40 + 60 * (a % 8), 1 + (b % 5), c)
+            batch = Table.from_numpy(cols, valid)
+            # a full pipeline auto-commits inside ingest() — a documented
+            # (and counted) sync point; below depth the hop must be free
+            will_auto = len(pending) >= max_inflight
+            for lb, eng in engines.items():
+                with count_host_syncs() as s:
+                    rep = eng.ingest(batch)
+                if not will_auto:
+                    assert s() == 0, (lb, "in-flight ingest must not sync")
+                assert not rep.committed, lb
+                pendings.append((lb, rep))
+            if will_auto:
+                _sync_oracle()
+            pending.append((cols, valid))
+            history.append((cols, valid))
+        elif op == 1:
+            if not history:
+                continue
+            cols, valid = history[a % len(history)]
+            flush()          # retraction is a commit barrier in the engine
+            batch = Table.from_numpy(cols, valid)
+            if oracle.can_retract(cols, valid):
+                for eng in engines.values():
+                    eng.ingest(batch, retract=True)
+                oracle.apply(cols, valid, retract=True)
+            else:
+                for eng in engines.values():
+                    with pytest.raises(ValueError):
+                        eng.ingest(batch, retract=True)
+                _check_state(oracle, engines, history)
+            for lb, eng in engines.items():
+                versions[lb] = eng.snapshot_version()
+        elif op == 2:
+            flush()
+            if b % 2:
+                continue     # plain commit barrier, no eviction
+            ttl = a % 3
+            for eng in engines.values():
+                eng.evict(ttl=ttl)
+            oracle.evict(ttl)
+            for lb, eng in engines.items():
+                versions[lb] = eng.snapshot_version()
+        else:
+            # queries serve the COMMITTED snapshot: bitwise equal to the
+            # lagging oracle, tagged with the unchanged committed version
+            t = TNAMES[a % len(TNAMES)]
+            sub = SUBPOPS[b % len(SUBPOPS)]
+            _check_query(oracle, engines, t, sub, qseed=c)
+            for lb, eng in engines.items():
+                assert eng.snapshot_version() == versions[lb], (
+                    lb, "in-flight ingests must not move the snapshot")
+                est = eng.ate(t, subpopulation=sub)
+                assert est.state_version == versions[lb], lb
+    flush()
+    assert all(rep.committed for _, rep in pendings)
+    _check_state(oracle, engines, history)
+    for i, t in enumerate(TNAMES):
+        _check_query(oracle, engines, t, None, qseed=i)
+
+
 @pytest.mark.parametrize("seed,n_parts", [
     (0, 1), (1, 2), (2, 4), (3, 2), (4, 3), (5, 4), (6, 2), (7, 4),
 ])
 def test_differential_stream_seeded(seed, n_parts):
     run_stream(_seeded_ops(seed), n_parts)
+
+
+@pytest.mark.parametrize("seed,n_parts", [(0, 1), (1, 2), (2, 4), (5, 2)])
+def test_differential_overlap_stream_seeded(seed, n_parts):
+    run_stream_overlap(_seeded_ops(seed, n_ops=12), n_parts)
+
+
+def test_differential_overlap_forced_paths():
+    # deterministic overlap stream that provably exercises: queries with
+    # 1 and 2 uncommitted hops in flight, the max_inflight auto-commit,
+    # the retract commit barrier, a wide in-flight batch whose delta
+    # overflow forces commit-time rollback-and-replay, a plain flush, and
+    # post-eviction queries — all against the lagging oracle
+    ops = [
+        (0, 2, 0, 21),      # hop 1 in flight
+        (3, 0, 1, 0),       # query at committed v0, 1 hop pending
+        (0, 2, 4, 22),      # hop 2 (novel keys) chained on hop 1
+        (3, 1, 2, 0),       # query still at v0, 2 hops pending
+        (0, 3, 4, 23),      # hop 3: pipeline full
+        (0, 1, 2, 24),      # 4th ingest -> auto-commit, then dispatch
+        (3, 1, 0, 0),       # query at the auto-committed version
+        (1, 0, 0, 0),       # retract batch 0: commit barrier + sync path
+        (0, 7, 4, 25),      # wide 460-row hop -> overflow verdict in flight
+        (2, 1, 1, 0),       # plain flush -> rollback-and-replay commits it
+        (3, 0, 0, 0),
+        (2, 1, 0, 0),       # evict ttl=1 (its own commit barrier)
+        (3, 1, 3, 0),       # post-eviction query
+    ]
+    run_stream_overlap(ops, 2)
 
 
 def test_differential_stream_forced_paths():
@@ -395,3 +521,10 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=12, deadline=None)
     def test_differential_stream_hypothesis(ops, n_parts):
         run_stream(ops, n_parts)
+
+    @given(ops=OPS, n_parts=st.integers(1, 4),
+           max_inflight=st.integers(1, 4))
+    @settings(max_examples=8, deadline=None)
+    def test_differential_overlap_stream_hypothesis(ops, n_parts,
+                                                    max_inflight):
+        run_stream_overlap(ops, n_parts, max_inflight=max_inflight)
