@@ -443,6 +443,89 @@ def main() -> None:
          f"waves={srv_sw.n_waves} (stop-the-world: per-batch verdict "
          "fetch + per-batch cache invalidation)")
 
+    # durability rows (PR 9): WAL journaling overhead on the steady-state
+    # ingest and cold crash recovery (newest checkpoint restore +
+    # in-order WAL-tail replay). Both overhead rows use the
+    # value-slot-=-ratio convention so the 1.5x guard trips when
+    # journaling stops being cheap. The CONTRACT row (< 1.15x) is the
+    # overlap configuration — the same steady-state regime every other
+    # claim in this file measures, where the fsync rides the commit
+    # barrier and amortizes over max_inflight batches; the _sync row is
+    # the per-record-fsync synchronous pipeline, which pays a full disk
+    # barrier per batch by design (informational).
+    import shutil
+    import tempfile
+
+    from repro.core import DurableEngine
+    bs_wal, k_wal = 4096, 8
+    wal_n = 1 << 14 if smoke() else 1 << 16
+    wal_base = Table.from_numpy(_gen(wal_n, seed=17))
+
+    def wal_round_secs(durable: bool, rounds: int = 8):
+        e = OnlineEngine.from_table(wal_base, SPECS, TREATMENTS, "y",
+                                    overlap=True, max_inflight=k_wal)
+        d = tempfile.mkdtemp(prefix="bench_wal_") if durable else None
+        eng = DurableEngine(e, d) if durable else e
+        feed = iter([Table.from_numpy(_gen(bs_wal, seed=7_000_000 + i))
+                     for i in range(k_wal * (WARMUP + rounds))])
+
+        def round_():
+            for _ in range(k_wal):
+                eng.ingest(next(feed))
+            eng.commit()
+        try:
+            for _ in range(WARMUP):
+                round_()
+            ts = []
+            for _ in range(rounds):
+                t0 = time.perf_counter()
+                round_()
+                ts.append(time.perf_counter() - t0)
+        finally:
+            if durable:
+                eng.close()
+                shutil.rmtree(d, ignore_errors=True)
+        return float(np.median(ts)) / k_wal
+    t_wplain = wal_round_secs(False)
+    t_wdur = wal_round_secs(True)
+    emit("online_wal_overhead", (t_wdur / max(t_wplain, 1e-12)) / 1e6,
+         f"durable={t_wdur * 1e3:.2f}ms plain={t_wplain * 1e3:.2f}ms "
+         f"per batch={bs_wal}, overlap commit every {k_wal} "
+         f"(value slot = ratio, contract < 1.15)")
+
+    plain = OnlineEngine.from_table(wal_base, SPECS, TREATMENTS, "y")
+    t_plain, _ = _ingest_latency(plain, bs_wal, seed0=4_000_000)
+    wal_dir = tempfile.mkdtemp(prefix="bench_wal_")
+    try:
+        dur = DurableEngine(
+            OnlineEngine.from_table(wal_base, SPECS, TREATMENTS, "y"),
+            wal_dir)
+        t_dur, _ = _ingest_latency(dur, bs_wal, seed0=5_000_000)
+        emit("online_wal_overhead_sync",
+             (t_dur / max(t_plain, 1e-12)) / 1e6,
+             f"durable={t_dur * 1e3:.2f}ms plain={t_plain * 1e3:.2f}ms "
+             f"batch={bs_wal} fsync-per-record (value slot = ratio)")
+        # recovery: a checkpoint plus a 3-batch WAL tail on disk, then
+        # rebuild a FRESH engine from that state (restore + replay)
+        dur.checkpoint(wait=True)
+        n_tail = 3
+        for i in range(n_tail):
+            dur.ingest(Table.from_numpy(_gen(bs_wal, seed=6_000_000 + i)))
+        dur.commit()
+        dur.close()
+
+        def recover():
+            d = DurableEngine.recover(
+                OnlineEngine(SPECS, TREATMENTS, "y"), wal_dir)
+            d.close()
+            return d
+        t_rec, _ = timeit(recover, warmup=1, iters=3)
+        emit("online_recover_secs", t_rec,
+             f"ckpt(n={wal_n}+{WARMUP + ITERS}x{bs_wal}) + "
+             f"{n_tail}-record WAL tail replay, cold engine")
+    finally:
+        shutil.rmtree(wal_dir, ignore_errors=True)
+
     # sharded ingest: per-batch latency per device-mesh size
     sweep_n = 1 << 15 if smoke() else 1 << 18
     device_counts = (1, 2) if smoke() else (1, 2, 4, 8)

@@ -8,6 +8,7 @@ from repro.analysis.rules import (
     zql005_pallas_alias,
     zql006_retrace,
     zql007_sync_before_commit,
+    zql008_wal_ordering,
 )
 
 RULES = [
@@ -18,6 +19,7 @@ RULES = [
     zql005_pallas_alias.RULE,
     zql006_retrace.RULE,
     zql007_sync_before_commit.RULE,
+    zql008_wal_ordering.RULE,
 ]
 
 RULE_IDS = [r.id for r in RULES]

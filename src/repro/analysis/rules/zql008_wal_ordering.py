@@ -1,0 +1,126 @@
+"""ZQL008 — commit acknowledged before its write-ahead-log append.
+
+Contract (docs/architecture.md — Durability & recovery): the WAL is only
+a recovery oracle if every acknowledged operation is journaled FIRST. In
+any engine-owned function that touches the log, a commit action — a
+``_state_version`` bump, a ``commit()`` / ``ingest()`` / ``evict()``
+dispatch into the wrapped engine, or a state swap
+(``_unpack_view_state`` / ``_post_state_swap``) — must come AFTER the
+function's WAL append/fsync: a crash between an early commit and a late
+append loses an acknowledged batch, silently breaking the
+restore-then-replay bit-identity guarantee. The fault-injection harness
+(``tests/fault_injection.py``) checks the same ordering dynamically by
+killing the process at each boundary; this rule catches an inverted
+ordering statically, before it ships.
+
+A WAL event is a method call whose receiver chain names the log
+(``self.wal.append_batch(...)``, ``log.sync()``, ``wal.append_evict``);
+``rotate``/``gc``/``read`` are bookkeeping, not durability points, and
+are deliberately NOT events (``checkpoint()`` legally rotates after its
+commit). The rule fires when the FIRST commit action in such a function
+precedes the FIRST WAL event in source order — the straight-line
+journaling protocols this rule guards execute in source order, exactly
+like ZQL007's dispatch windows.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple
+
+from repro.analysis.lint import Finding, ModuleContext
+from repro.analysis.rules import _common
+
+#: calls on a WAL-named receiver that constitute journaling (append or
+#: make-durable). rotate/gc/read/mark/rollback are bookkeeping.
+_WAL_METHODS = ("append", "append_batch", "append_evict", "sync")
+
+#: calls that acknowledge/commit the covered operation
+_COMMIT_CALLS = ("commit", "ingest", "evict", "_unpack_view_state",
+                 "_post_state_swap")
+
+
+def _receiver_names(node: ast.AST) -> Iterator[str]:
+    """Every identifier on an attribute chain: ``self.wal.sync`` ->
+    ("self", "wal", "sync")."""
+    while isinstance(node, ast.Attribute):
+        yield node.attr
+        node = node.value
+    if isinstance(node, ast.Name):
+        yield node.id
+
+
+def _is_wal_call(node: ast.Call) -> bool:
+    if not isinstance(node.func, ast.Attribute):
+        return False
+    if node.func.attr not in _WAL_METHODS:
+        return False
+    # the receiver (everything left of the method) must name the log
+    return any("wal" in name.lower() or "log" in name.lower()
+               for name in _receiver_names(node.func.value))
+
+
+def _version_bump_target(node: ast.AST) -> Optional[ast.AST]:
+    """The ``_state_version`` store in an (Aug)Assign, if any."""
+    targets = []
+    if isinstance(node, ast.Assign):
+        targets = node.targets
+    elif isinstance(node, ast.AugAssign):
+        targets = [node.target]
+    for tgt in targets:
+        if isinstance(tgt, ast.Attribute) and tgt.attr == "_state_version":
+            return tgt
+        if isinstance(tgt, ast.Name) and tgt.id == "_state_version":
+            return tgt
+    return None
+
+
+def _events(fn: ast.AST, aliases) -> List[Tuple[Tuple[int, int], str,
+                                                ast.AST]]:
+    events = []
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            tgt = _version_bump_target(node)
+            if tgt is not None:
+                events.append(((node.lineno, node.col_offset),
+                               "commit", node))
+            continue
+        if not isinstance(node, ast.Call):
+            continue
+        pos = (node.lineno, node.col_offset)
+        if _is_wal_call(node):
+            events.append((pos, "wal", node))
+            continue
+        canon = _common.call_canonical(node, aliases)
+        if canon and _common.matches(canon, *_COMMIT_CALLS):
+            events.append((pos, "commit", node))
+    events.sort(key=lambda e: e[0])
+    return events
+
+
+class Rule:
+    id = "ZQL008"
+    summary = "commit acknowledged before its WAL append/fsync"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not ctx.engine_owned:
+            return
+        aliases = _common.import_aliases(ctx.tree)
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            events = _events(fn, aliases)
+            first_wal = next((e for e in events if e[1] == "wal"), None)
+            if first_wal is None:
+                continue                    # function never journals
+            first_commit = next((e for e in events if e[1] == "commit"),
+                                None)
+            if first_commit is not None and first_commit[0] < first_wal[0]:
+                yield ctx.finding(
+                    first_commit[2], self.id,
+                    f"`{fn.name}` acknowledges a commit (line "
+                    f"{first_commit[0][0]}) before its WAL append/fsync "
+                    f"(line {first_wal[0][0]}) — a crash in between loses "
+                    "an acknowledged operation; journal first")
+
+
+RULE = Rule()

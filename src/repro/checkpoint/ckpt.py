@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import json
 import os
+import random
+import re
 import shutil
 import threading
 import time
@@ -28,6 +30,16 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.launch import trace
+
+# A published step dir is exactly "step_<digits>"; in-flight writes live in
+# "step_<digits>.tmp<p>".  Both _gc and latest_step must use THIS pattern:
+# a suffix test like endswith(".tmp") misses ".tmp0"/".tmp1", so a crashed
+# save would leak its tmp dir forever AND (sorting after "step_N") push the
+# newest good checkpoint out of the keep-last window.
+_STEP_RE = re.compile(r"^step_(\d+)$")
+_TMP_RE = re.compile(r"^step_(\d+)\.tmp(\d+)$")
 
 
 def _tree_paths(tree) -> List[Tuple[str, Any]]:
@@ -44,6 +56,7 @@ def save(state, step: int, directory: str, process_index: int = 0,
          keep_last: int = 3) -> str:
     """Synchronous checkpoint write. Returns the published path."""
     os.makedirs(directory, exist_ok=True)
+    _clean_orphans(directory, process_index)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + f".tmp{process_index}"
     os.makedirs(tmp, exist_ok=True)
@@ -71,22 +84,55 @@ def save(state, step: int, directory: str, process_index: int = 0,
 
 
 class AsyncSaver:
-    """Background-thread checkpoint writer; at most one in flight."""
+    """Background-thread checkpoint writer; at most one in flight.
 
-    def __init__(self):
+    Transient ``OSError``s during the background write (NFS hiccup, disk
+    pressure) are retried up to ``max_retries`` times with exponential
+    backoff and jitter before the save is declared failed.  Retries and
+    terminal failures are counted on the instance (``n_retries`` /
+    ``n_failures``) and in the process-global ``launch.trace`` event
+    accounting (``ckpt_save_retry`` / ``ckpt_save_failure``) — the writer
+    runs off-thread, so the thread-local dispatch counters never see it.
+    """
+
+    def __init__(self, max_retries: int = 3, backoff: float = 0.05,
+                 jitter: float = 0.5, seed: int = 0):
         self._thread: Optional[threading.Thread] = None
         self.last_path: Optional[str] = None
         self.error: Optional[BaseException] = None
+        self.max_retries = int(max_retries)
+        self.backoff = float(backoff)
+        self.jitter = float(jitter)
+        self.n_retries = 0
+        self.n_failures = 0
+        self._rng = random.Random(seed)
 
     def save(self, state, step: int, directory: str, **kw):
         self.wait()
         host_state = jax.tree.map(lambda x: np.asarray(x), state)
 
         def run():
-            try:
-                self.last_path = save(host_state, step, directory, **kw)
-            except BaseException as e:  # surfaced on next wait()
-                self.error = e
+            delay = self.backoff
+            last: Optional[BaseException] = None
+            for attempt in range(self.max_retries + 1):
+                try:
+                    self.last_path = save(host_state, step, directory, **kw)
+                    return
+                except OSError as e:       # transient: retry with backoff
+                    last = e
+                    if attempt == self.max_retries:
+                        break
+                    self.n_retries += 1
+                    trace.record_event("ckpt_save_retry")
+                    time.sleep(delay * (1.0 + self.jitter
+                                        * self._rng.random()))
+                    delay *= 2.0
+                except BaseException as e:  # surfaced on next wait()
+                    last = e
+                    break
+            self.error = last               # surfaced on next wait()
+            self.n_failures += 1
+            trace.record_event("ckpt_save_failure")
 
         self._thread = threading.Thread(target=run, daemon=True)
         self._thread.start()
@@ -100,9 +146,17 @@ class AsyncSaver:
             raise e
 
 
+def _clean_orphans(directory: str, process_index: int) -> None:
+    """Remove tmp dirs this process abandoned (crash mid-save).  Only OUR
+    process_index suffix is touched — another process may be mid-write."""
+    for d in os.listdir(directory):
+        m = _TMP_RE.match(d)
+        if m and m.group(2) == str(process_index):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
 def _gc(directory: str, keep_last: int):
-    steps = sorted(d for d in os.listdir(directory)
-                   if d.startswith("step_") and not d.endswith(".tmp"))
+    steps = sorted(d for d in os.listdir(directory) if _STEP_RE.match(d))
     for d in steps[:-keep_last] if keep_last else []:
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
@@ -110,9 +164,8 @@ def _gc(directory: str, keep_last: int):
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")
-             and "." not in d.split("_")[1]]
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             for m in [_STEP_RE.match(d)] if m]
     return max(steps) if steps else None
 
 

@@ -26,7 +26,9 @@ from repro.core.pushdown import (PushdownResult, cem_join_pushdown,
                                  cem_overlap_filter)
 from repro.core.prepare import PreparedDatabase, prepare
 from repro.core.online import (DeltaReport, OnlineEngine,
-                               PartitionedOnlineEngine)
+                               PartitionedOnlineEngine, PoisonBatchError)
+from repro.core.wal import BatchLog, WalCorruption
+from repro.core.durability import DurableEngine
 
 __all__ = [
     "CoarsenSpec", "coarsen", "coarsen_columns", "KeyCodec", "groupby",
@@ -39,5 +41,6 @@ __all__ = [
     "knn_quadratic", "knn_sorted_1d", "nnmnr", "nnmwr", "nnmwr_att",
     "features", "mahalanobis_transform", "masked_covariance",
     "pairwise_sqdist", "ps_distance_features", "DeltaReport", "OnlineEngine",
-    "PartitionedOnlineEngine",
+    "PartitionedOnlineEngine", "PoisonBatchError", "BatchLog",
+    "WalCorruption", "DurableEngine",
 ]

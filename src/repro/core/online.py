@@ -166,6 +166,13 @@ def _bucket_specs(n: int) -> int:
 SubPop = Optional[Mapping[str, Sequence[int]]]
 
 
+class PoisonBatchError(ValueError):
+    """A streamed batch failed host-side validation BEFORE any dispatch,
+    WAL append or state mutation: the engine's committed state, snapshot
+    version, estimate cache and in-flight MVCC chain are all untouched
+    (exception safety asserted by ``tests/test_online_recovery.py``)."""
+
+
 def _freeze_subpop(subpopulation: SubPop):
     """Canonical hashable form of a subpopulation predicate: ``((dim,
     (bucket, ...)), ...)`` sorted, or None. Idempotent — accepts either
@@ -714,6 +721,7 @@ class OnlineEngine:
         the pipeline first (its guard must validate eagerly against
         committed state).
         """
+        self.validate_batch(batch, retract=retract)
         self._resolve_evictions()
         self._guard_retract_rows(retract)
         if self.overlap and retract:
@@ -730,6 +738,68 @@ class OnlineEngine:
                                       overflow, retract, orig=batch)
         return self._ingest_unfused(padded, hi, lo, stats, gv, n_full,
                                     overflow, retract, orig=batch)
+
+    def validate_batch(self, batch: Table, retract: bool = False) -> None:
+        """Poison-batch quarantine: host-side schema/content validation of
+        one streamed batch, run as the FIRST step of :meth:`ingest` —
+        before any device dispatch, WAL append or state mutation — so a
+        rejected batch provably leaves the committed state, the snapshot
+        version, the estimate cache and any in-flight MVCC chain
+        untouched, and never reaches a durable-engine journal.
+
+        Rejected (raises :class:`PoisonBatchError`): missing or
+        wrong-length columns, non-numeric dtypes, NaN/±inf outcomes,
+        non-0/1 treatment indicators, non-finite covariates, and
+        categorical codes outside ``[0, n_buckets)``.  Checks apply to
+        VALID rows only — padding rows are masked everywhere downstream.
+        The column pulls are explicit host reads of the caller's batch
+        (never of in-flight engine state), so the overlap ingest path
+        stays clean under ``jax.transfer_guard("disallow")`` and the
+        host-sync counter."""
+        del retract                      # same validation both directions
+        cols = batch.columns
+        missing = [c for c in self._row_cols if c not in cols]
+        if missing:
+            raise PoisonBatchError(f"batch is missing columns {missing}")
+        n = batch.nrows
+        valid = np.asarray(batch.valid)
+        if valid.shape != (n,):
+            raise PoisonBatchError(
+                f"valid mask has shape {valid.shape}, want ({n},)")
+        host = {}
+        for c in self._row_cols:
+            a = np.asarray(cols[c])
+            if a.ndim != 1 or a.shape[0] != n:
+                raise PoisonBatchError(
+                    f"column {c!r} has shape {a.shape}, want ({n},)")
+            if not (np.issubdtype(a.dtype, np.number)
+                    or a.dtype == np.bool_):
+                raise PoisonBatchError(
+                    f"column {c!r} has non-numeric dtype {a.dtype}")
+            host[c] = a
+        v = valid.astype(bool)
+        if not v.any():
+            return
+        y = host[self.outcome][v].astype(np.float64)
+        if not np.isfinite(y).all():
+            raise PoisonBatchError(
+                f"non-finite outcome values in column {self.outcome!r}")
+        for t in sorted(self.treatments):
+            tv = host[t][v].astype(np.float64)
+            if not (np.isfinite(tv).all()
+                    and np.isin(tv, (0.0, 1.0)).all()):
+                raise PoisonBatchError(
+                    f"treatment column {t!r} must be a 0/1 indicator")
+        for d, spec in self.specs.items():
+            b = host[d][v].astype(np.float64)
+            if not np.isfinite(b).all():
+                raise PoisonBatchError(
+                    f"non-finite values in covariate {d!r}")
+            if spec.kind == "categorical" and (
+                    (b < 0).any() or (b >= spec.n_buckets).any()):
+                raise PoisonBatchError(
+                    f"covariate {d!r} codes out of range "
+                    f"[0, {spec.n_buckets})")
 
     @staticmethod
     def _bucket_pad(batch: Table) -> Table:
@@ -1722,6 +1792,198 @@ class OnlineEngine:
         self.models[treatment] = model
         return model
 
+    # ------------------------------------------- durability (canonical)
+    def schema_fingerprint(self) -> str:
+        """Stable description of the engine's coarsening schema — a
+        checkpoint taken under one fingerprint only restores into engines
+        with the SAME fingerprint (layout/partition count/mesh are free to
+        differ; the schema is not)."""
+        return repr((tuple(sorted(self.specs.items())),
+                     tuple(sorted(self.treatments.items())), self.outcome,
+                     tuple(sorted(self.query_dims)), self.seed,
+                     0 if self.stream is None else self.stream.capacity))
+
+    def export_canonical(self) -> dict:
+        """Layout-free snapshot of the committed engine state, on host.
+
+        Every view is exported as its CANONICAL content: the valid groups
+        (including exactly-retracted zero-count groups — they are live
+        groups and dropping them would change later fast/slow merge
+        decisions), globally key-sorted, with their stat columns, overlap
+        keep, and touch stamps; plus the streaming-propensity reservoir,
+        the optional row log, the estimate cache and the version/counter
+        scalars.  Because estimates are functions of canonical group
+        content alone, this snapshot restores into ANY engine layout —
+        replicated or partitioned at any ``n_parts``/device count — with
+        bit-identical queries (:meth:`install_canonical`).
+
+        Commits the in-flight MVCC chain first (a checkpoint is a commit
+        barrier) and fetches the committed buffers with ONE labeled
+        ``device_fetch`` — the sync lives HERE, never on the ingest path.
+        """
+        self.commit()
+        self._resolve_evictions()
+        tnames = tuple(sorted(self.treatments))
+        fetch = {}
+        for name in (BASE_VIEW, *tnames):
+            tab = self._view_table(name)
+            entry = dict(hi=tab.key_hi, lo=tab.key_lo,
+                         stats=dict(tab.stats), gv=tab.group_valid,
+                         touch=self._touch[name])
+            if name != BASE_VIEW:
+                entry["keep"] = self.views[name].keep
+            fetch[name] = entry
+        if self.stream is not None:
+            s = self.stream
+            fetch["__stream__"] = dict(res=dict(s.columns), pri=s.priority,
+                                       n=s.n, sums=dict(s.sums),
+                                       sumsqs=dict(s.sumsqs))
+        if self.rows is not None:
+            fetch["__rows__"] = dict(cols=dict(self.rows.table.columns),
+                                     valid=self.rows.table.valid)
+        host = device_fetch(fetch, label="checkpoint")
+        views = {}
+        for name in (BASE_VIEW, *tnames):
+            h = host[name]
+            gv = np.asarray(h["gv"]).reshape(-1).astype(bool)
+            hi = np.asarray(h["hi"]).reshape(-1)[gv]
+            lo = np.asarray(h["lo"]).reshape(-1)[gv]
+            order = np.lexsort((lo, hi))
+            view = dict(
+                hi=np.ascontiguousarray(hi[order]),
+                lo=np.ascontiguousarray(lo[order]),
+                touch=np.ascontiguousarray(
+                    np.asarray(h["touch"]).reshape(-1)[gv][order]),
+                stats={k: np.ascontiguousarray(
+                    np.asarray(c).reshape(-1)[gv][order])
+                    for k, c in h["stats"].items()})
+            if name != BASE_VIEW:
+                view["keep"] = np.ascontiguousarray(
+                    np.asarray(h["keep"]).reshape(-1)[gv][order])
+            views[name] = view
+        snap = dict(views=views, scalars=dict(
+            state_version=int(self._state_version),
+            ingest_count=int(self._ingest_count),
+            n_rows_ingested=int(self.n_rows_ingested),
+            delta_cap=int(self._delta_cap)))
+        if self.stream is not None:
+            hs = host["__stream__"]
+            snap["stream"] = dict(
+                res={k: np.asarray(a) for k, a in hs["res"].items()},
+                pri=np.asarray(hs["pri"]), n=np.asarray(hs["n"]),
+                sums={k: np.asarray(a) for k, a in hs["sums"].items()},
+                sumsqs={k: np.asarray(a)
+                        for k, a in hs["sumsqs"].items()},
+                n_batches=int(self.stream.n_batches),
+                capacity=int(self.stream.capacity))
+        if self.rows is not None:
+            hr = host["__rows__"]
+            used = self.rows.used
+            snap["rows"] = dict(
+                cols={k: np.asarray(a)[:used]
+                      for k, a in hr["cols"].items()},
+                valid=np.asarray(hr["valid"])[:used])
+        snap["cache"] = tuple(
+            (t, sub, dict(ate=e.ate, att=e.att,
+                          n_matched_treated=e.n_matched_treated,
+                          n_matched_control=e.n_matched_control,
+                          n_groups=e.n_groups, variance=e.variance,
+                          state_version=int(e.state_version)))
+            for (t, sub), e in sorted(self._cache.items(),
+                                      key=lambda kv: repr(kv[0])))
+        snap["fingerprint"] = self.schema_fingerprint()
+        return snap
+
+    def install_canonical(self, snap: dict) -> None:
+        """Install an :meth:`export_canonical` snapshot into THIS engine.
+
+        The engine must be freshly constructed (nothing ingested) with
+        the same schema fingerprint; its layout is free to differ from
+        the exporter's — the per-view install hook (:meth:`_install_view`)
+        re-materializes the canonical content under the local layout
+        (replicated: one padded sorted table; partitioned: scattered to
+        owner partitions by key hash, sorted per partition), and the
+        bit-identity contract makes every query agree with the exporting
+        engine bitwise."""
+        if snap.get("fingerprint") != self.schema_fingerprint():
+            raise ValueError(
+                "checkpoint schema mismatch: snapshot fingerprint "
+                f"{snap.get('fingerprint')!r} != engine "
+                f"{self.schema_fingerprint()!r}")
+        if self._ingest_count or self.n_rows_ingested or self._inflight:
+            raise ValueError(
+                "install_canonical requires a freshly constructed engine")
+        tnames = tuple(sorted(self.treatments))
+        for name in (BASE_VIEW, *tnames):
+            self._install_view(name, snap["views"][name])
+        stream = snap.get("stream")
+        if (stream is None) != (self.stream is None):
+            raise ValueError("snapshot/engine reservoir config mismatch "
+                             "(reservoir_size)")
+        if stream is not None:
+            self.stream = dataclasses.replace(
+                self.stream,
+                columns={k: jnp.asarray(a)
+                         for k, a in stream["res"].items()},
+                priority=jnp.asarray(stream["pri"]),
+                n=jnp.asarray(stream["n"]),
+                sums={k: jnp.asarray(a)
+                      for k, a in stream["sums"].items()},
+                sumsqs={k: jnp.asarray(a)
+                        for k, a in stream["sumsqs"].items()},
+                n_batches=int(stream["n_batches"]))
+        rows = snap.get("rows")
+        if (rows is None) != (self.rows is None):
+            raise ValueError("snapshot/engine row-log config mismatch "
+                             "(keep_rows)")
+        if rows is not None:
+            self.rows = GrowableTable.from_table(
+                Table.from_numpy(dict(rows["cols"]),
+                                 np.asarray(rows["valid"])),
+                granule=self.row_granule)
+        self._cache = {}
+        for t, sub, est in snap.get("cache", ()):
+            key = (t, _freeze_subpop(sub) if sub else None)
+            self._cache[key] = ATEEstimate(**est)
+        sc = snap["scalars"]
+        self._ingest_count = int(sc["ingest_count"])
+        self.n_rows_ingested = int(sc["n_rows_ingested"])
+        self._delta_cap = int(sc["delta_cap"])
+        self._state_version = int(sc["state_version"])
+
+    def _install_view(self, name: str, v: dict) -> None:
+        """Re-materialize one canonical view under the replicated layout:
+        valid groups as a sorted prefix, invalid-key padding to the
+        granule-rounded capacity (the same convention empty/merged tables
+        use, so the next ingest merges against it transparently)."""
+        from repro.core.keys import INVALID_HI, INVALID_LO
+        tab = self._view_table(name)
+        n = int(np.asarray(v["hi"]).shape[0])
+        cap = _round_capacity(max(n, 1), self.granule)
+        hi = np.full((cap,), INVALID_HI, np.uint32)
+        lo = np.full((cap,), INVALID_LO, np.uint32)
+        gv = np.zeros((cap,), bool)
+        hi[:n], lo[:n], gv[:n] = v["hi"], v["lo"], True
+        stats = {}
+        for k, col in v["stats"].items():
+            a = np.zeros((cap,), np.asarray(col).dtype)
+            a[:n] = col
+            stats[k] = jnp.asarray(a)
+        cub = dataclasses.replace(
+            tab, key_hi=jnp.asarray(hi), key_lo=jnp.asarray(lo),
+            stats=stats, group_valid=jnp.asarray(gv))
+        touch = np.zeros((cap,), np.int32)
+        touch[:n] = v["touch"]
+        if name == BASE_VIEW:
+            self.base = cub
+        else:
+            view = self.views[name]
+            view.set_table(cub)
+            keep = np.zeros((cap,), bool)
+            keep[:n] = v["keep"]
+            view.keep = jnp.asarray(keep)
+        self._touch[name] = jnp.asarray(touch)
+
     # -------------------------------------------------------------- state
     def stats(self) -> Dict[str, Dict[str, int]]:
         """Materialized-state summary (for benchmarks and demos)."""
@@ -1929,6 +2191,7 @@ class PartitionedOnlineEngine(OnlineEngine):
         :meth:`OnlineEngine.ingest` bit for bit — including the
         ``overlap=True`` MVCC protocol (dispatch-only, lazy verdicts,
         commit-time rollback-and-replay)."""
+        self.validate_batch(batch, retract=retract)
         self._resolve_evictions()
         self._guard_retract_rows(retract)
         if self.overlap and retract:
@@ -2067,6 +2330,59 @@ class PartitionedOnlineEngine(OnlineEngine):
         return DeltaReport(n_rows=orig.nrows,
                            n_delta_groups=int(fetched["n_delta"]),
                            fast_path=fast, invalidated=invalidated)
+
+    # ------------------------------------------- durability (canonical)
+    def _install_view(self, name: str, v: dict) -> None:
+        """Re-materialize one canonical view under the partitioned layout:
+        scatter the globally key-sorted groups to their owner partitions
+        (the owner is the same pure key-hash function deltas route by, so
+        a replicated checkpoint restores into ANY ``n_parts``), keep each
+        partition's slice sorted (global key order restricted to one
+        partition stays sorted — partition ids are monotone in the key),
+        and pad every partition to one shared granule-rounded capacity."""
+        from repro.core.keys import INVALID_HI, INVALID_LO
+        tab = self._view_table(name)
+        hi_c = np.asarray(v["hi"], np.uint32)
+        lo_c = np.asarray(v["lo"], np.uint32)
+        n = int(hi_c.shape[0])
+        P = self.n_parts
+        if n:
+            pid = np.asarray(cube_mod.partition_ids(hi_c, lo_c, P))
+            counts = np.bincount(pid, minlength=P)
+        else:
+            pid = np.zeros((0,), np.int64)
+            counts = np.zeros((P,), np.int64)
+        cap = _round_capacity(max(int(counts.max()), 1),
+                              self._part_granule)
+        hi = np.full((P, cap), INVALID_HI, np.uint32)
+        lo = np.full((P, cap), INVALID_LO, np.uint32)
+        gv = np.zeros((P, cap), bool)
+        touch = np.zeros((P, cap), np.int32)
+        keep = np.zeros((P, cap), bool)
+        stats = {k: np.zeros((P, cap), np.asarray(c).dtype)
+                 for k, c in v["stats"].items()}
+        for p in range(P):
+            idx = np.nonzero(pid == p)[0]
+            k = len(idx)
+            if not k:
+                continue
+            hi[p, :k], lo[p, :k], gv[p, :k] = hi_c[idx], lo_c[idx], True
+            touch[p, :k] = np.asarray(v["touch"])[idx]
+            for sk, c in v["stats"].items():
+                stats[sk][p, :k] = np.asarray(c)[idx]
+            if name != BASE_VIEW:
+                keep[p, :k] = np.asarray(v["keep"])[idx]
+        pcub = self._place(dataclasses.replace(
+            tab, key_hi=jnp.asarray(hi), key_lo=jnp.asarray(lo),
+            stats={k: jnp.asarray(a) for k, a in stats.items()},
+            group_valid=jnp.asarray(gv)))
+        if name == BASE_VIEW:
+            self.base = pcub
+        else:
+            view = self.views[name]
+            view.set_table(pcub)
+            view.keep = self._place(jnp.asarray(keep))
+        self._touch[name] = self._place(jnp.asarray(touch))
 
     # ------------------------------------------------ capacity shrink pass
     def _shrink_granule(self) -> int:

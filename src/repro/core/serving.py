@@ -113,6 +113,10 @@ class ServedQuery:
     value: float
     cached: bool
     state_version: int
+    #: answered while the engine was still replaying its WAL tail after a
+    #: crash recovery (``DurableEngine.degraded``) — the estimate reflects
+    #: the restored snapshot, not yet the full journaled stream.
+    degraded: bool = False
 
 
 class ServingEngine:
@@ -132,13 +136,29 @@ class ServingEngine:
     ``n_slots_used`` (total slots across waves — requests-per-dispatch =
     (n_served - n_cache_served) / n_waves), ``n_requeued`` (wave slots
     pushed back to the queue because a commit landed mid-wave — the
-    one-version-per-wave invariant)."""
+    one-version-per-wave invariant), ``n_shed`` (oldest queries dropped
+    because the bounded queue overflowed).
 
-    def __init__(self, engine, n_slots: int = 64):
+    ``max_queue`` bounds the submit queue (None = unbounded): when a new
+    submit would exceed it the OLDEST pending query is shed and counted —
+    backpressure for degraded-mode recovery, where replay throttles
+    serving and an unbounded backlog would only answer stale questions.
+
+    Degraded mode: when ``engine`` exposes a truthy ``degraded`` flag
+    (``repro.core.durability.DurableEngine`` during post-crash WAL
+    replay), every :class:`ServedQuery` of the wave is tagged
+    ``degraded=True`` — answers come from the restored snapshot at its
+    ``state_version``, honestly labeled as not yet caught up."""
+
+    def __init__(self, engine, n_slots: int = 64,
+                 max_queue: Optional[int] = None):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None)")
         self.engine = engine
         self.n_slots = int(n_slots)
+        self.max_queue = None if max_queue is None else int(max_queue)
         self._queue: collections.deque = collections.deque()
         self._next_qid = 0
         self.n_served = 0
@@ -147,16 +167,23 @@ class ServingEngine:
         self.n_waves = 0
         self.n_slots_used = 0
         self.n_requeued = 0
+        self.n_shed = 0
 
     def submit(self, spec) -> int:
         """Enqueue one query; returns its ticket id. ``spec`` is a
         :class:`QuerySpec` or anything ``QuerySpec.make`` accepts as
-        ``(treatment, subpopulation)``."""
+        ``(treatment, subpopulation)``. With a bounded queue the OLDEST
+        pending query is shed (and ``n_shed`` bumped) to admit this one —
+        its ticket id will simply never appear in a ``step()`` result."""
         if not isinstance(spec, QuerySpec):
             treatment, sub = spec
             spec = QuerySpec.make(treatment, sub)
         qid = self._next_qid
         self._next_qid += 1
+        if self.max_queue is not None:
+            while len(self._queue) >= self.max_queue:
+                self._queue.popleft()
+                self.n_shed += 1
         self._queue.append((qid, spec))
         return qid
 
@@ -190,6 +217,7 @@ class ServingEngine:
         back: collections.deque = collections.deque()
         n_dup = 0
         version = self.engine.snapshot_version()
+        degraded = bool(getattr(self.engine, "degraded", False))
         while self._queue:
             qid, spec = self._queue.popleft()
             hit = self.engine.cached_estimate(spec.treatment,
@@ -197,7 +225,8 @@ class ServingEngine:
             if hit is not None:
                 self.n_cache_served += 1
                 done[qid] = ServedQuery(qid, spec, hit, spec.select(hit),
-                                        cached=True, state_version=version)
+                                        cached=True, state_version=version,
+                                        degraded=degraded)
                 continue
             key = (spec.treatment, spec.subpopulation)
             if key not in wave_keys and len(wave_keys) >= self.n_slots:
@@ -228,7 +257,8 @@ class ServingEngine:
                 "during a batched query dispatch")
             for (qid, spec), est in zip(wave, ests):
                 done[qid] = ServedQuery(qid, spec, est, spec.select(est),
-                                        cached=False, state_version=version)
+                                        cached=False, state_version=version,
+                                        degraded=degraded)
         self.n_served += len(done)
         return done
 

@@ -1,0 +1,310 @@
+"""Write-ahead batch log for the online engines.
+
+Every state-mutating stream operation (``ingest``, ``retract``, ``evict``)
+is journaled to an append-only segment file BEFORE its commit barrier
+acknowledges, so a crashed engine can be rebuilt bitwise: restore the last
+good checkpoint, then replay the WAL tail in order through the normal
+ingest path.  Because estimates are deterministic functions of canonical
+group content alone (the bit-identity contract), restore-then-replay is
+bitwise equal to the never-crashed twin.
+
+Record format (little-endian), one record per operation::
+
+    magic   u32   0x5A51_574C ("ZQWL")
+    kind    u8    1 = INGEST, 2 = RETRACT, 3 = EVICT
+    seq     u64   monotonically increasing, never reused
+    len     u32   payload byte length
+    crc     u32   crc32 of payload
+    hcrc    u32   crc32 of the 21 header bytes above
+    payload len bytes
+
+Batch payloads are a JSON column header (names, dtypes, row count, valid
+bitmap dtype) followed by the raw column bytes in header order — built from
+HOST numpy data, so appending a record never touches a device buffer (the
+ingest hot path stays transfer-clean).  Evict payloads are a small JSON
+object (``{"ttl": n}``).
+
+Durability rule: ``append_*`` writes and flushes; :meth:`BatchLog.sync`
+fsyncs.  The durable engine fsyncs before the commit barrier acknowledges
+(per-record in synchronous mode, once per commit barrier in MVCC overlap
+mode — either way no commit is acknowledged before its records are on
+disk; lint rule ZQL008 checks the ordering statically).
+
+Segments are named ``wal-<startseq>.log``; :meth:`BatchLog.rotate` starts
+a new segment (called at checkpoint publish) and :meth:`BatchLog.gc`
+deletes segments made redundant by a DURABLE checkpoint.  The reader
+tolerates a torn tail (a truncated or CRC-bad final record is discarded);
+corruption in the middle of the log — a bad record with a valid record
+after it — raises :class:`WalCorruption`, because silently skipping a
+record would break replay bit-identity.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = 0x5A51574C
+KIND_INGEST = 1
+KIND_RETRACT = 2
+KIND_EVICT = 3
+
+_HEADER = struct.Struct("<IBQII")       # magic, kind, seq, len, crc
+_HCRC = struct.Struct("<I")             # crc32 of the header bytes
+_HEADER_SIZE = _HEADER.size + _HCRC.size
+
+
+class WalCorruption(IOError):
+    """A WAL record failed validation with valid records after it."""
+
+
+def _encode_batch(columns: Dict[str, np.ndarray],
+                  valid: np.ndarray) -> bytes:
+    cols = {name: np.ascontiguousarray(a) for name, a in columns.items()}
+    v = np.ascontiguousarray(np.asarray(valid))
+    header = {
+        "nrows": int(v.shape[0]),
+        "valid_dtype": str(v.dtype),
+        "columns": [[name, str(a.dtype)] for name, a in cols.items()],
+    }
+    hb = json.dumps(header, sort_keys=True).encode()
+    parts = [struct.pack("<I", len(hb)), hb, v.tobytes()]
+    parts += [cols[name].tobytes() for name, _ in header["columns"]]
+    return b"".join(parts)
+
+
+def _decode_batch(payload: bytes) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    (hlen,) = struct.unpack_from("<I", payload, 0)
+    header = json.loads(payload[4:4 + hlen].decode())
+    n = header["nrows"]
+    off = 4 + hlen
+    valid = np.frombuffer(payload, dtype=header["valid_dtype"],
+                          count=n, offset=off).copy()
+    off += valid.itemsize * n
+    columns = {}
+    for name, dtype in header["columns"]:
+        a = np.frombuffer(payload, dtype=dtype, count=n, offset=off)
+        columns[name] = a.copy()
+        off += a.itemsize * n
+    return columns, valid
+
+
+class Record:
+    """One decoded WAL record."""
+
+    __slots__ = ("kind", "seq", "payload")
+
+    def __init__(self, kind: int, seq: int, payload: bytes):
+        self.kind = kind
+        self.seq = seq
+        self.payload = payload
+
+    def batch(self) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        return _decode_batch(self.payload)
+
+    def evict_ttl(self) -> int:
+        return int(json.loads(self.payload.decode())["ttl"])
+
+
+def _segment_files(directory: str) -> List[Tuple[int, str]]:
+    if not os.path.isdir(directory):
+        return []
+    segs = []
+    for f in os.listdir(directory):
+        if f.startswith("wal-") and f.endswith(".log"):
+            try:
+                segs.append((int(f[4:-4]), f))
+            except ValueError:
+                continue
+    return sorted(segs)
+
+
+def _read_segment(path: str) -> Tuple[List[Record], bool]:
+    """Decode one segment. Returns (records, clean); clean=False means a
+    torn tail was discarded. Raises WalCorruption for mid-log damage."""
+    with open(path, "rb") as f:
+        data = f.read()
+    records: List[Record] = []
+    off = 0
+    while off < len(data):
+        if off + _HEADER_SIZE > len(data):
+            return records, False                       # torn header
+        magic, kind, seq, length, crc = _HEADER.unpack_from(data, off)
+        (hcrc,) = _HCRC.unpack_from(data, off + _HEADER.size)
+        header_ok = (magic == MAGIC
+                     and zlib.crc32(data[off:off + _HEADER.size]) == hcrc)
+        if not header_ok:
+            _scan_rest(path, data, off)                 # raises if mid-log
+            return records, False
+        start = off + _HEADER_SIZE
+        end = start + length
+        if end > len(data):
+            return records, False                       # torn payload
+        payload = data[start:end]
+        if zlib.crc32(payload) != crc:
+            _scan_rest(path, data, end)                 # raises if mid-log
+            return records, False
+        records.append(Record(kind, seq, payload))
+        off = end
+    return records, True
+
+
+def _scan_rest(path: str, data: bytes, off: int) -> None:
+    """A record at ``off`` failed validation. If any VALID record exists
+    after it the damage is mid-log, not a torn tail: refuse to replay."""
+    magic_bytes = struct.pack("<I", MAGIC)
+    pos = data.find(magic_bytes, off + 1)
+    while pos != -1:
+        if pos + _HEADER_SIZE <= len(data):
+            (hcrc,) = _HCRC.unpack_from(data, pos + _HEADER.size)
+            if zlib.crc32(data[pos:pos + _HEADER.size]) == hcrc:
+                raise WalCorruption(
+                    f"corrupt WAL record mid-log in {path} at byte {off} "
+                    f"(valid record follows at byte {pos}); refusing to "
+                    f"replay out of order")
+        pos = data.find(magic_bytes, pos + 1)
+
+
+class BatchLog:
+    """Append-only, fsync'd, CRC-protected operation journal."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        segs = _segment_files(directory)
+        self.last_seq = 0
+        for _, fname in segs:
+            recs, _ = _read_segment(os.path.join(directory, fname))
+            if recs:
+                self.last_seq = max(self.last_seq, recs[-1].seq)
+        self._fh = None
+        self._dirty = False
+
+    # -- writing ----------------------------------------------------------
+    def _file(self):
+        if self._fh is None:
+            start = self.last_seq + 1
+            path = os.path.join(self.directory, f"wal-{start:012d}.log")
+            self._fh = open(path, "ab")
+        return self._fh
+
+    def _append(self, kind: int, payload: bytes, sync: bool) -> int:
+        seq = self.last_seq + 1
+        head = _HEADER.pack(MAGIC, kind, seq, len(payload),
+                            zlib.crc32(payload))
+        fh = self._file()
+        fh.write(head + _HCRC.pack(zlib.crc32(head)) + payload)
+        fh.flush()
+        self._dirty = True
+        if sync:
+            self.sync()
+        self.last_seq = seq
+        return seq
+
+    def append_batch(self, kind: int, columns: Dict[str, np.ndarray],
+                     valid: np.ndarray, sync: bool = True) -> int:
+        """Journal an ingest/retract batch from HOST numpy columns."""
+        if kind not in (KIND_INGEST, KIND_RETRACT):
+            raise ValueError(f"append_batch kind must be ingest/retract, "
+                             f"got {kind}")
+        return self._append(kind, _encode_batch(columns, valid), sync)
+
+    def append_evict(self, ttl: int, sync: bool = True) -> int:
+        return self._append(KIND_EVICT, json.dumps({"ttl": int(ttl)}).encode(),
+                            sync)
+
+    def sync(self) -> None:
+        """fsync the open segment — the durability point for every record
+        appended since the last sync. Must complete before the commit
+        barrier covering those records acknowledges (ZQL008)."""
+        if self._fh is not None and self._dirty:
+            os.fsync(self._fh.fileno())
+            self._dirty = False
+
+    def mark(self) -> Tuple[int, bool, int]:
+        """Position token for :meth:`rollback` — taken BEFORE an append
+        whose covered operation might still be rejected by the engine."""
+        size = 0
+        if self._fh is not None:
+            self._fh.flush()
+            size = self._fh.tell()
+        return (self.last_seq, self._fh is not None, size)
+
+    def rollback(self, mark: Tuple[int, bool, int]) -> None:
+        """Truncate records appended after ``mark``. Used when the
+        operation covered by the append FAILED before its commit barrier
+        could acknowledge (e.g. a rejected retraction): the record must
+        not survive, or replay would re-raise the same failure — the log
+        always equals the applied-operation sequence."""
+        seq, was_open, size = mark
+        if self.last_seq == seq or self._fh is None:
+            return
+        if not was_open:
+            # the rolled-back record opened this segment: drop the file
+            path = self._fh.name
+            self._fh.close()
+            self._fh = None
+            os.remove(path)
+        else:
+            self._fh.truncate(size)
+            self._fh.seek(size)
+            os.fsync(self._fh.fileno())
+        self._dirty = False
+        self.last_seq = seq
+
+    def rotate(self) -> None:
+        """Close the current segment; the next append opens a new one.
+        Called at checkpoint publish so gc() can drop whole segments."""
+        self.sync()
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def gc(self, upto_seq: int) -> None:
+        """Delete segments whose every record is <= ``upto_seq`` (i.e. is
+        covered by a checkpoint that is already DURABLE on disk)."""
+        segs = _segment_files(self.directory)
+        for i, (start, fname) in enumerate(segs):
+            nxt = segs[i + 1][0] if i + 1 < len(segs) else None
+            covered = (nxt is not None and nxt - 1 <= upto_seq)
+            if covered:
+                os.remove(os.path.join(self.directory, fname))
+
+    def close(self) -> None:
+        self.rotate()
+
+    # -- reading ----------------------------------------------------------
+    def read(self, after_seq: int = 0) -> List[Record]:
+        """All records with seq > ``after_seq``, in order. Tolerates a torn
+        tail in the LAST segment only; raises WalCorruption otherwise."""
+        segs = _segment_files(self.directory)
+        out: List[Record] = []
+        for i, (_, fname) in enumerate(segs):
+            path = os.path.join(self.directory, fname)
+            recs, clean = _read_segment(path)
+            if not clean and i + 1 < len(segs):
+                raise WalCorruption(
+                    f"torn/corrupt records in non-final WAL segment {path}")
+            out.extend(recs)
+        prev = None
+        for r in out:
+            if prev is not None and r.seq <= prev:
+                raise WalCorruption(
+                    f"non-monotonic WAL sequence {prev} -> {r.seq} in "
+                    f"{self.directory}")
+            prev = r.seq
+        return [r for r in out if r.seq > after_seq]
+
+
+def read_log(directory: str, after_seq: int = 0) -> List[Record]:
+    """Read records from a WAL directory without opening it for append."""
+    log = BatchLog.__new__(BatchLog)
+    log.directory = directory
+    log._fh = None
+    log._dirty = False
+    log.last_seq = 0
+    return BatchLog.read(log, after_seq)

@@ -144,6 +144,35 @@ def device_fetch(tree, label: Optional[str] = None):
     return jax.device_get(tree)
 
 
+# Background-thread accounting. Dispatch/sync counters above are
+# thread-local on purpose (each test thread sees only its own launches),
+# which makes them blind to work done OFF the engine thread — e.g. the
+# AsyncSaver retrying a checkpoint write in its writer thread. Events are
+# the process-global, lock-protected complement for exactly those.
+_events: dict = {}
+_events_lock = threading.Lock()
+
+
+def record_event(name: str, n: int = 1) -> None:
+    """Account ``n`` occurrences of a named process-global event (safe to
+    call from any thread; e.g. ``"ckpt_save_retry"`` from the AsyncSaver
+    writer thread)."""
+    with _events_lock:
+        _events[name] = _events.get(name, 0) + n
+
+
+def event_count(name: str) -> int:
+    """Total process-global occurrences of ``name`` recorded so far."""
+    with _events_lock:
+        return _events.get(name, 0)
+
+
+def event_counts() -> dict:
+    """Snapshot of every process-global event counter."""
+    with _events_lock:
+        return dict(_events)
+
+
 def hot_path(fn: Callable) -> Callable:
     """Marker for traced hot-path bodies: ``fn`` runs INSIDE a compiled
     program (a fused-pipeline body, a shard_map shard body, a Pallas

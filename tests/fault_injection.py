@@ -1,0 +1,113 @@
+"""Deterministic crash injection for the durable-engine recovery tests.
+
+:class:`FaultInjector` plugs into ``DurableEngine(..., injector=...)``:
+the wrapper calls ``fire(point)`` at every durability boundary, and the
+injector raises :class:`InjectedCrash` (a ``BaseException``, so no
+``except Exception`` handler can accidentally swallow the "process
+death") the ``after``-th time the configured point is reached. The test
+then abandons the wrapper object — exactly what a killed process leaves
+behind on disk — and drives recovery from the directory alone.
+
+Crash points (in ingest/commit/checkpoint order):
+
+==========================  ===============================================
+``wal.pre-append``          before the operation's WAL record is written
+``wal.post-append``         record written (+fsynced in synchronous mode)
+``ingest.post-dispatch``    engine dispatched, MVCC chain mid-flight
+``commit.pre``              journal fsynced, engine commit not yet run
+``commit.post``             commit acknowledged
+``ckpt.pre-save``           canonical snapshot built, save not yet handed
+                            to the async writer (mid-checkpoint publish)
+==========================  ===============================================
+
+Disk-damage helpers complete the harness: :func:`tear_wal_tail`
+truncates the last WAL segment mid-record (simulating a crash during a
+buffered write), :func:`corrupt_wal_record` flips a byte inside a
+record's payload, and :func:`corrupt_checkpoint_shard` flips a byte in a
+published shard so restore's CRC validation must reject the step.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import wal as wal_mod
+
+#: every point DurableEngine fires, for parametrized crash matrices
+CRASH_POINTS = ("wal.pre-append", "wal.post-append", "ingest.post-dispatch",
+                "commit.pre", "commit.post", "ckpt.pre-save")
+
+
+class InjectedCrash(BaseException):
+    """Simulated process death. Derives from BaseException so engine code
+    can't swallow it with a broad ``except Exception`` — the test harness
+    is the only legal handler."""
+
+
+class FaultInjector:
+    """Raise :class:`InjectedCrash` the ``after``-th time ``crash_at`` is
+    reached (``after=1`` = first hit). ``crash_at=None`` never fires but
+    still records ``seen`` — useful to assert a path hits its points."""
+
+    def __init__(self, crash_at: str = None, after: int = 1):
+        self.crash_at = crash_at
+        self.after = int(after)
+        self.seen: list = []
+        self.fired = False
+
+    def fire(self, point: str) -> None:
+        self.seen.append(point)
+        if self.fired or self.crash_at != point:
+            return
+        if self.seen.count(point) >= self.after:
+            self.fired = True
+            raise InjectedCrash(f"injected crash at {point!r} "
+                                f"(hit #{self.seen.count(point)})")
+
+
+def _last_segment(wal_dir: str) -> str:
+    segs = wal_mod._segment_files(wal_dir)
+    assert segs, f"no WAL segments under {wal_dir}"
+    return os.path.join(wal_dir, segs[-1][1])
+
+
+def tear_wal_tail(wal_dir: str, drop_bytes: int = 7) -> str:
+    """Truncate the newest segment mid-record (a torn buffered write).
+    Returns the damaged path."""
+    path = _last_segment(wal_dir)
+    size = os.path.getsize(path)
+    assert size > drop_bytes, "segment too small to tear"
+    with open(path, "r+b") as f:
+        f.truncate(size - drop_bytes)
+    return path
+
+def corrupt_wal_record(wal_dir: str, index: int = 0) -> str:
+    """Flip one payload byte of the ``index``-th record in the newest
+    segment (bit rot / partial overwrite). Returns the damaged path."""
+    path = _last_segment(wal_dir)
+    with open(path, "rb") as f:
+        data = bytearray(f.read())
+    off = 0
+    hsize = wal_mod._HEADER_SIZE
+    for _ in range(index):
+        _, _, _, length, _ = wal_mod._HEADER.unpack_from(data, off)
+        off += hsize + length
+    _, _, _, length, _ = wal_mod._HEADER.unpack_from(data, off)
+    assert length > 0, "cannot corrupt an empty payload"
+    data[off + hsize] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(data)
+    return path
+
+
+def corrupt_checkpoint_shard(step_dir: str) -> str:
+    """Flip a byte in the middle of a published checkpoint shard so the
+    CRC validation in ``ckpt.restore`` must reject the step."""
+    shards = sorted(f for f in os.listdir(step_dir) if f.endswith(".npz"))
+    assert shards, f"no shards under {step_dir}"
+    path = os.path.join(step_dir, shards[0])
+    with open(path, "r+b") as f:
+        f.seek(os.path.getsize(path) // 2)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    return path

@@ -1,0 +1,134 @@
+"""Checkpoint-layer robustness: tmp-dir GC races and async-save retry.
+
+Regressions pinned here:
+
+* a crashed save leaves ``step_<n>.tmp<p>``; the old GC filter
+  (``endswith(".tmp")``) missed the process-suffixed form, so the orphan
+  leaked forever AND — sorting after ``step_<n>`` — pushed the newest
+  GOOD checkpoint out of the keep-last window;
+* ``latest_step`` must never report an unpublished tmp dir;
+* the next ``save()`` cleans this process's orphans (other processes may
+  legitimately be mid-write, so only OUR suffix is touched);
+* :class:`AsyncSaver` retries transient ``OSError`` with backoff and
+  surfaces retry/failure counts both on the instance and through the
+  process-global ``launch.trace`` event counters (the writer thread is
+  invisible to the thread-local dispatch accounting).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.launch import trace
+
+
+def _state(v=0.0):
+    return {"w": np.full((4,), v, np.float32), "b": np.arange(3)}
+
+
+# ------------------------------------------------------------- GC races
+def test_orphan_tmp_dir_does_not_evict_newest_good_step(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(_state(1.0), 1, d, keep_last=1)
+    ckpt.save(_state(2.0), 2, d, keep_last=1)
+    # a crashed save for step 3 left its tmp dir behind
+    os.makedirs(os.path.join(d, "step_00000003.tmp0"))
+    # keep-last GC with the orphan present must keep step 2 (the newest
+    # PUBLISHED step), not count the orphan into the window
+    ckpt._gc(d, keep_last=1)
+    assert os.path.isdir(os.path.join(d, "step_00000002"))
+    meta, arrays = ckpt.restore(d)
+    assert meta["step"] == 2
+    np.testing.assert_array_equal(arrays["w"], _state(2.0)["w"])
+
+
+def test_latest_step_ignores_tmp_dirs(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(_state(), 5, d)
+    os.makedirs(os.path.join(d, "step_00000009.tmp0"))
+    assert ckpt.latest_step(d) == 5
+
+
+def test_save_cleans_own_orphans_only(tmp_path):
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "step_00000001.tmp0"))   # ours, stale
+    os.makedirs(os.path.join(d, "step_00000001.tmp1"))   # another process
+    ckpt.save(_state(), 2, d, process_index=0)
+    assert not os.path.exists(os.path.join(d, "step_00000001.tmp0"))
+    assert os.path.isdir(os.path.join(d, "step_00000001.tmp1"))
+    assert os.path.isdir(os.path.join(d, "step_00000002"))
+
+
+def test_gc_keeps_last_k_published(tmp_path):
+    d = str(tmp_path)
+    for s in range(1, 5):
+        ckpt.save(_state(float(s)), s, d, keep_last=2)
+    kept = sorted(f for f in os.listdir(d) if ckpt._STEP_RE.match(f))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+# ------------------------------------------------------- async retries
+_REAL_SAVE = ckpt.save
+
+
+class _FlakyFS:
+    """Monkeypatchable ``ckpt.save`` stand-in failing the first N calls."""
+
+    def __init__(self, failures, exc=None):
+        self.failures = failures
+        self.exc = exc if exc is not None else OSError("EIO: injected")
+        self.calls = 0
+
+    def __call__(self, state, step, directory, **kw):
+        self.calls += 1
+        if self.calls <= self.failures:
+            raise self.exc
+        return _REAL_SAVE(state, step, directory, **kw)
+
+
+def test_async_saver_retries_transient_oserror(tmp_path, monkeypatch):
+    flaky = _FlakyFS(failures=2)
+    monkeypatch.setattr(ckpt, "save", flaky)
+    base = trace.event_count("ckpt_save_retry")
+    saver = ckpt.AsyncSaver(max_retries=3, backoff=0.001)
+    saver.save(_state(7.0), 1, str(tmp_path))
+    saver.wait()                                # must NOT raise
+    assert flaky.calls == 3
+    assert saver.n_retries == 2 and saver.n_failures == 0
+    assert trace.event_count("ckpt_save_retry") - base == 2
+    meta, arrays = ckpt.restore(str(tmp_path))
+    np.testing.assert_array_equal(arrays["w"], _state(7.0)["w"])
+    # a successful retry must not leave a stale error for the next wait()
+    saver.save(_state(8.0), 2, str(tmp_path))
+    saver.wait()
+
+
+def test_async_saver_terminal_failure_counts_and_raises(tmp_path,
+                                                        monkeypatch):
+    flaky = _FlakyFS(failures=99)
+    monkeypatch.setattr(ckpt, "save", flaky)
+    base = trace.event_count("ckpt_save_failure")
+    saver = ckpt.AsyncSaver(max_retries=2, backoff=0.001)
+    saver.save(_state(), 1, str(tmp_path))
+    with pytest.raises(OSError, match="injected"):
+        saver.wait()
+    assert flaky.calls == 3                     # 1 attempt + 2 retries
+    assert saver.n_retries == 2 and saver.n_failures == 1
+    assert trace.event_count("ckpt_save_failure") - base == 1
+    # the failure is surfaced ONCE; the saver is reusable afterwards
+    monkeypatch.setattr(ckpt, "save", _FlakyFS(failures=0))
+    saver.save(_state(3.0), 2, str(tmp_path))
+    saver.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 2
+
+
+def test_async_saver_non_oserror_is_not_retried(tmp_path, monkeypatch):
+    flaky = _FlakyFS(failures=99, exc=RuntimeError("logic bug"))
+    monkeypatch.setattr(ckpt, "save", flaky)
+    saver = ckpt.AsyncSaver(max_retries=3, backoff=0.001)
+    saver.save(_state(), 1, str(tmp_path))
+    with pytest.raises(RuntimeError, match="logic bug"):
+        saver.wait()
+    assert flaky.calls == 1                     # no retry for non-OSError
+    assert saver.n_failures == 1

@@ -275,6 +275,60 @@ def test_zql007_quiet_when_commit_precedes_the_fetch(tmp_path):
             def report(self, verdicts):
                 return jax.device_get(verdicts)     # no open dispatch: fine
         """)) == []
+
+
+# ------------------------------------------------------------ ZQL008
+def test_zql008_fires_on_commit_before_wal_append(tmp_path):
+    out = _lint_snippet(tmp_path, OWNED + _D("""\
+        class Durable:
+            def ingest(self, batch):
+                rep = self.engine.ingest(batch)     # acked first: WRONG
+                self.wal.append_batch(1, batch.columns, batch.valid)
+                return rep
+        """))
+    assert _rules(out) == ["ZQL008"]
+    assert out[0].line == 4
+
+
+def test_zql008_fires_on_version_bump_before_fsync(tmp_path):
+    out = _lint_snippet(tmp_path, OWNED + _D("""\
+        class Durable:
+            def commit(self):
+                self._state_version += 1            # acked first: WRONG
+                self.wal.sync()
+        """))
+    assert _rules(out) == ["ZQL008"]
+
+
+def test_zql008_quiet_on_journal_first_and_no_wal(tmp_path):
+    # the correct protocol: append/fsync, THEN dispatch/commit
+    assert _lint_snippet(tmp_path, OWNED + _D("""\
+        class Durable:
+            def ingest(self, batch):
+                self.wal.append_batch(1, batch.columns, batch.valid)
+                return self.engine.ingest(batch)
+
+            def commit(self):
+                self.wal.sync()
+                out = self.engine.commit()
+                self._state_version += 1
+                return out
+
+            def checkpoint(self):
+                self.wal.sync()
+                snap = self.engine.export_canonical()
+                self.wal.rotate()                   # bookkeeping, no event
+                return snap
+        """)) == []
+    # functions that never journal are out of scope (the engines
+    # themselves bump _state_version freely)
+    assert _lint_snippet(tmp_path, OWNED + _D("""\
+        class Engine:
+            def _post_state_swap(self):
+                self._state_version += 1
+        """)) == []
+
+
 def test_inline_suppression_drops_the_finding(tmp_path):
     out = _lint_snippet(tmp_path, OWNED + _D("""\
         import jax

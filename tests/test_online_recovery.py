@@ -1,0 +1,522 @@
+"""Crash-recovery bit-identity for the durable engines.
+
+The contract under test (docs/architecture.md — Durability & recovery):
+after a process death at ANY boundary — before/after a WAL append, with
+the MVCC chain mid-flight, mid-commit, or mid-checkpoint-publish — the
+recovered engine (restore newest good checkpoint, replay the WAL tail in
+order) answers every query BITWISE equal to a twin that never crashed.
+Because estimates are deterministic functions of canonical group content
+alone, the guarantee holds across layouts too: a replicated checkpoint
+restores into a partitioned engine at a different ``n_parts`` (and, on
+the CI device matrix, onto 1/2/4-device meshes) with bit-identical
+queries.
+
+Torn WAL tails are discarded (crash mid-buffered-write); a corrupt
+record WITH valid records after it refuses replay (silently skipping an
+op would break bit-identity); CRC-corrupt checkpoint shards fall back to
+the previous step plus a longer replay; the log tail of an unpublished
+checkpoint is never garbage-collected.
+"""
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from fault_injection import (CRASH_POINTS, FaultInjector, InjectedCrash,
+                             corrupt_checkpoint_shard, corrupt_wal_record,
+                             tear_wal_tail)
+from repro.checkpoint import ckpt as ckpt_mod
+from repro.core import (BatchLog, CoarsenSpec, DurableEngine, OnlineEngine,
+                        PartitionedOnlineEngine, PoisonBatchError,
+                        WalCorruption)
+from repro.core import wal as wal_mod
+from repro.core.durability import _pack_snapshot, _unpack_snapshot
+from repro.core.serving import ServingEngine
+from repro.data.columnar import Table
+from repro.launch.mesh import make_data_mesh
+from repro.launch.trace import count_dispatches, count_host_syncs
+
+SPECS = {"x0": CoarsenSpec.categorical(5), "x1": CoarsenSpec.categorical(4)}
+TREATMENTS = {"ta": ["x0", "x1"]}
+EST_FIELDS = ("ate", "att", "n_matched_treated", "n_matched_control",
+              "n_groups", "variance")
+KW = dict(granule=64, delta_granule=16)
+
+
+def _batch(n, seed, x0_hi=5):
+    """Integer outcomes => exact f32 sums => bitwise-comparable answers."""
+    rng = np.random.default_rng(seed)
+    cols = {"x0": rng.integers(0, x0_hi, n).astype(np.int32),
+            "x1": rng.integers(0, 4, n).astype(np.int32)}
+    cols["ta"] = (rng.random(n) < 0.2 + 0.5 * cols["x0"] / 4).astype(
+        np.int32)
+    y = 2.0 * cols["ta"] + 1.5 * cols["x0"] + rng.normal(0, 0.5, n)
+    cols["y"] = np.round(y).astype(np.float32)
+    return Table.from_numpy(cols, rng.random(n) > 0.1)
+
+
+def _fresh(layout, **kw):
+    merged = dict(KW)
+    merged.update(kw)
+    if layout == "replicated":
+        return OnlineEngine(SPECS, TREATMENTS, "y", **merged)
+    if layout == "overlap":
+        merged.setdefault("max_inflight", 2)
+        return OnlineEngine(SPECS, TREATMENTS, "y", overlap=True, **merged)
+    if layout == "partitioned":
+        ndev = jax.device_count()
+        mesh = make_data_mesh(ndev) if ndev > 1 else None
+        return PartitionedOnlineEngine(SPECS, TREATMENTS, "y",
+                                       n_parts=max(2, ndev), mesh=mesh,
+                                       **merged)
+    raise AssertionError(layout)
+
+
+def _assert_bitwise(got, want, ctx):
+    for f in EST_FIELDS:
+        g, w = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert g.tobytes() == w.tobytes(), (ctx, f, g, w)
+
+
+def _assert_twin_equal(recovered, twin, ctx, probe_seed=999):
+    """Full query-surface comparison: ate, ate_batch, matched_rows."""
+    _assert_bitwise(recovered.ate("ta"), twin.ate("ta"), (ctx, "ate"))
+    sub = {"x1": [0, 2]}
+    _assert_bitwise(recovered.ate("ta", subpopulation=sub),
+                    twin.ate("ta", subpopulation=sub), (ctx, "ate-sub"))
+    got = recovered.ate_batch([("ta", None), ("ta", sub)])
+    want = twin.ate_batch([("ta", None), ("ta", sub)])
+    for g, w in zip(got, want):
+        _assert_bitwise(g, w, (ctx, "ate_batch"))
+    probe = _batch(64, probe_seed)
+    np.testing.assert_array_equal(
+        np.asarray(recovered.matched_rows("ta", probe)),
+        np.asarray(twin.matched_rows("ta", probe)),
+        err_msg=f"{ctx}: matched_rows diverged after recovery")
+
+
+# ------------------------------------------------------------ WAL basics
+def test_wal_roundtrip_rotate_gc(tmp_path):
+    d = str(tmp_path / "wal")
+    log = BatchLog(d)
+    b1 = _batch(32, 1)
+    cols = {k: np.asarray(v) for k, v in b1.columns.items()}
+    log.append_batch(wal_mod.KIND_INGEST, cols, np.asarray(b1.valid))
+    log.append_evict(ttl=2)
+    log.rotate()
+    log.append_batch(wal_mod.KIND_RETRACT, cols, np.asarray(b1.valid))
+    log.close()
+
+    recs = wal_mod.read_log(d)
+    assert [r.kind for r in recs] == [wal_mod.KIND_INGEST,
+                                      wal_mod.KIND_EVICT,
+                                      wal_mod.KIND_RETRACT]
+    assert [r.seq for r in recs] == [1, 2, 3]
+    rcols, rvalid = recs[0].batch()
+    for k in cols:
+        np.testing.assert_array_equal(rcols[k], cols[k])
+        assert rcols[k].dtype == cols[k].dtype
+    np.testing.assert_array_equal(rvalid, np.asarray(b1.valid))
+    assert recs[1].evict_ttl() == 2
+
+    # a reopened log continues the sequence, never reuses one
+    log2 = BatchLog(d)
+    assert log2.last_seq == 3
+    log2.append_evict(ttl=1)
+    assert wal_mod.read_log(d)[-1].seq == 4
+    # gc keeps every segment with records beyond the durable point
+    log2.gc(upto_seq=2)
+    assert [r.seq for r in wal_mod.read_log(d)] == [3, 4]
+    log2.close()
+
+
+def test_wal_torn_tail_discarded(tmp_path):
+    d = str(tmp_path / "wal")
+    log = BatchLog(d)
+    for i in range(3):
+        log.append_evict(ttl=i)
+    log.close()
+    tear_wal_tail(d)
+    recs = wal_mod.read_log(d)
+    assert [r.seq for r in recs] == [1, 2]      # torn record 3 dropped
+
+
+def test_wal_midlog_corruption_refuses_replay(tmp_path):
+    d = str(tmp_path / "wal")
+    log = BatchLog(d)
+    for i in range(3):
+        log.append_evict(ttl=i)
+    log.close()
+    corrupt_wal_record(d, index=0)
+    with pytest.raises(WalCorruption):
+        wal_mod.read_log(d)
+
+
+def test_wal_rollback_removes_failed_op_record(tmp_path):
+    d = str(tmp_path / "wal")
+    log = BatchLog(d)
+    log.append_evict(ttl=1)
+    mark = log.mark()
+    log.append_evict(ttl=9)
+    log.rollback(mark)
+    assert log.last_seq == 1
+    log.append_evict(ttl=2)                     # seq 2 reused cleanly
+    log.close()
+    assert [(r.seq, r.evict_ttl()) for r in wal_mod.read_log(d)] == [
+        (1, 1), (2, 2)]
+
+
+def test_snapshot_pack_unpack_rejects_dirty_keys():
+    snap = dict(views={}, scalars={"state_version": 1, "ingest_count": 0,
+                                   "n_rows_ingested": 0, "delta_cap": 16},
+                fingerprint="f", cache=())
+    tree = _pack_snapshot(snap, wal_seq=7)
+    back, seq = _unpack_snapshot(
+        {k: v for k, v in _flatten(tree).items()})
+    assert seq == 7 and back["fingerprint"] == "f"
+    snap["views"] = {"v": {"hi": np.zeros(1), "lo": np.zeros(1),
+                           "touch": np.zeros(1),
+                           "stats": {"a__b": np.zeros(1)}}}
+    with pytest.raises(ValueError):
+        _pack_snapshot(snap, wal_seq=0)
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    for k, v in tree.items():
+        if isinstance(v, dict):
+            out.update(_flatten(v, prefix + k + "/"))
+        else:
+            out[prefix + k] = v
+    return out
+
+
+# -------------------------------------------------- crash-point matrix
+#: the scripted stream of every crash test, in wrapper-call order
+_SCRIPT = (("ingest", (90, 0, 3)), ("ingest", (80, 1, 3)),
+           ("commit", None), ("checkpoint", None),
+           ("ingest", (70, 2, 5)), ("ingest", (60, 3, 5)),
+           ("commit", None), ("evict", 10),
+           ("ingest", (50, 4, 5)), ("commit", None))
+
+#: per-point injector hit count targeting the LAST occurrence in the
+#: script (evict fires wal.pre/post-append too, hence 6 not 5), and the
+#: number of leading state-mutating script ops (ingest/evict) whose
+#: effect must be visible after recovery — a record is on disk iff its
+#: append completed (buffered writes survive PROCESS death; fsync only
+#: matters for OS crash, which this harness does not simulate)
+_CRASH_PLAN = {
+    "wal.pre-append": (6, 5),       # final ingest's record never written
+    "wal.post-append": (6, 6),
+    "ingest.post-dispatch": (5, 6),
+    "commit.pre": (3, 6),
+    "commit.post": (3, 6),
+    "ckpt.pre-save": (1, 2),        # crash mid-checkpoint: only ops 1-2
+}
+
+
+def _mutations(script):
+    return [(kind, arg) for kind, arg in script
+            if kind in ("ingest", "evict")]
+
+
+def _drive(layout, directory, injector=None):
+    """Run the scripted stream through a DurableEngine; a crashed wrapper
+    is abandoned exactly as a killed process would leave it."""
+    eng = DurableEngine(_fresh(layout), directory, injector=injector)
+    try:
+        for kind, arg in _SCRIPT:
+            if kind == "ingest":
+                n, seed, hi = arg
+                eng.ingest(_batch(n, seed, x0_hi=hi))
+            elif kind == "evict":
+                eng.evict(ttl=arg)
+            elif kind == "commit":
+                eng.commit()
+            else:
+                eng.checkpoint(wait=True)
+    except InjectedCrash:
+        return eng, True
+    return eng, False
+
+
+@pytest.mark.parametrize("layout", ["replicated", "overlap", "partitioned"])
+@pytest.mark.parametrize("point", CRASH_POINTS)
+def test_crash_recovery_bitwise_equals_never_crashed_twin(
+        tmp_path, layout, point):
+    """Kill the engine at a chosen boundary of the last operation of each
+    kind; recover from the directory alone; compare the full query
+    surface bitwise against a twin that never crashed, then keep
+    streaming both sides and compare again."""
+    after, survived = _CRASH_PLAN[point]
+    inj = FaultInjector(crash_at=point, after=after)
+    _, did_crash = _drive(layout, str(tmp_path / "crash"), injector=inj)
+    assert did_crash, (point, inj.seen)
+
+    rec = DurableEngine.recover(_fresh(layout), str(tmp_path / "crash"))
+
+    twin = _fresh(layout)
+    for kind, arg in _mutations(_SCRIPT)[:survived]:
+        if kind == "ingest":
+            n, seed, hi = arg
+            twin.ingest(_batch(n, seed, x0_hi=hi))
+        else:
+            twin.evict(ttl=arg)
+    twin.commit()
+    _assert_twin_equal(rec, twin, (layout, point))
+
+    # recovered engines keep streaming: continue both sides and re-check
+    for cont_seed in (11, 12):
+        b = _batch(40, cont_seed)
+        rec.ingest(b)
+        twin.ingest(b)
+    rec.commit()
+    twin.commit()
+    _assert_twin_equal(rec, twin, (layout, point, "continued"))
+    rec.close()
+
+
+def test_evict_fsync_covers_buffered_records(tmp_path):
+    # evict is journaled sync=True: its record must cover everything
+    # buffered before it even in overlap mode (fsync is file-wide)
+    d = str(tmp_path / "ev")
+    eng = DurableEngine(_fresh("overlap"), d)
+    eng.ingest(_batch(64, 0))
+    eng.evict(ttl=5)                            # commit barrier + fsync
+    est = eng.ate("ta")
+    eng.close()
+    rec = DurableEngine.recover(_fresh("overlap"), d)
+    _assert_bitwise(rec.ate("ta"), est, "evict-tail")
+    rec.close()
+
+
+# ------------------------------------------- cross-layout checkpoint
+@pytest.mark.parametrize("src,dst,dst_kw", [
+    ("replicated", "partitioned", {}),
+    ("partitioned", "replicated", {}),
+    ("replicated", "replicated", dict(granule=128)),
+])
+def test_cross_layout_restore_bitwise(tmp_path, src, dst, dst_kw):
+    """A checkpoint written by one layout restores into another (different
+    n_parts / device placement / granule) bitwise, via the canonical
+    compaction contract."""
+    d = str(tmp_path / "x")
+    eng = DurableEngine(_fresh(src), d)
+    for i in range(3):
+        eng.ingest(_batch(90, i, x0_hi=3))
+    eng.checkpoint(wait=True)
+    eng.ingest(_batch(70, 9))                   # WAL tail past the ckpt
+    eng.commit()
+    est = eng.ate("ta")
+    eng.close()
+
+    if dst == "partitioned":
+        ndev = jax.device_count()
+        tgt = PartitionedOnlineEngine(
+            SPECS, TREATMENTS, "y",
+            n_parts=max(2, ndev) * 2,   # deliberately different n_parts
+            mesh=make_data_mesh(ndev) if ndev > 1 else None, **KW)
+    else:
+        tgt = _fresh(dst, **dst_kw)
+    rec = DurableEngine.recover(tgt, d)
+    _assert_twin_equal(rec, _twin_of(src), (src, dst))
+    _assert_bitwise(rec.ate("ta"), est, (src, dst, "vs-live"))
+    rec.close()
+
+
+def _twin_of(src):
+    twin = _fresh(src)
+    for i in range(3):
+        twin.ingest(_batch(90, i, x0_hi=3))
+    twin.ingest(_batch(70, 9))
+    twin.commit()
+    return twin
+
+
+def test_schema_mismatch_refuses_restore(tmp_path):
+    d = str(tmp_path / "s")
+    eng = DurableEngine(_fresh("replicated"), d)
+    eng.ingest(_batch(64, 0))
+    eng.checkpoint(wait=True)
+    eng.close()
+    other = OnlineEngine({"x0": CoarsenSpec.categorical(7),
+                          "x1": CoarsenSpec.categorical(4)},
+                         TREATMENTS, "y", **KW)
+    with pytest.raises(ValueError, match="schema mismatch"):
+        DurableEngine.recover(other, d)
+
+
+# ------------------------------------------------- damaged-disk recovery
+def test_corrupt_newest_checkpoint_falls_back(tmp_path):
+    d = str(tmp_path / "c")
+    eng = DurableEngine(_fresh("replicated"), d)
+    eng.ingest(_batch(90, 0, x0_hi=3))
+    eng.checkpoint(wait=True)
+    eng.ingest(_batch(80, 1))
+    eng.checkpoint(wait=True)
+    eng.ingest(_batch(70, 2))
+    eng.commit()
+    est = eng.ate("ta")
+    eng.close()
+
+    steps = sorted(f for f in os.listdir(os.path.join(d, "ckpt"))
+                   if f.startswith("step_"))
+    corrupt_checkpoint_shard(os.path.join(d, "ckpt", steps[-1]))
+    rec = DurableEngine.recover(_fresh("replicated"), d)
+    _assert_bitwise(rec.ate("ta"), est, "ckpt-fallback")
+    rec.close()
+
+
+def test_all_checkpoints_corrupt_falls_back_to_full_replay(tmp_path):
+    d = str(tmp_path / "c2")
+    eng = DurableEngine(_fresh("replicated"), d)
+    eng.ingest(_batch(90, 0, x0_hi=3))
+    eng.checkpoint(wait=True)
+    eng.ingest(_batch(80, 1))
+    eng.commit()
+    est = eng.ate("ta")
+    eng.close()
+    # corrupting the ONLY checkpoint forces empty-engine full-log replay;
+    # its covered segment must still be on disk (gc runs only after the
+    # NEXT checkpoint observes a durable publish)
+    steps = os.listdir(os.path.join(d, "ckpt"))
+    corrupt_checkpoint_shard(
+        os.path.join(d, "ckpt", sorted(steps)[-1]))
+    rec = DurableEngine.recover(_fresh("replicated"), d)
+    _assert_bitwise(rec.ate("ta"), est, "full-replay-fallback")
+    rec.close()
+
+
+def test_mid_publish_rename_crash_recovers_from_previous(tmp_path,
+                                                         monkeypatch):
+    """Kill the checkpoint publish between shard write and atomic rename:
+    the tmp dir is left behind, the step never appears, recovery uses the
+    previous checkpoint + the UN-garbage-collected WAL tail."""
+    d = str(tmp_path / "p")
+    eng = DurableEngine(_fresh("replicated"), d,
+                        saver=ckpt_mod.AsyncSaver(max_retries=0))
+    eng.ingest(_batch(90, 0, x0_hi=3))
+    eng.checkpoint(wait=True)                   # good step 1
+    eng.ingest(_batch(80, 1))
+
+    real_rename = os.rename
+    def boom(src, dst):
+        if ".tmp" in src:
+            raise OSError("injected: crash mid-publish")
+        return real_rename(src, dst)
+    monkeypatch.setattr(ckpt_mod.os, "rename", boom)
+    eng.checkpoint()                            # async save will fail
+    eng.saver._thread.join()                    # "crash": abandon wrapper
+    monkeypatch.setattr(ckpt_mod.os, "rename", real_rename)
+    est_twin = _fresh("replicated")
+    est_twin.ingest(_batch(90, 0, x0_hi=3))
+    est_twin.ingest(_batch(80, 1))
+    est_twin.commit()
+
+    assert ckpt_mod.latest_step(os.path.join(d, "ckpt")) == 1
+    rec = DurableEngine.recover(_fresh("replicated"), d)
+    _assert_bitwise(rec.ate("ta"), est_twin.ate("ta"), "mid-publish")
+    rec.close()
+
+
+# --------------------------------------------- degraded-mode serving
+def test_degraded_serving_tags_and_drains(tmp_path):
+    d = str(tmp_path / "deg")
+    eng = DurableEngine(_fresh("replicated"), d)
+    eng.ingest(_batch(90, 0, x0_hi=3))
+    eng.checkpoint(wait=True)
+    for i in range(3):
+        eng.ingest(_batch(60, 1 + i))
+    eng.commit()
+    final = eng.ate("ta")
+    eng.close()
+
+    rec = DurableEngine.recover(_fresh("replicated"), d,
+                                degraded_replay=True)
+    assert rec.degraded
+    snap_version = rec.snapshot_version()
+    serving = ServingEngine(rec, n_slots=4)
+    out = serving.serve([("ta", None), ("ta", {"x1": [0]})])
+    assert all(r.degraded for r in out)
+    assert all(r.state_version == snap_version for r in out)
+    with pytest.raises(RuntimeError, match="degraded"):
+        rec.ingest(_batch(10, 9))
+
+    while rec.replay_step(1):
+        pass
+    assert not rec.degraded
+    out2 = serving.serve([("ta", None)])
+    assert not out2[0].degraded
+    _assert_bitwise(out2[0].estimate, final, "post-drain")
+    rec.close()
+
+
+def test_bounded_queue_sheds_oldest():
+    eng = _fresh("replicated")
+    eng.ingest(_batch(64, 0))
+    serving = ServingEngine(eng, n_slots=4, max_queue=3)
+    qids = [serving.submit(("ta", {"x1": [i % 4]})) for i in range(5)]
+    assert serving.n_shed == 2
+    assert serving.pending() == 3
+    done = {}
+    while serving.pending():
+        done.update(serving.step())
+    assert set(done) == set(qids[2:])           # oldest two never answered
+
+
+# ------------------------------------------ steady-state hot-path cost
+def test_wal_and_async_ckpt_keep_ingest_single_dispatch(tmp_path):
+    """The durability layer must be free on the hot path: with the WAL
+    journaling every batch and an async checkpoint save in flight, a
+    steady-state overlap ingest is still ONE dispatch, ZERO host syncs,
+    and clean under jax.transfer_guard("disallow")."""
+    eng = DurableEngine(_fresh("overlap", max_inflight=8),
+                        str(tmp_path / "hot"))
+    warm = _batch(256, 1)
+    eng.ingest(warm)
+    eng.commit()
+    eng.ingest(_batch(256, 2))                  # retrace both wave sizes
+    eng.commit()
+    eng.checkpoint()                            # async write in flight
+    with count_dispatches() as n, count_host_syncs() as s:
+        with jax.transfer_guard("disallow"):
+            eng.ingest(_batch(256, 3))
+    assert n() == 1, "WAL journaling must not add dispatches"
+    assert s() == 0, "WAL journaling must not sync the host"
+    eng.checkpoint(wait=True)
+    eng.close()
+
+
+def test_poison_batch_never_reaches_wal_or_state(tmp_path):
+    """S3 quarantine on the durable path: a rejected batch leaves the
+    WAL, the snapshot version, the estimate cache and the in-flight MVCC
+    chain untouched, on both engines."""
+    for layout in ("replicated", "overlap", "partitioned"):
+        eng = DurableEngine(_fresh(layout), str(tmp_path / f"q-{layout}"))
+        eng.ingest(_batch(64, 0))
+        eng.commit()
+        before = eng.ate("ta")                  # populates the cache
+        v = eng.snapshot_version()
+        seq = eng.wal.last_seq
+        inflight = len(getattr(eng.engine, "_inflight", ()))
+
+        good = _batch(32, 1)
+        cols = {k: np.asarray(v2).copy() for k, v2 in good.columns.items()}
+        cols["y"][0] = np.inf
+        valid = np.ones(32, bool)
+        with pytest.raises(PoisonBatchError):
+            eng.ingest(Table.from_numpy(cols, valid))
+        cols2 = {k: a.copy() for k, a in cols.items()}
+        cols2["y"][0] = 0.0
+        cols2["x0"][1] = 99                     # out-of-range code
+        with pytest.raises(PoisonBatchError):
+            eng.ingest(Table.from_numpy(cols2, valid))
+
+        assert eng.wal.last_seq == seq, layout
+        assert eng.snapshot_version() == v, layout
+        assert len(getattr(eng.engine, "_inflight", ())) == inflight
+        after = eng.cached_estimate("ta", None)
+        assert after is not None
+        _assert_bitwise(after, before, (layout, "cache"))
+        eng.close()

@@ -27,7 +27,8 @@ installed) generates the same encoding so failures replay identically.
 import numpy as np
 import pytest
 
-from repro.core import CoarsenSpec, OnlineEngine, PartitionedOnlineEngine
+from repro.core import (CoarsenSpec, DurableEngine, OnlineEngine,
+                        PartitionedOnlineEngine)
 from repro.core.cem import make_codec
 from repro.core.online import BASE_VIEW, _estimate_view
 from repro.core import cube
@@ -343,6 +344,80 @@ def run_stream(ops, n_parts: int):
     return n_checked_guard
 
 
+def run_stream_durable(ops, n_parts: int, kill_at: int, tmp_path):
+    """The crash twin of :func:`run_stream`: both engines run behind
+    :class:`~repro.core.durability.DurableEngine` wrappers (every op
+    journaled, a checkpoint taken mid-stream), the wrappers are KILLED at
+    the ``kill_at``-th op boundary — abandoned without close(), exactly
+    the disk state a dead process leaves — and recovery must rebuild
+    FRESH engines that continue the stream bitwise: the dict oracle never
+    notices the crash."""
+    kw = dict(granule=64, delta_granule=16, query_dims=QUERY_DIMS,
+              reservoir_size=256)
+
+    def fresh():
+        return {
+            "replicated": OnlineEngine(SPECS, TREATMENTS, OUTCOME, **kw),
+            f"partitioned[{n_parts}]": PartitionedOnlineEngine(
+                SPECS, TREATMENTS, OUTCOME, n_parts=n_parts, **kw),
+        }
+
+    dirs = {lb: str(tmp_path / lb.replace("[", "-").replace("]", ""))
+            for lb in fresh()}
+    engines = {lb: DurableEngine(eng, dirs[lb])
+               for lb, eng in fresh().items()}
+    oracle = Oracle()
+    history = []
+    ckpt_at = max(0, kill_at // 2)
+    killed = False
+    for i, (op, a, b, c) in enumerate(ops):
+        if i == ckpt_at:
+            for d in engines.values():
+                d.checkpoint(wait=True)
+        if i == kill_at:
+            engines = {lb: DurableEngine.recover(eng, dirs[lb])
+                       for lb, eng in fresh().items()}
+            killed = True
+            _check_state(oracle, engines, history)
+        if op == 0:
+            size = 40 + 60 * (a % 8)
+            cols, valid = _batch(size, 1 + (b % 5), c)
+            for eng in engines.values():
+                eng.ingest(Table.from_numpy(cols, valid))
+            oracle.apply(cols, valid)
+            history.append((cols, valid))
+        elif op == 1:
+            if not history:
+                continue
+            cols, valid = history[a % len(history)]
+            batch = Table.from_numpy(cols, valid)
+            if oracle.can_retract(cols, valid):
+                for eng in engines.values():
+                    eng.ingest(batch, retract=True)
+                oracle.apply(cols, valid, retract=True)
+            else:
+                # the guard fires THROUGH the wrapper and must also roll
+                # the journaled record back (replay would re-raise it)
+                for eng in engines.values():
+                    with pytest.raises(ValueError):
+                        eng.ingest(batch, retract=True)
+                _check_state(oracle, engines, history)
+        elif op == 2:
+            ttl = a % 3
+            for eng in engines.values():
+                eng.evict(ttl=ttl)
+            oracle.evict(ttl)
+        else:
+            _check_query(oracle, engines, TNAMES[a % len(TNAMES)],
+                         SUBPOPS[b % len(SUBPOPS)], qseed=c)
+    assert killed, "kill_at beyond the stream: crash path not exercised"
+    _check_state(oracle, engines, history)
+    for i, t in enumerate(TNAMES):
+        _check_query(oracle, engines, t, None, qseed=i)
+    for eng in engines.values():
+        eng.close()
+
+
 def _seeded_ops(seed: int, n_ops: int = 10):
     """Seeded generator of the same encoding the hypothesis strategy
     draws — sole coverage where hypothesis is not installed."""
@@ -462,6 +537,14 @@ def test_differential_stream_seeded(seed, n_parts):
 @pytest.mark.parametrize("seed,n_parts", [(0, 1), (1, 2), (2, 4), (5, 2)])
 def test_differential_overlap_stream_seeded(seed, n_parts):
     run_stream_overlap(_seeded_ops(seed, n_ops=12), n_parts)
+
+
+@pytest.mark.parametrize("seed,n_parts,kill_at", [
+    (0, 2, 3), (3, 4, 5), (5, 2, 8),
+])
+def test_differential_durable_crash_stream_seeded(seed, n_parts, kill_at,
+                                                  tmp_path):
+    run_stream_durable(_seeded_ops(seed), n_parts, kill_at, tmp_path)
 
 
 def test_differential_overlap_forced_paths():

@@ -31,7 +31,8 @@ import os
 import sys
 
 GUARDED = ("online_ingest", "online_dispatches", "online_query",
-           "online_rowlookup", "online_serve")
+           "online_rowlookup", "online_serve", "online_wal",
+           "online_recover")
 
 
 def load_rows(path: str):
