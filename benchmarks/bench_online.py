@@ -526,6 +526,77 @@ def main() -> None:
     finally:
         shutil.rmtree(wal_dir, ignore_errors=True)
 
+    # replication rows (PR 10): WAL shipping is pure host bytes off the
+    # primary's write path, so the primary's steady-state ingest+commit
+    # must stay within 1.10x of an unreplicated durable engine while a
+    # follower is shipped every commit. The TIMED region is the primary's
+    # ingest+commit only; ship/apply run in the same loop untimed — they
+    # are follower-side cost (journal fsync + replay dispatch) that a
+    # real deployment pays on the follower's disk, but their interleaving
+    # (tail reads of the live log, page-cache pressure) is exactly what
+    # could slow the primary down. Ratio in the value slot, same
+    # convention as the WAL overhead rows; a kept-up follower's lag pins
+    # at 0 seqs; failover is kill -> promote -> first answer.
+    from repro.core import ReplicatedEngine
+
+    def repl_round_secs(replicated: bool, rounds: int = 8):
+        d = tempfile.mkdtemp(prefix="bench_repl_")
+        engines = [OnlineEngine.from_table(wal_base, SPECS, TREATMENTS,
+                                           "y", overlap=True,
+                                           max_inflight=k_wal)]
+        if replicated:
+            engines.append(OnlineEngine(SPECS, TREATMENTS, "y"))
+        cluster = ReplicatedEngine(engines, d, heartbeat_timeout_s=1e9)
+        feed = iter([Table.from_numpy(_gen(bs_wal, seed=8_000_000 + i))
+                     for i in range(k_wal * (WARMUP + rounds))])
+
+        def round_():
+            t0 = time.perf_counter()
+            for _ in range(k_wal):
+                cluster.ingest(next(feed))
+            cluster.commit()
+            dt = time.perf_counter() - t0
+            cluster.ship()                  # untimed follower-side work
+            cluster.apply_all()
+            return dt
+        try:
+            for _ in range(WARMUP):
+                round_()
+            ts = [round_() for _ in range(rounds)]
+            lag = max((r.replica_lag
+                       for r in cluster.replicas.values()), default=0)
+            return float(np.median(ts)) / k_wal, lag, cluster, d
+        except BaseException:
+            shutil.rmtree(d, ignore_errors=True)
+            raise
+
+    t_solo, _, solo, solo_dir = repl_round_secs(False)
+    solo.primary.close()
+    shutil.rmtree(solo_dir, ignore_errors=True)
+    t_repl, lag, cluster, repl_dir = repl_round_secs(True)
+    try:
+        emit("online_primary_ship_overhead",
+             (t_repl / max(t_solo, 1e-12)) / 1e6,
+             f"shipping={t_repl * 1e3:.2f}ms solo={t_solo * 1e3:.2f}ms "
+             f"per batch={bs_wal}, 1 follower shipped+applied every "
+             f"{k_wal} (value slot = ratio, contract < 1.10)")
+        emit("online_replica_lag", lag / 1e6,
+             f"applied-vs-primary seqs after a tick "
+             f"(value slot = seqs, contract = 0: the follower keeps up)")
+        # failover: primary dies, most-caught-up follower is fenced-in,
+        # drained, re-opened as primary, and answers its first query
+        t0 = time.perf_counter()
+        cluster.kill_primary()
+        cluster.failover()
+        cluster.ate("t")
+        t_fo = time.perf_counter() - t0
+        emit("online_failover_secs", t_fo,
+             f"kill -> promote (epoch CAS + drain + reopen) -> first "
+             f"answer; follower was {lag} seqs behind")
+        cluster.primary.close()
+    finally:
+        shutil.rmtree(repl_dir, ignore_errors=True)
+
     # sharded ingest: per-batch latency per device-mesh size
     sweep_n = 1 << 15 if smoke() else 1 << 18
     device_counts = (1, 2) if smoke() else (1, 2, 4, 8)

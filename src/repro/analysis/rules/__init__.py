@@ -9,6 +9,7 @@ from repro.analysis.rules import (
     zql006_retrace,
     zql007_sync_before_commit,
     zql008_wal_ordering,
+    zql009_ship_verify,
 )
 
 RULES = [
@@ -20,6 +21,7 @@ RULES = [
     zql006_retrace.RULE,
     zql007_sync_before_commit.RULE,
     zql008_wal_ordering.RULE,
+    zql009_ship_verify.RULE,
 ]
 
 RULE_IDS = [r.id for r in RULES]

@@ -1,0 +1,113 @@
+"""ZQL009 — shipped WAL record applied before its epoch/CRC verification.
+
+Contract (docs/architecture.md — Replication & failover): a follower may
+only apply records that have passed BOTH gates — CRC decoding
+(``repro.core.wal.decode_records`` / a ``read``/``read_tail`` on the log,
+which validate every record's header and payload CRCs) and the
+epoch/contiguity check (``repro.core.replication.verify_records``).
+Applying an unverified shipped record lets a torn span, a bit-flipped
+payload, or a fenced zombie primary's stale-epoch history mutate engine
+state — silently breaking the replica-at-seq-s bitwise-identity
+guarantee the whole tier rests on.
+
+The rule fires when an engine-owned function calls an APPLY entry point
+(``_apply_records`` / ``_apply_one`` / ``apply_records`` /
+``apply_record``) without a VERIFY call — ``verify_records`` /
+``decode_records`` or a ``read``/``read_tail``/``read_log`` whose
+receiver chain names the log — EARLIER in source order: the straight-line
+receive/replay protocols this rule guards execute in source order,
+exactly like ZQL008's journaling windows. Functions that ARE an apply
+entry point (their own name is in the apply set) are exempt — they are
+the implementation the rule protects, and their CALLERS carry the
+verification obligation.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Tuple
+
+from repro.analysis.lint import Finding, ModuleContext
+from repro.analysis.rules import _common
+
+#: record-applying entry points — the calls that mutate engine state from
+#: a decoded WAL/ship record
+_APPLY_CALLS = ("_apply_records", "_apply_one", "apply_records",
+                "apply_record")
+
+#: verification calls that may appear anywhere (module-level gates)
+_VERIFY_CALLS = ("verify_records", "_verify_records", "verify_record",
+                 "decode_records")
+
+#: log reads that CRC-validate every record they return; the receiver
+#: chain must name the log (``self.wal.read_tail`` / ``read_log(dir)``)
+_VERIFIED_READS = ("read", "read_tail", "read_log")
+
+
+def _receiver_names(node: ast.AST) -> Iterator[str]:
+    while isinstance(node, ast.Attribute):
+        yield node.attr
+        node = node.value
+    if isinstance(node, ast.Name):
+        yield node.id
+
+
+def _is_verified_read(node: ast.Call) -> bool:
+    if isinstance(node.func, ast.Name):
+        return node.func.id == "read_log"
+    if not isinstance(node.func, ast.Attribute):
+        return False
+    if node.func.attr not in _VERIFIED_READS:
+        return False
+    return any("wal" in name.lower() or "log" in name.lower()
+               for name in _receiver_names(node.func.value))
+
+
+def _events(fn: ast.AST, aliases) -> List[Tuple[Tuple[int, int], str,
+                                                ast.AST]]:
+    events = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        pos = (node.lineno, node.col_offset)
+        canon = _common.call_canonical(node, aliases)
+        if _common.matches(canon, *_VERIFY_CALLS) or _is_verified_read(node):
+            events.append((pos, "verify", node))
+        elif _common.matches(canon, *_APPLY_CALLS):
+            events.append((pos, "apply", node))
+    events.sort(key=lambda e: e[0])
+    return events
+
+
+class Rule:
+    id = "ZQL009"
+    summary = "shipped WAL record applied before epoch/CRC verification"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not ctx.engine_owned:
+            return
+        aliases = _common.import_aliases(ctx.tree)
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fn.name in _APPLY_CALLS:
+                continue          # the apply implementation itself
+            events = _events(fn, aliases)
+            first_apply = next((e for e in events if e[1] == "apply"), None)
+            if first_apply is None:
+                continue          # function never applies records
+            first_verify = next((e for e in events if e[1] == "verify"),
+                                None)
+            if first_verify is None or first_apply[0] < first_verify[0]:
+                where = ("no verification in scope" if first_verify is None
+                         else f"verification only at line "
+                              f"{first_verify[0][0]}")
+                yield ctx.finding(
+                    first_apply[2], self.id,
+                    f"`{fn.name}` applies a shipped/journaled WAL record "
+                    f"(line {first_apply[0][0]}) before verifying its "
+                    f"epoch/CRC ({where}) — a torn span or a fenced "
+                    "zombie's stale history could mutate engine state; "
+                    "verify_records/decode first")
+
+
+RULE = Rule()

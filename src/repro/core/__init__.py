@@ -27,8 +27,11 @@ from repro.core.pushdown import (PushdownResult, cem_join_pushdown,
 from repro.core.prepare import PreparedDatabase, prepare
 from repro.core.online import (DeltaReport, OnlineEngine,
                                PartitionedOnlineEngine, PoisonBatchError)
-from repro.core.wal import BatchLog, WalCorruption
+from repro.core.wal import (BatchLog, StaleEpochError, TailCursor,
+                            WalCorruption)
 from repro.core.durability import DurableEngine
+from repro.core.replication import (ReplicatedEngine, Replica,
+                                    ReplicationRouter, SplitBrainError)
 
 __all__ = [
     "CoarsenSpec", "coarsen", "coarsen_columns", "KeyCodec", "groupby",
@@ -42,5 +45,6 @@ __all__ = [
     "features", "mahalanobis_transform", "masked_covariance",
     "pairwise_sqdist", "ps_distance_features", "DeltaReport", "OnlineEngine",
     "PartitionedOnlineEngine", "PoisonBatchError", "BatchLog",
-    "WalCorruption", "DurableEngine",
+    "WalCorruption", "StaleEpochError", "TailCursor", "DurableEngine",
+    "ReplicatedEngine", "Replica", "ReplicationRouter", "SplitBrainError",
 ]

@@ -102,6 +102,14 @@ def _assert_clean_keys(tree, path: str = "") -> None:
         _assert_clean_keys(v, path + k + ".")
 
 
+def _flatten_tree(tree) -> Dict[str, np.ndarray]:
+    """Flatten a packed snapshot to the flat ``a/b/c``-keyed array dict a
+    checkpoint restore yields, so in-memory bootstrap hand-off and
+    on-disk restore share one :func:`_unpack_snapshot` path."""
+    return {key: np.asarray(leaf)
+            for key, leaf in ckpt_mod._tree_paths(tree)}
+
+
 def _unflatten(arrays: Dict[str, np.ndarray], prefix: str) -> dict:
     """Nested dict of every flat-key array under ``prefix/``."""
     out: dict = {}
@@ -159,10 +167,12 @@ class DurableEngine:
     """
 
     def __init__(self, engine, directory: str, saver=None, injector=None,
-                 keep_last: int = 3):
+                 keep_last: int = 3, epoch: Optional[int] = None):
         self.engine = engine
         self.directory = directory
         self.wal = wal_mod.BatchLog(os.path.join(directory, "wal"))
+        if epoch is not None:
+            self.wal.set_epoch(epoch)
         self.ckpt_dir = os.path.join(directory, "ckpt")
         self.saver = saver if saver is not None else ckpt_mod.AsyncSaver()
         self.injector = injector
@@ -170,8 +180,13 @@ class DurableEngine:
         self._ckpt_step = ckpt_mod.latest_step(self.ckpt_dir) or 0
         self._pending_ckpt: Optional[Tuple[int, int]] = None
         self._durable_seq = 0
-        self._replay: List[wal_mod.Record] = []
+        self._replay_cursor = wal_mod.TailCursor(last_seq=self.wal.last_seq)
         self.degraded = False
+
+    @property
+    def epoch(self) -> int:
+        """The primary term stamped into appended WAL records."""
+        return self.wal.epoch
 
     # ------------------------------------------------------ fault points
     def _point(self, name: str) -> None:
@@ -271,6 +286,18 @@ class DurableEngine:
         self._durable_seq = seq
         self.wal.gc(self._durable_seq)
 
+    def export_bootstrap(self) -> Dict[str, np.ndarray]:
+        """Replica bootstrap snapshot: the committed canonical state plus
+        the WAL seq it covers, flattened to the flat-key array dict a
+        checkpoint restore yields.  A follower installs it through the
+        identical ``_unpack_snapshot`` / ``install_canonical`` path used
+        by crash recovery, so bootstrap inherits the cross-layout bitwise
+        restore guarantee; shipping then resumes from the covered seq."""
+        self._guard_degraded()
+        self.wal.sync()
+        snap = self.engine.export_canonical()    # commits in-flight chain
+        return _flatten_tree(_pack_snapshot(snap, self.wal.last_seq))
+
     def close(self) -> None:
         if self._pending_ckpt is not None:
             self._finish_pending_ckpt()
@@ -312,13 +339,16 @@ class DurableEngine:
                 older = [s for s in _all_steps(d.ckpt_dir) if s < step]
                 step = max(older) if older else None
                 after_seq = 0
-        records = d.wal.read(after_seq=after_seq)
-        if degraded_replay and records:
-            d._replay = records
+        if degraded_replay and d.wal.last_seq > after_seq:
+            # stage the tail behind a cursor: replay_step() pulls records
+            # incrementally (O(new bytes) per pull), serving stays up
+            d._replay_cursor = wal_mod.TailCursor(last_seq=after_seq)
             d.degraded = True
         else:
+            records = d.wal.read(after_seq=after_seq)
             d._apply_records(records)
             d.engine.commit()
+            d._replay_cursor = wal_mod.TailCursor(last_seq=d.wal.last_seq)
         return d
 
     def _apply_records(self, records) -> None:
@@ -334,15 +364,18 @@ class DurableEngine:
                            retract=rec.kind == KIND_RETRACT)
 
     def replay_step(self, n: int = 1) -> int:
-        """Apply up to ``n`` queued WAL records (degraded-mode staged
-        replay); returns how many remain. Leaves degraded mode — and
-        commits — when the queue drains."""
-        for _ in range(min(n, len(self._replay))):
-            self._apply_one(self._replay.pop(0))
-        if not self._replay and self.degraded:
-            self.engine.commit()
-            self.degraded = False
-        return len(self._replay)
+        """Apply up to ``n`` staged WAL records (degraded-mode replay);
+        returns how many remain. Leaves degraded mode — and commits —
+        when the tail drains. Records are pulled through the persistent
+        tail cursor, so each step scans only the bytes it consumes."""
+        if self.degraded:
+            records, self._replay_cursor = self.wal.read_tail(
+                self._replay_cursor, max_records=n)
+            self._apply_records(records)
+            if self._replay_cursor.last_seq >= self.wal.last_seq:
+                self.engine.commit()
+                self.degraded = False
+        return max(0, self.wal.last_seq - self._replay_cursor.last_seq)
 
     # ----------------------------------------------------------- queries
     # explicit proxies for the serving/query surface (ServingEngine and

@@ -117,6 +117,13 @@ class ServedQuery:
     #: crash recovery (``DurableEngine.degraded``) — the estimate reflects
     #: the restored snapshot, not yet the full journaled stream.
     degraded: bool = False
+    #: how many primary WAL seqs behind the answering engine was at wave
+    #: assembly (``repro.core.replication.Replica.replica_lag``); 0 when
+    #: serving from the primary or an unreplicated engine. Bounded
+    #: staleness: the router only routes to replicas within
+    #: ``max_lag_seqs`` / ``max_lag_secs``, and every answer carries its
+    #: actual lag so the client can judge freshness itself.
+    replica_lag: int = 0
 
 
 class ServingEngine:
@@ -137,7 +144,8 @@ class ServingEngine:
     (n_served - n_cache_served) / n_waves), ``n_requeued`` (wave slots
     pushed back to the queue because a commit landed mid-wave — the
     one-version-per-wave invariant), ``n_shed`` (oldest queries dropped
-    because the bounded queue overflowed).
+    because the bounded queue overflowed), ``n_expired`` (queries whose
+    deadline passed before wave assembly — dropped slot-free).
 
     ``max_queue`` bounds the submit queue (None = unbounded): when a new
     submit would exceed it the OLDEST pending query is shed and counted —
@@ -151,7 +159,7 @@ class ServingEngine:
     ``state_version``, honestly labeled as not yet caught up."""
 
     def __init__(self, engine, n_slots: int = 64,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None, clock=time.monotonic):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if max_queue is not None and max_queue < 1:
@@ -159,6 +167,7 @@ class ServingEngine:
         self.engine = engine
         self.n_slots = int(n_slots)
         self.max_queue = None if max_queue is None else int(max_queue)
+        self.clock = clock
         self._queue: collections.deque = collections.deque()
         self._next_qid = 0
         self.n_served = 0
@@ -168,13 +177,19 @@ class ServingEngine:
         self.n_slots_used = 0
         self.n_requeued = 0
         self.n_shed = 0
+        self.n_expired = 0
 
-    def submit(self, spec) -> int:
+    def submit(self, spec, deadline: Optional[float] = None) -> int:
         """Enqueue one query; returns its ticket id. ``spec`` is a
         :class:`QuerySpec` or anything ``QuerySpec.make`` accepts as
         ``(treatment, subpopulation)``. With a bounded queue the OLDEST
         pending query is shed (and ``n_shed`` bumped) to admit this one —
-        its ticket id will simply never appear in a ``step()`` result."""
+        its ticket id will simply never appear in a ``step()`` result.
+
+        ``deadline`` is an absolute ``clock`` timestamp: a query whose
+        deadline has passed by the time a wave assembles is dropped with
+        ``n_expired`` bumped — an expired query never occupies a dispatch
+        slot and never appears in a result (its caller stopped waiting)."""
         if not isinstance(spec, QuerySpec):
             treatment, sub = spec
             spec = QuerySpec.make(treatment, sub)
@@ -184,7 +199,7 @@ class ServingEngine:
             while len(self._queue) >= self.max_queue:
                 self._queue.popleft()
                 self.n_shed += 1
-        self._queue.append((qid, spec))
+        self._queue.append((qid, spec, deadline))
         return qid
 
     def pending(self) -> int:
@@ -212,31 +227,36 @@ class ServingEngine:
         if not self._queue:
             return {}
         done: Dict[int, ServedQuery] = {}
-        wave: List[Tuple[int, QuerySpec]] = []
+        wave: List[Tuple[int, QuerySpec, Optional[float]]] = []
         wave_keys: Dict[Tuple, int] = {}
         back: collections.deque = collections.deque()
         n_dup = 0
+        now = self.clock()
         version = self.engine.snapshot_version()
         degraded = bool(getattr(self.engine, "degraded", False))
+        lag = int(getattr(self.engine, "replica_lag", 0))
         while self._queue:
-            qid, spec = self._queue.popleft()
+            qid, spec, deadline = self._queue.popleft()
+            if deadline is not None and deadline < now:
+                self.n_expired += 1      # caller gave up: free, no slot
+                continue
             hit = self.engine.cached_estimate(spec.treatment,
                                               spec.subpopulation)
             if hit is not None:
                 self.n_cache_served += 1
                 done[qid] = ServedQuery(qid, spec, hit, spec.select(hit),
                                         cached=True, state_version=version,
-                                        degraded=degraded)
+                                        degraded=degraded, replica_lag=lag)
                 continue
             key = (spec.treatment, spec.subpopulation)
             if key not in wave_keys and len(wave_keys) >= self.n_slots:
-                back.append((qid, spec))     # next window
+                back.append((qid, spec, deadline))     # next window
                 continue
             if key in wave_keys:
                 n_dup += 1
             else:
                 wave_keys[key] = len(wave_keys)
-            wave.append((qid, spec))
+            wave.append((qid, spec, deadline))
         if wave and self.engine.snapshot_version() != version:
             # a commit straddled this wave: these slots would answer from
             # a NEWER snapshot than the cache hits above — requeue them
@@ -251,14 +271,14 @@ class ServingEngine:
             self.n_waves += 1
             self.n_deduped += n_dup
             self.n_slots_used += len(wave_keys)
-            ests = self.engine.ate_batch([s for _, s in wave])
+            ests = self.engine.ate_batch([s for _, s, _ in wave])
             assert self.engine.snapshot_version() == version, (
                 "one-version-per-wave violated: engine state committed "
                 "during a batched query dispatch")
-            for (qid, spec), est in zip(wave, ests):
+            for (qid, spec, _), est in zip(wave, ests):
                 done[qid] = ServedQuery(qid, spec, est, spec.select(est),
                                         cached=False, state_version=version,
-                                        degraded=degraded)
+                                        degraded=degraded, replica_lag=lag)
         self.n_served += len(done)
         return done
 

@@ -173,6 +173,24 @@ def event_counts() -> dict:
         return dict(_events)
 
 
+def record_replication(**counts: int) -> None:
+    """Account replication-tier events under the ``repl.`` namespace —
+    ``record_replication(ship_records=3, ship_bytes=n)`` from the shipping
+    loop, ``failovers=1`` from promotion, ``stale_rejects=1`` from epoch
+    fencing. Process-global (the ship/apply loops may run off-thread) and
+    host-side only: accounting must never touch a device buffer."""
+    for name, n in counts.items():
+        record_event(f"repl.{name}", int(n))
+
+
+def replication_counts() -> dict:
+    """Snapshot of the ``repl.*`` counters, namespace stripped:
+    ``{"ship_records": 12, "failovers": 1, ...}``."""
+    with _events_lock:
+        return {k[len("repl."):]: v for k, v in _events.items()
+                if k.startswith("repl.")}
+
+
 def hot_path(fn: Callable) -> Callable:
     """Marker for traced hot-path bodies: ``fn`` runs INSIDE a compiled
     program (a fused-pipeline body, a shard_map shard body, a Pallas

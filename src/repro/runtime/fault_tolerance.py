@@ -22,10 +22,15 @@ from repro.checkpoint import latest_step, restore, save
 
 @dataclasses.dataclass
 class RecoveryPlan:
-    action: str                      # "continue" | "elastic_restart" | "wait"
+    # "continue" | "elastic_restart" | "failover" | "wait"
+    action: str
     dead_hosts: List[int]
     survivor_hosts: List[int]
     restart_step: Optional[int] = None
+    #: failover only: the most-caught-up survivor (highest beaten step —
+    #: for the replication tier, its durable WAL seq), ties to the lowest
+    #: host id so every observer picks the SAME candidate deterministically
+    promote_to: Optional[int] = None
 
 
 class HeartbeatMonitor:
@@ -48,9 +53,23 @@ class HeartbeatMonitor:
                 if now - self.last_seen[h] > self.timeout_s]
 
     def plan(self, ckpt_dir: Optional[str] = None,
-             min_hosts: int = 1) -> RecoveryPlan:
+             min_hosts: int = 1,
+             primary: Optional[int] = None) -> RecoveryPlan:
+        """Liveness verdict. With ``primary`` given (the replication
+        tier's write node), a dead primary with live followers yields a
+        ``"failover"`` plan naming ``promote_to`` — the survivor whose
+        last beaten step (durable WAL seq) is highest, ties broken toward
+        the lowest host id. Follower deaths alone are ``"continue"``:
+        the tier keeps serving on the remaining nodes."""
         dead = self.dead_hosts()
         alive = [h for h in range(self.n_hosts) if h not in dead]
+        if primary is not None:
+            if primary not in dead:
+                return RecoveryPlan("continue", dead, alive)
+            if not alive:
+                return RecoveryPlan("wait", dead, alive)
+            best = max(alive, key=lambda h: (self.last_step[h], -h))
+            return RecoveryPlan("failover", dead, alive, promote_to=best)
         if not dead:
             return RecoveryPlan("continue", [], alive)
         if len(alive) < min_hosts:

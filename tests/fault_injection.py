@@ -20,11 +20,31 @@ Crash points (in ingest/commit/checkpoint order):
                             to the async writer (mid-checkpoint publish)
 ==========================  ===============================================
 
+The replication tier (``repro.core.replication``) fires its own points
+on every ship/apply/promote boundary:
+
+==========================  ===============================================
+``ship.pre-send``           WAL tail read, bytes not yet delivered
+                            (primary dies mid-segment)
+``ship.post-send``          follower accepted the span, cursor not moved
+``replica.pre-apply``       record journaled on the follower, not applied
+                            (replica dies mid-replay)
+``replica.post-apply``      record applied, commit possibly pending
+``promote.pre-fence``       failover chosen a candidate, nothing done yet
+``promote.post-fence``      old primary fenced + epoch bumped, candidate
+                            not yet drained or promoted
+``promote.post-drain``      candidate caught up, directory not re-opened
+                            as the new primary
+==========================  ===============================================
+
 Disk-damage helpers complete the harness: :func:`tear_wal_tail`
 truncates the last WAL segment mid-record (simulating a crash during a
 buffered write), :func:`corrupt_wal_record` flips a byte inside a
-record's payload, and :func:`corrupt_checkpoint_shard` flips a byte in a
-published shard so restore's CRC validation must reject the step.
+record's payload, :func:`corrupt_checkpoint_shard` flips a byte in a
+published shard so restore's CRC validation must reject the step, and
+:func:`tear_ship` truncates an in-flight shipped span (install it as
+``ReplicatedEngine.ship_filter``) so the follower must accept exactly
+the valid prefix and re-request the rest.
 """
 from __future__ import annotations
 
@@ -35,6 +55,12 @@ from repro.core import wal as wal_mod
 #: every point DurableEngine fires, for parametrized crash matrices
 CRASH_POINTS = ("wal.pre-append", "wal.post-append", "ingest.post-dispatch",
                 "commit.pre", "commit.post", "ckpt.pre-save")
+
+#: every point the replication tier fires (ship/apply/promote boundaries)
+REPLICATION_CRASH_POINTS = ("ship.pre-send", "ship.post-send",
+                            "replica.pre-apply", "replica.post-apply",
+                            "promote.pre-fence", "promote.post-fence",
+                            "promote.post-drain")
 
 
 class InjectedCrash(BaseException):
@@ -89,14 +115,31 @@ def corrupt_wal_record(wal_dir: str, index: int = 0) -> str:
     off = 0
     hsize = wal_mod._HEADER_SIZE
     for _ in range(index):
-        _, _, _, length, _ = wal_mod._HEADER.unpack_from(data, off)
+        length = wal_mod._HEADER.unpack_from(data, off)[4]
         off += hsize + length
-    _, _, _, length, _ = wal_mod._HEADER.unpack_from(data, off)
+    length = wal_mod._HEADER.unpack_from(data, off)[4]
     assert length > 0, "cannot corrupt an empty payload"
     data[off + hsize] ^= 0xFF
     with open(path, "wb") as f:
         f.write(data)
     return path
+
+
+def tear_ship(drop_bytes: int = 7, times: int = 1):
+    """A ``ReplicatedEngine.ship_filter`` that truncates the first
+    ``times`` non-empty shipped spans by ``drop_bytes`` — the wire twin
+    of :func:`tear_wal_tail`. The follower must CRC-reject the torn
+    suffix, journal only the valid prefix, and catch up from the re-ship
+    on the next tick."""
+    state = {"left": int(times)}
+
+    def _filter(node_id: int, data: bytes) -> bytes:
+        if data and state["left"] > 0:
+            state["left"] -= 1
+            return data[:max(0, len(data) - drop_bytes)]
+        return data
+
+    return _filter
 
 
 def corrupt_checkpoint_shard(step_dir: str) -> str:

@@ -329,6 +329,57 @@ def test_zql008_quiet_on_journal_first_and_no_wal(tmp_path):
         """)) == []
 
 
+# ------------------------------------------------------------ ZQL009
+def test_zql009_fires_on_apply_without_verify(tmp_path):
+    out = _lint_snippet(tmp_path, OWNED + _D("""\
+        class Follower:
+            def receive(self, records):
+                for rec in records:
+                    self._apply_one(rec)            # unverified: WRONG
+        """))
+    assert _rules(out) == ["ZQL009"]
+    assert out[0].line == 5
+
+
+def test_zql009_fires_on_apply_before_verify(tmp_path):
+    out = _lint_snippet(tmp_path, OWNED + _D("""\
+        from repro.core.replication import verify_records
+
+        class Follower:
+            def catch_up(self, records):
+                self._apply_records(records)        # applied first: WRONG
+                verify_records(records, 1, 0)
+        """))
+    assert _rules(out) == ["ZQL009"]
+
+
+def test_zql009_quiet_on_verify_then_apply(tmp_path):
+    # both verification shapes: the module gate, and a CRC-validating
+    # read on a log-named receiver
+    assert _lint_snippet(tmp_path, OWNED + _D("""\
+        from repro.core.replication import verify_records
+
+        class Follower:
+            def catch_up(self, records):
+                fresh = verify_records(records, self.epoch, self.seq)
+                self._apply_records(fresh)
+
+            def replay(self):
+                records, cur = self.wal.read_tail(self.cursor)
+                self._apply_records(records)
+
+            def _apply_records(self, records):
+                for rec in records:
+                    self._apply_one(rec)
+        """)) == []
+    # non-engine-owned modules are out of scope
+    assert _lint_snippet(tmp_path, _D("""\
+        def helper(records, engine):
+            for rec in records:
+                engine._apply_one(rec)
+        """)) == []
+
+
 def test_inline_suppression_drops_the_finding(tmp_path):
     out = _lint_snippet(tmp_path, OWNED + _D("""\
         import jax

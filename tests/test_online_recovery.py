@@ -167,6 +167,102 @@ def test_wal_rollback_removes_failed_op_record(tmp_path):
         (1, 1), (2, 2)]
 
 
+def test_wal_rollback_first_record_of_rotated_segment(tmp_path):
+    """Rolling back the record that OPENED a freshly rotated segment must
+    delete the segment file entirely — an empty wal-N.log would make the
+    next reopen see a bogus start seq."""
+    d = str(tmp_path / "wal")
+    log = BatchLog(d)
+    log.append_evict(ttl=1)
+    log.rotate()
+    mark = log.mark()
+    log.append_evict(ttl=9)                     # first record of wal-2
+    assert len(wal_mod._segment_files(d)) == 2
+    log.rollback(mark)
+    assert log.last_seq == 1
+    assert len(wal_mod._segment_files(d)) == 1  # the new segment is gone
+    log.append_evict(ttl=2)                     # seq 2 reused cleanly
+    log.close()
+    assert [(r.seq, r.evict_ttl()) for r in wal_mod.read_log(d)] == [
+        (1, 1), (2, 2)]
+    assert BatchLog(d).last_seq == 2
+
+
+def test_wal_gc_boundary_exactly_on_segment_start(tmp_path):
+    """gc(upto_seq) landing exactly on a segment-start seq: the PREVIOUS
+    segment (whose last record is upto_seq's predecessor) is covered and
+    dropped; the segment STARTING at upto_seq keeps its uncovered tail."""
+    d = str(tmp_path / "wal")
+    log = BatchLog(d)
+    for _ in range(3):
+        log.append_evict(ttl=0)                 # wal-1: seqs 1..3
+    log.rotate()
+    for _ in range(3):
+        log.append_evict(ttl=0)                 # wal-4: seqs 4..6
+    log.rotate()
+    log.append_evict(ttl=0)                     # wal-7: seq 7
+    log.rotate()
+    log.gc(upto_seq=4)                          # exactly wal-4's start
+    assert [s for s, _ in wal_mod._segment_files(d)] == [4, 7]
+    assert [r.seq for r in wal_mod.read_log(d)] == [4, 5, 6, 7]
+    log.gc(upto_seq=6)                          # wal-4 fully covered now
+    assert [s for s, _ in wal_mod._segment_files(d)] == [7]
+    assert [r.seq for r in wal_mod.read_log(d)] == [7]
+    log.close()
+
+
+def test_wal_read_after_seq_spans_rotation(tmp_path):
+    """read(after_seq) with the cut INSIDE one segment returns the rest
+    of that segment plus everything in later segments, in order — and
+    read_tail resumes across the same rotation boundary."""
+    d = str(tmp_path / "wal")
+    log = BatchLog(d)
+    for i in range(3):
+        log.append_evict(ttl=i)                 # wal-1: 1..3
+    log.rotate()
+    for i in range(3):
+        log.append_evict(ttl=i)                 # wal-4: 4..6
+    assert [r.seq for r in log.read(after_seq=2)] == [3, 4, 5, 6]
+    cur = wal_mod.TailCursor()
+    recs, cur = log.read_tail(cur, max_records=2)   # stops inside wal-1
+    assert [r.seq for r in recs] == [1, 2]
+    recs, cur = log.read_tail(cur)                  # resumes across rotate
+    assert [r.seq for r in recs] == [3, 4, 5, 6]
+    log.close()
+
+
+def test_wal_tail_cursor_scans_only_new_bytes(tmp_path):
+    """The shipping/replay regression: repeated tail reads must cost
+    O(new bytes), not O(log) — an idle re-read scans ZERO bytes, and a
+    read after one small append scans exactly that record."""
+    d = str(tmp_path / "wal")
+    log = BatchLog(d)
+    b = _batch(512, 1)
+    cols = {k: np.asarray(v) for k, v in b.columns.items()}
+    for _ in range(4):                          # ~4 large batch records
+        log.append_batch(wal_mod.KIND_INGEST, cols, np.asarray(b.valid))
+    cur = wal_mod.TailCursor()
+    recs, cur = log.read_tail(cur)
+    assert len(recs) == 4
+    base = log.bytes_scanned
+    recs, cur = log.read_tail(cur)              # idle: nothing new
+    assert recs == [] and log.bytes_scanned == base
+    small = log.append_evict(ttl=1)
+    recs, cur = log.read_tail(cur)
+    assert [r.seq for r in recs] == [small]
+    delta = log.bytes_scanned - base
+    assert delta == wal_mod._HEADER_SIZE + len(recs[0].payload), \
+        f"tail read scanned {delta} bytes for one small record"
+    log.rotate()                                # and across a rotation
+    log.append_evict(ttl=2)
+    base = log.bytes_scanned
+    recs, cur = log.read_tail(cur)
+    assert len(recs) == 1
+    assert log.bytes_scanned - base == (wal_mod._HEADER_SIZE
+                                        + len(recs[0].payload))
+    log.close()
+
+
 def test_snapshot_pack_unpack_rejects_dirty_keys():
     snap = dict(views={}, scalars={"state_version": 1, "ingest_count": 0,
                                    "n_rows_ingested": 0, "delta_cap": 16},

@@ -217,6 +217,54 @@ def test_serving_engine_waves_counters_and_invalidation(label):
     _assert_bitwise(res3[0].estimate, eng.ate("ta"), label)
 
 
+def test_deadline_expired_queries_drop_slot_free():
+    """A query whose deadline passed before wave assembly is dropped with
+    ``n_expired`` bumped — it never occupies a slot, never dispatches,
+    and never appears in a result; live queries in the same wave are
+    unaffected. Deadlines are judged against the injectable clock AT wave
+    assembly, so a query that expires while queued behind a full wave is
+    dropped by the LATER wave that would have admitted it."""
+    engines = _engines()
+    _feed(engines, n_batches=2)
+    eng = engines["replicated"]
+    now = {"t": 100.0}
+    srv = ServingEngine(eng, n_slots=2, clock=lambda: now["t"])
+    eng.ate("ta")                               # warm the trace
+    eng._cache.clear()
+    live = srv.submit(QuerySpec("ta"), deadline=200.0)
+    dead = srv.submit(QuerySpec("tb"), deadline=99.0)   # already expired
+    forever = srv.submit(QuerySpec("ta", {"x2": [0]}))  # no deadline
+    with count_dispatches(label="query") as n:
+        out = {}
+        while srv.pending():
+            out.update(srv.step())
+    assert n() == 1                             # one wave, 2 live slots
+    assert srv.n_waves == 1 and srv.n_slots_used == 2
+    assert srv.n_expired == 1
+    assert set(out) == {live, forever} and dead not in out
+    assert srv.n_served == 2
+    # expiry-while-queued: 3 unique specs on 1 slot; the clock jumps past
+    # the last query's deadline while it waits behind the first waves
+    srv2 = ServingEngine(eng, n_slots=1, clock=lambda: now["t"])
+    eng._cache.clear()
+    a = srv2.submit(QuerySpec("ta"))
+    b = srv2.submit(QuerySpec("tb"))
+    c = srv2.submit(QuerySpec("ta", {"x2": [0]}), deadline=150.0)
+    out = dict(srv2.step())                     # serves a; b, c requeued
+    assert set(out) == {a}
+    now["t"] = 151.0                            # c expires in the queue
+    while srv2.pending():
+        out.update(srv2.step())
+    assert set(out) == {a, b} and c not in out
+    assert srv2.n_expired == 1
+    # an expired CACHE HIT is also dropped: the caller stopped waiting
+    srv3 = ServingEngine(eng, clock=lambda: now["t"])
+    eng.ate("ta")                               # populate the cache
+    gone = srv3.submit(QuerySpec("ta"), deadline=now["t"] - 1.0)
+    assert srv3.step() == {} and srv3.n_expired == 1
+    assert srv3.n_cache_served == 0 and gone is not None
+
+
 def test_poisson_load_serves_everything():
     engines = _engines()
     _feed(engines, n_batches=2)

@@ -1,0 +1,404 @@
+"""Replication tier: WAL shipping, bounded staleness, failover, chaos.
+
+The contract under test (docs/architecture.md — Replication & failover):
+a follower at applied-seq s is BITWISE identical to the primary at seq s
+— and therefore to a never-crashed twin fed the same first s batches
+(the lagging-oracle property). That must survive every chaos crash point
+on the ship/apply/promote boundaries, torn shipped spans, follower
+crashes, lagging-replica promotion, and a zombie primary waking up after
+failover (whose appends must be fenced at BOTH layers: its own log and
+any follower it tries to ship to). Steady-state primary ingest must stay
+one dispatch / zero host syncs with shipping active.
+"""
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from fault_injection import (REPLICATION_CRASH_POINTS, FaultInjector,
+                             InjectedCrash, tear_ship)
+from repro.core import ReplicatedEngine, StaleEpochError
+from repro.core import wal as wal_mod
+from repro.core.replication import (PrimaryDownError, ReplicationError,
+                                    SplitBrainError, verify_records)
+from repro.core.serving import QuerySpec
+from repro.launch.trace import count_dispatches, count_host_syncs
+from test_online_recovery import (_assert_bitwise, _assert_twin_equal,
+                                  _batch, _fresh)
+
+LAYOUTS = ("replicated", "replicated", "partitioned")
+
+
+class _Clock:
+    """Deterministic injectable time source for heartbeats/staleness."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _cluster(tmp_path, layouts=LAYOUTS, name="cluster", **kw):
+    clock = _Clock()
+    kw.setdefault("heartbeat_timeout_s", 5.0)
+    eng = ReplicatedEngine([_fresh(lay) for lay in layouts],
+                           str(tmp_path / name), clock=clock, **kw)
+    return eng, clock
+
+
+def _twin_at(batches, seq, layout="overlap"):
+    """A never-crashed single-node oracle fed the first ``seq`` batches
+    (each ingest is exactly one WAL seq)."""
+    twin = _fresh(layout)
+    for b in batches[:seq]:
+        twin.ingest(b)
+        twin.commit()
+    return twin
+
+
+def _feed(cluster, clock, batches, tick=True):
+    for b in batches:
+        cluster.ingest(b)
+        cluster.commit()
+        if tick:
+            clock.advance(1.0)
+            cluster.tick()
+
+
+# ------------------------------------------------ steady-state shipping
+def test_steady_state_followers_bitwise_and_lag_zero(tmp_path):
+    """Cross-layout followers converge bitwise with the primary and a
+    never-crashed twin; caught-up lag is exactly zero; the follower's
+    journaled log is a byte-exact copy of the primary's records."""
+    cluster, clock = _cluster(tmp_path)
+    batches = [_batch(48, s) for s in range(6)]
+    _feed(cluster, clock, batches)
+    twin = _twin_at(batches, len(batches))
+    _assert_twin_equal(cluster, twin, "primary")
+    for nid, rep in cluster.replicas.items():
+        assert rep.applied_seq == cluster.primary.wal.last_seq
+        assert rep.replica_lag == 0
+        assert rep.n_torn_ships == 0
+        _assert_twin_equal(rep, twin, f"replica-{nid}")
+        prim = wal_mod.read_log(os.path.join(str(tmp_path / "cluster"),
+                                             "node0", "wal"))
+        ship = wal_mod.read_log(os.path.join(str(tmp_path / "cluster"),
+                                             f"node{nid}", "wal"))
+        assert (wal_mod.encode_records(ship)
+                == wal_mod.encode_records(prim)), \
+            f"replica-{nid} log is not a byte-exact copy"
+
+
+# ------------------------------------------------------ chaos matrix
+@pytest.mark.parametrize("point", REPLICATION_CRASH_POINTS)
+def test_chaos_crash_matrix_failover_bitwise(tmp_path, point):
+    """Crash at EVERY ship/apply/promote boundary, then fail over: the
+    promoted node must equal a never-crashed twin at its own applied seq
+    and the zombie primary's appends must be fenced."""
+    inj = FaultInjector(crash_at=point)
+    cluster, clock = _cluster(tmp_path, injector=inj, name=f"c-{point}")
+    batches = [_batch(48, s) for s in range(6)]
+    for b in batches:
+        cluster.ingest(b)
+        cluster.commit()
+        clock.advance(1.0)
+        try:
+            cluster.tick()
+        except InjectedCrash:
+            pass                         # ship/apply points fire here
+    clock.advance(1.0)
+    cluster.tick()                       # converge whatever the crash tore
+    zombie = cluster.kill_primary()
+    clock.advance(10.0)
+    try:
+        promoted = cluster.tick()        # promote points fire here
+    except InjectedCrash:
+        clock.advance(1.0)
+        promoted = cluster.tick()        # promotion must be retryable
+    assert inj.fired, f"crash point {point} never reached"
+    assert promoted is not None and promoted == cluster.primary_id
+    assert cluster.epoch >= 2
+    seq = cluster.primary.wal.last_seq
+    assert 0 < seq <= len(batches)
+    _assert_twin_equal(cluster, _twin_at(batches, seq), point)
+    with pytest.raises(StaleEpochError):
+        zombie.ingest(_batch(16, 99))
+    # post-failover writes + shipping keep the survivors converging
+    more = _batch(48, 100)
+    cluster.ingest(more)
+    cluster.commit()
+    clock.advance(1.0)
+    cluster.tick()
+    twin = _twin_at(batches, seq)
+    twin.ingest(more)
+    twin.commit()
+    _assert_twin_equal(cluster, twin, (point, "post-failover"))
+    for nid, rep in cluster.replicas.items():
+        if rep.alive and rep.replica_lag == 0:
+            _assert_twin_equal(rep, twin, (point, f"replica-{nid}"))
+
+
+# ------------------------------------------------------ lagging oracle
+def test_lagging_replica_promotion_is_a_lagging_oracle(tmp_path):
+    """Acknowledged-but-unshipped records are lost on failover, exactly
+    like any async log-shipping database: the promoted node equals the
+    twin at ITS OWN applied seq — older answers, never wrong ones."""
+    cluster, clock = _cluster(tmp_path)
+    batches = [_batch(48, s) for s in range(6)]
+    _feed(cluster, clock, batches[:4])                   # shipped
+    _feed(cluster, clock, batches[4:], tick=False)       # acked, unshipped
+    cluster.kill_primary()
+    clock.advance(10.0)
+    promoted = cluster.tick()
+    assert promoted is not None
+    assert cluster.primary.wal.last_seq == 4
+    _assert_twin_equal(cluster, _twin_at(batches, 4), "lagging-oracle")
+
+
+def test_failover_promotes_most_caught_up_follower(tmp_path):
+    """The heartbeat plan's candidate is the live follower with the most
+    durable WAL seqs; a partitioned (unshipped) follower never wins."""
+    cluster, clock = _cluster(tmp_path)
+
+    def drop_for_node2(nid, data):
+        return b"" if nid == 2 else data
+
+    cluster.ship_filter = drop_for_node2
+    batches = [_batch(48, s) for s in range(5)]
+    _feed(cluster, clock, batches)
+    assert cluster.replicas[1].wal.last_seq == 5
+    assert cluster.replicas[2].wal.last_seq == 0
+    cluster.kill_primary()
+    clock.advance(10.0)
+    assert cluster.tick() == 1
+    _assert_twin_equal(cluster, _twin_at(batches, 5), "most-caught-up")
+
+
+def test_forced_promotion_of_lagging_follower_serves_its_own_seq(tmp_path):
+    """Even promoting the WORST follower (operator override) yields a
+    correct engine at that follower's applied seq."""
+    cluster, clock = _cluster(tmp_path)
+    batches = [_batch(48, s) for s in range(5)]
+    _feed(cluster, clock, batches[:2])
+    cluster.ship_filter = lambda nid, data: b"" if nid == 2 else data
+    _feed(cluster, clock, batches[2:])
+    cluster.kill_primary()
+    assert cluster.failover(candidate=2) == 2
+    assert cluster.primary.wal.last_seq == 2
+    _assert_twin_equal(cluster, _twin_at(batches, 2), "forced-lagging")
+
+
+# -------------------------------------------------- fencing / split brain
+def test_zombie_fencing_both_layers(tmp_path):
+    """After promotion the deposed primary is fenced twice over: its own
+    log rejects appends (StaleEpochError at the WAL), and any follower
+    it still reaches rejects its stale-epoch ships outright."""
+    cluster, clock = _cluster(tmp_path)
+    batches = [_batch(48, s) for s in range(4)]
+    _feed(cluster, clock, batches)
+    old_epoch = cluster.epoch
+    zombie = cluster.kill_primary()
+    clock.advance(10.0)
+    promoted = cluster.tick()
+    assert promoted is not None and cluster.epoch == old_epoch + 1
+    # layer 1: the zombie's own WAL is fenced — no divergent history
+    with pytest.raises(StaleEpochError):
+        zombie.ingest(_batch(16, 50))
+    with pytest.raises(StaleEpochError):
+        zombie.evict(1)
+    # layer 2: a surviving follower rejects a span shipped at the old term
+    (nid, rep), = [kv for kv in cluster.replicas.items() if kv[1].alive]
+    fake = wal_mod.Record(wal_mod.KIND_EVICT, rep.wal.last_seq + 1,
+                          b'{"ttl": 1}', epoch=old_epoch)
+    before = rep.applied_seq
+    with pytest.raises(StaleEpochError):
+        rep.receive(wal_mod.encode_records([fake]), ship_epoch=old_epoch)
+    assert rep.n_stale_rejects == 1
+    assert rep.wal.last_seq == before and rep.applied_seq == before
+
+
+def test_double_promotion_same_epoch_is_split_brain(tmp_path):
+    """The promotion CAS admits exactly one winner per epoch."""
+    cluster, clock = _cluster(tmp_path)
+    _feed(cluster, clock, [_batch(48, s) for s in range(3)])
+    cluster.kill_primary()
+    observed = cluster.epoch
+    assert cluster.promote(1, expect_epoch=observed) == 1
+    with pytest.raises(SplitBrainError):
+        cluster.promote(2, expect_epoch=observed)
+
+
+def test_writes_fail_fast_while_primary_is_down(tmp_path):
+    cluster, clock = _cluster(tmp_path)
+    _feed(cluster, clock, [_batch(48, 0)])
+    cluster.kill_primary()
+    with pytest.raises(PrimaryDownError):
+        cluster.ingest(_batch(16, 1))
+    clock.advance(10.0)
+    assert cluster.tick() is not None       # failover restores writes
+    cluster.ingest(_batch(16, 1))
+
+
+def test_verify_records_rejects_gaps_and_epoch_regressions():
+    recs = [wal_mod.Record(wal_mod.KIND_EVICT, s, b'{"ttl": 1}', epoch=1)
+            for s in (1, 2, 3)]
+    assert [r.seq for r in verify_records(recs, 1, after_seq=1)] == [2, 3]
+    with pytest.raises(wal_mod.WalCorruption):
+        verify_records([recs[0], recs[2]], 1, after_seq=0)   # seq gap
+    bad = [wal_mod.Record(wal_mod.KIND_EVICT, 1, b'{}', epoch=2),
+           wal_mod.Record(wal_mod.KIND_EVICT, 2, b'{}', epoch=1)]
+    with pytest.raises(wal_mod.WalCorruption):
+        verify_records(bad, 2, after_seq=0)                  # epoch drop
+    with pytest.raises(StaleEpochError):
+        verify_records([bad[0]], 1, after_seq=0)             # from future
+
+
+# ------------------------------------------------------------ torn ships
+def test_torn_ship_accepts_prefix_then_catches_up(tmp_path):
+    """A truncated in-flight span journals only its CRC-valid prefix;
+    the cursor does not advance past what landed, so the next tick
+    re-ships the suffix and the follower converges bitwise."""
+    cluster, clock = _cluster(tmp_path, layouts=("replicated",
+                                                 "replicated"))
+    batches = [_batch(48, s) for s in range(3)]
+    _feed(cluster, clock, batches[:1])
+    cluster.ship_filter = tear_ship(drop_bytes=7, times=1)
+    cluster.ingest(batches[1])
+    cluster.commit()
+    clock.advance(1.0)
+    cluster.tick()                                  # torn delivery
+    rep = cluster.replicas[1]
+    assert rep.n_torn_ships == 1
+    assert rep.wal.last_seq == 1                    # prefix only
+    clock.advance(1.0)
+    cluster.tick()                                  # clean re-ship
+    assert rep.wal.last_seq == 2 and rep.replica_lag == 0
+    cluster.ingest(batches[2])
+    cluster.commit()
+    clock.advance(1.0)
+    cluster.tick()
+    _assert_twin_equal(rep, _twin_at(batches, 3), "torn-ship")
+
+
+# --------------------------------------------- follower crash + rejoin
+@pytest.mark.parametrize("layout", ["replicated", "partitioned"])
+def test_replica_crash_recovers_from_own_directory(tmp_path, layout):
+    """A crashed follower rebuilds from its OWN directory (bootstrap
+    checkpoint + locally journaled shipped log), rejoins, and converges
+    bitwise — across layouts."""
+    cluster, clock = _cluster(tmp_path,
+                              layouts=("replicated", layout, "replicated"))
+    batches = [_batch(48, s) for s in range(6)]
+    _feed(cluster, clock, batches[:3])
+    cluster.kill_replica(1)
+    _feed(cluster, clock, batches[3:5])             # misses two ships
+    rep = cluster.reattach_replica(1, _fresh(layout))
+    assert rep.applied_seq == 3                     # its durable history
+    _feed(cluster, clock, batches[5:])
+    assert rep.replica_lag == 0
+    _assert_twin_equal(rep, _twin_at(batches, 6), f"rejoin-{layout}")
+
+
+# ------------------------------------------------- bounded staleness
+def test_router_bounded_staleness_seq_and_time(tmp_path):
+    """Follower reads stay within max_lag_seqs AND max_lag_secs; outside
+    either bound the router falls back to the primary. Every answer
+    carries the answering node's actual replica_lag."""
+    cluster, clock = _cluster(tmp_path,
+                              layouts=("replicated", "replicated"),
+                              max_lag_seqs=0, max_lag_secs=5.0)
+    batches = [_batch(48, s) for s in range(3)]
+    _feed(cluster, clock, batches[:2])
+    spec = QuerySpec("ta")
+    # caught up: the follower serves, tagged lag 0
+    out = cluster.router.serve([spec])
+    assert cluster.router.n_replica_waves == 1
+    assert cluster.router.n_primary_waves == 0
+    (sq,) = out.values()
+    assert sq.replica_lag == 0
+    _assert_bitwise(sq.estimate, cluster.ate("ta"), "router-fresh")
+    # seq staleness: shipped but unapplied -> lag 1 > max_lag_seqs=0
+    cluster.ingest(batches[2])
+    cluster.commit()
+    cluster.ship()
+    rep = cluster.replicas[1]
+    assert rep.replica_lag == 1
+    (sq,) = cluster.router.serve([spec]).values()
+    assert cluster.router.n_primary_waves == 1
+    assert sq.replica_lag == 0                      # primary has no lag
+    _assert_bitwise(sq.estimate, cluster.ate("ta"), "router-primary")
+    # catch up -> follower serves again
+    cluster.apply_all()
+    (sq,) = cluster.router.serve([spec]).values()
+    assert cluster.router.n_replica_waves == 2
+    # time staleness: silent primary -> follower goes stale by TIME even
+    # though its seq lag still reads zero
+    clock.advance(100.0)
+    assert not rep.fresh(clock(), cluster.max_lag_seqs,
+                         cluster.max_lag_secs)
+    cluster.router.serve([QuerySpec("ta", (("x1", (0, 2)),))])
+    assert cluster.router.n_primary_waves == 2
+
+
+def test_router_deadline_expiry_is_slot_free(tmp_path):
+    """An expired routed query is dropped at wave assembly — counted,
+    never dispatched, never answered."""
+    cluster, clock = _cluster(tmp_path, layouts=("replicated",
+                                                 "replicated"))
+    _feed(cluster, clock, [_batch(48, 0)])
+    live = cluster.router.submit(QuerySpec("ta"), deadline=clock() + 50.0)
+    dead = cluster.router.submit(QuerySpec("ta", (("x1", (0, 2)),)),
+                                 deadline=clock() - 1.0)
+    out = {}
+    while cluster.router.pending():
+        out.update(cluster.router.step())
+    assert live in out and dead not in out
+    assert cluster.router.n_expired == 1
+
+
+def test_router_survives_failover(tmp_path):
+    """Reads keep flowing across a promotion: the router re-binds its
+    serving engine to whatever node currently answers."""
+    cluster, clock = _cluster(tmp_path)
+    batches = [_batch(48, s) for s in range(4)]
+    _feed(cluster, clock, batches)
+    spec = QuerySpec("ta")
+    before = cluster.router.serve([spec])
+    cluster.kill_primary()
+    clock.advance(10.0)
+    assert cluster.tick() is not None
+    after = cluster.router.serve([spec])
+    (b,), (a,) = before.values(), after.values()
+    _assert_bitwise(a.estimate, b.estimate, "router-failover")
+
+
+# ------------------------------------------ steady-state hot-path cost
+def test_shipping_keeps_primary_ingest_single_dispatch(tmp_path):
+    """Shipping is pure host bytes: a steady-state primary ingest WITH a
+    same-tick ship is still ONE dispatch, ZERO host syncs, clean under
+    jax.transfer_guard("disallow"). Follower APPLY dispatches happen on
+    the follower's own schedule, outside the primary's hot path."""
+    clock = _Clock()
+    cluster = ReplicatedEngine(
+        [_fresh("overlap", max_inflight=8), _fresh("replicated")],
+        str(tmp_path / "hot"), clock=clock, heartbeat_timeout_s=1e9)
+    cluster.ingest(_batch(256, 1))
+    cluster.commit()
+    cluster.ingest(_batch(256, 2))                  # retrace both waves
+    cluster.commit()
+    cluster.ship()
+    cluster.apply_all()
+    with count_dispatches() as n, count_host_syncs() as s:
+        with jax.transfer_guard("disallow"):
+            cluster.ingest(_batch(256, 3))
+            cluster.ship()
+    assert n() == 1, "WAL shipping must not add dispatches"
+    assert s() == 0, "WAL shipping must not sync the host"
+    assert cluster.apply_all() == 0
+    rep = cluster.replicas[1]
+    assert rep.wal.last_seq == cluster.primary.wal.last_seq

@@ -32,7 +32,8 @@ import sys
 
 GUARDED = ("online_ingest", "online_dispatches", "online_query",
            "online_rowlookup", "online_serve", "online_wal",
-           "online_recover")
+           "online_recover", "online_replica", "online_failover",
+           "online_primary")
 
 
 def load_rows(path: str):
